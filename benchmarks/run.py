@@ -1,0 +1,110 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  * figs13_16   — AXPY/MatMul/MatVec/2D-stencil: unified-UPIR lowering vs
+                  per-model naive lowerings (the paper's §6.2 evaluation);
+  * pass_table  — UPIR pass effects on every architecture's train program
+                  (sync counts before/after elimination/fusion/overlap —
+                  the paper's Table 1 + §5 claims, measured);
+  * roofline    — per-cell roofline terms from the dry-run sweep (§Roofline
+                  of EXPERIMENTS.md; requires experiments/dryrun/*.json).
+
+Every section prints ``name,us_per_call,derived``-style CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def figs13_16(fast: bool = True) -> None:
+    from benchmarks.paper_kernels import run_all
+    print("# figs13_16: kernel,size,upir_omp_us,upir_acc_us,naive_omp_us,"
+          "naive_acc_us,upir_consistency,naive_divergence")
+    results = run_all(fast=fast)
+    for kernel, rows in results.items():
+        for r in rows:
+            print(f"{kernel},{r['size']},{r['upir_omp_us']:.1f},"
+                  f"{r['upir_acc_us']:.1f},{r['naive_omp_us']:.1f},"
+                  f"{r['naive_acc_us']:.1f},{r['upir_consistency']:.3f},"
+                  f"{r['naive_divergence']:.3f}")
+    # paper-fidelity assertion: unified lowering is consistent across models
+    worst = max(r["upir_consistency"] for rows in results.values()
+                for r in rows)
+    print(f"# max upir omp-vs-acc ratio: {worst:.3f} (paper: identical code)")
+
+
+def pass_table() -> None:
+    from repro.configs import ARCH_IDS, SHAPES, config
+    from repro.core import ir, plans
+    from repro.core.passes import run_pipeline
+    print("# pass_table: arch,syncs_before,syncs_after,async_after,"
+          "zero_decomposed,bucketed")
+    for arch in ARCH_IDS:
+        prog = plans.build_program(config(arch), SHAPES["train_4k"])
+        before = len(ir.find_all(prog, ir.SyncOp))
+        opt = run_pipeline(prog)
+        syncs = ir.find_all(opt, ir.SyncOp)
+        n_async = sum(1 for s in syncs if s.is_async)
+        n_zero = sum(1 for s in syncs
+                     if ir.ext_get(s.extensions, "zero_decomposed", False))
+        n_bucket = sum(1 for s in syncs
+                       if ir.ext_get(s.extensions, "bucketed", False))
+        print(f"{arch},{before},{len(syncs)},{n_async},{n_zero},{n_bucket}")
+
+
+def roofline_table() -> None:
+    d = ROOT / "experiments" / "dryrun"
+    files = sorted(d.glob("*.json")) if d.exists() else []
+    if not files:
+        print("# roofline: (no dry-run results; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all)")
+        return
+    print("# roofline: cell,dominant,compute_s,memory_s,collective_s,"
+          "roofline_fraction,useful_flops_ratio,peak_GiB")
+    for f in files:
+        r = json.loads(f.read_text())
+        if r.get("variant"):
+            continue
+        name = f"{r['arch']}x{r['shape']}x{r['mesh']}"
+        if r["status"] == "skipped":
+            print(f"{name},SKIP,,,,,,")
+            continue
+        if r["status"] != "ok":
+            print(f"{name},ERROR,,,,,,")
+            continue
+        rf = r["roofline"]
+        ma = r.get("memory_analysis") or {}
+        peak = ma.get("peak_bytes_est", 0) / 2**30
+        print(f"{name},{rf['dominant']},{rf['compute_s']:.4g},"
+              f"{rf['memory_s']:.4g},{rf['collective_s']:.4g},"
+              f"{rf['roofline_fraction']:.4g},"
+              f"{rf['useful_flops_ratio']:.3f},{peak:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--section", choices=("figs13_16", "pass_table",
+                                          "roofline"), default=None)
+    args = ap.parse_args()
+    sections = [args.section] if args.section else ["figs13_16", "pass_table",
+                                                    "roofline"]
+    for s in sections:
+        if s == "figs13_16":
+            figs13_16(fast=not args.full)
+        elif s == "pass_table":
+            pass_table()
+        else:
+            roofline_table()
+        print()
+
+
+if __name__ == "__main__":
+    main()

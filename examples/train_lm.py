@@ -1,0 +1,98 @@
+"""End-to-end training driver: UPIR plan -> fault-tolerant loop with async
+checkpointing and straggler tracking.
+
+    PYTHONPATH=src python examples/train_lm.py                # quick demo (~2M)
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+
+The 100m preset is a ~110M-param llama-family model; a few hundred steps on a
+TPU slice is minutes — on this CPU container use the default demo preset.
+Training survives SIGKILL: rerun the same command and it resumes from the last
+committed checkpoint at the exact step (counter-based data stream).
+"""
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ShapeCfg, smoke_config
+from repro.core import plans
+from repro.data import DataConfig, ShardedLMDataset
+from repro.runtime import trainer
+from repro.runtime.fault_tolerance import StragglerTracker, run_training
+
+
+def make_cfg(preset: str):
+    base = smoke_config("tinyllama-1.1b")
+    if preset == "demo":
+        return dataclasses.replace(base, n_layers=4, d_model=128, n_heads=4,
+                                   n_kv_heads=2, d_ff=352, vocab=2048,
+                                   name="lm-demo")
+    if preset == "100m":
+        return dataclasses.replace(base, n_layers=12, d_model=768, n_heads=12,
+                                   n_kv_heads=4, d_ff=2048, vocab=32000,
+                                   name="lm-100m")
+    raise ValueError(preset)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=("demo", "100m"))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.preset)
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} (~{n_params/1e6:.1f}M params)")
+
+    shape = ShapeCfg("train_lm", "train", args.seq, args.batch)
+    plan = plans.make_plan(cfg, shape)
+    step = jax.jit(trainer.make_train_step(cfg, plan, total_steps=args.steps),
+                   donate_argnums=0)
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch)
+    ds = ShardedLMDataset(dc)
+
+    def make_iter(start):
+        def gen():
+            s = start
+            while True:
+                yield ds.batch_at(s)
+                s += 1
+        return gen()
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3, every=20)
+    start = ckpt.latest() or 0
+    state = trainer.init_state(cfg, jax.random.key(0))
+    if start:
+        state, start = ckpt.restore(state)
+        print(f"resumed from checkpoint at step {start}")
+
+    def on_metrics(s, rec):
+        if s % 10 == 0:
+            print(f"step {s:5d}  loss {rec['loss']:.4f}  "
+                  f"({rec['time_s']*1000:.0f} ms/step)")
+
+    state, hist = run_training(
+        train_step=step, state=state, data_iter=make_iter(start),
+        ckpt=ckpt, start_step=start, num_steps=args.steps,
+        straggler=StragglerTracker(), on_metrics=on_metrics,
+        state_like=trainer.init_state(cfg, jax.random.key(0)),
+        make_data_iter=make_iter)
+
+    losses = [h["loss"] for h in hist if "loss" in h]
+    if losses:
+        print(f"\nfirst loss {losses[0]:.4f} -> last loss {losses[-1]:.4f} "
+              f"over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

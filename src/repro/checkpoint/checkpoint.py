@@ -1,0 +1,138 @@
+"""Sharded checkpointing with atomic commit, async writes and elastic restore.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000100.tmp/        # written here ...
+      step_000100/            # ... atomically renamed on commit
+        manifest.json         # tree structure, shapes, dtypes, mesh shape
+        arr_000000.npy ...    # one file per leaf (per-host shard in real mp)
+
+Design points for 1000+-node operation (single-process simulation here):
+  * atomic rename commit — a crash mid-write never corrupts the latest ckpt;
+  * async: `save(..., blocking=False)` snapshots to host RAM synchronously
+    (cheap) and writes on a background thread — training continues;
+  * elastic restore — the manifest stores logical shapes only; `restore`
+    re-shards onto whatever mesh/sharding the *new* plan provides, so a job can
+    restart on a different pod count (UPIR data attrs are mesh-relative);
+  * keep-last-k GC.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from ..core.lower import path_str
+
+
+def _flatten(tree):
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+def save(ckpt_dir, step: int, tree, *, blocking: bool = True,
+         keep: int = 3) -> threading.Thread:
+    """Write a checkpoint; returns the writer thread (joined if blocking)."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [path_str(p) for p, _ in _flatten(tree)[0]]
+    # snapshot to host memory NOW (donation/updates must not race the writer)
+    host_leaves = [np.asarray(l) for l in leaves]
+
+    def write():
+        tmp = ckpt_dir / f"step_{step:08d}.tmp"
+        final = ckpt_dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        manifest = {"step": step, "paths": paths,
+                    "shapes": [list(l.shape) for l in host_leaves],
+                    "dtypes": [str(l.dtype) for l in host_leaves],
+                    "time": time.time()}
+        for i, leaf in enumerate(host_leaves):
+            np.save(tmp / f"arr_{i:06d}.npy", leaf)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                    # atomic commit
+        _gc(ckpt_dir, keep)
+
+    t = threading.Thread(target=write, daemon=False)
+    t.start()
+    if blocking:
+        t.join()
+    return t
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp"))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if p.is_dir() and not p.name.endswith(".tmp")
+             and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, like_tree, *, shardings=None):
+    """Restore into the structure of ``like_tree``; reshard onto ``shardings``
+    (pytree of NamedSharding) if given — this is the elastic-restart path."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    _, treedef = jax.tree_util.tree_flatten(like_tree)
+    n = len(manifest["paths"])
+    leaves = [np.load(d / f"arr_{i:06d}.npy") for i in range(n)]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree
+
+
+class CheckpointManager:
+    """Keep-last-k async checkpointer bound to one directory."""
+
+    def __init__(self, ckpt_dir, keep: int = 3, every: int = 50):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self.every = every
+        self._pending: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree, *, force: bool = False):
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        self.wait()
+        self._pending = save(self.dir, step, tree, blocking=False,
+                             keep=self.keep)
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.dir)
+
+    def restore(self, like_tree, *, step: Optional[int] = None,
+                shardings=None):
+        step = step if step is not None else self.latest()
+        assert step is not None, "no checkpoint found"
+        return restore(self.dir, step, like_tree, shardings=shardings), step

@@ -1,0 +1,12 @@
+"""Granite-3.0-2B: 40L dense GQA [hf:ibm-granite/granite-3.0-2b-base; hf]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "granite-3-2b"
+
+
+def config():
+    return _config("granite-3-2b")
+
+
+def smoke_config():
+    return _smoke("granite-3-2b")

@@ -1,0 +1,12 @@
+"""Grok-1 314B: 64L MoE 8 experts top-2 [hf:xai-org/grok-1; unverified]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "grok-1-314b"
+
+
+def config():
+    return _config("grok-1-314b")
+
+
+def smoke_config():
+    return _smoke("grok-1-314b")

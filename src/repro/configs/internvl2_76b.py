@@ -1,0 +1,12 @@
+"""InternVL2-76B backbone: InternViT(stub) + InternLM2 80L dense [arXiv:2404.16821; unverified]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "internvl2-76b"
+
+
+def config():
+    return _config("internvl2-76b")
+
+
+def smoke_config():
+    return _smoke("internvl2-76b")

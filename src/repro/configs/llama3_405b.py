@@ -1,0 +1,12 @@
+"""Llama-3 405B: 126L dense GQA 128k vocab [arXiv:2407.21783; unverified]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "llama3-405b"
+
+
+def config():
+    return _config("llama3-405b")
+
+
+def smoke_config():
+    return _smoke("llama3-405b")

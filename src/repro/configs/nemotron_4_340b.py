@@ -1,0 +1,12 @@
+"""Nemotron-4 340B: 96L dense GQA squared-ReLU [arXiv:2402.16819; unverified]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "nemotron-4-340b"
+
+
+def config():
+    return _config("nemotron-4-340b")
+
+
+def smoke_config():
+    return _smoke("nemotron-4-340b")

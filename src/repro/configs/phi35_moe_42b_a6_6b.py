@@ -1,0 +1,12 @@
+"""Phi-3.5-MoE: 32L, 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "phi3.5-moe-42b-a6.6b"
+
+
+def config():
+    return _config("phi3.5-moe-42b-a6.6b")
+
+
+def smoke_config():
+    return _smoke("phi3.5-moe-42b-a6.6b")

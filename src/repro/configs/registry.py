@@ -1,0 +1,144 @@
+"""All assigned architectures, exactly as specified, plus reduced smoke variants.
+
+``config(arch_id)`` returns the full config; ``smoke_config(arch_id)`` returns a
+tiny same-family reduction used by CPU tests. Full configs are only ever touched
+via ``jax.eval_shape`` / the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .base import (ArchConfig, EncDecCfg, FrontendStub, MoECfg, SSMCfg, XLSTMCfg)
+
+
+def _mk(name, **kw) -> ArchConfig:
+    return ArchConfig(name=name, **kw)
+
+
+_CONFIGS: Dict[str, ArchConfig] = {}
+
+
+def _register(cfg: ArchConfig) -> ArchConfig:
+    _CONFIGS[cfg.name] = cfg
+    return cfg
+
+
+# --- hybrid: Mamba2 + shared attention blocks [arXiv:2411.15242; hf] -------------
+ZAMBA2 = _register(_mk(
+    "zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560, n_heads=32,
+    n_kv_heads=32, d_ff=10240, vocab=32000, act="gelu", glu=True,
+    tied_embeddings=True, hybrid_attn_period=6, attn_window=4096,
+    ssm=SSMCfg(d_inner=5120, head_dim=64, state_dim=64, n_groups=1),
+    optimizer="adamw", source="[arXiv:2411.15242; hf]"))
+
+# --- vlm: InternViT + InternLM2 backbone [arXiv:2404.16821; unverified] ----------
+INTERNVL2 = _register(_mk(
+    "internvl2-76b", family="vlm", n_layers=80, d_model=8192, n_heads=64,
+    n_kv_heads=8, d_ff=28672, vocab=128256, act="silu", glu=True,
+    frontend=FrontendStub(kind="vision", tokens=256),
+    optimizer="adamw", param_dtype="bfloat16",
+    source="[arXiv:2404.16821; unverified]"))
+
+# --- moe: 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf] ---------------
+PHI35_MOE = _register(_mk(
+    "phi3.5-moe-42b-a6.6b", family="moe", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=8, d_ff=6400, vocab=32064, act="silu", glu=True,
+    moe=MoECfg(num_experts=16, top_k=2, d_ff=6400),
+    optimizer="adamw", param_dtype="bfloat16",
+    source="[hf:microsoft/Phi-3.5-MoE-instruct; hf]"))
+
+# --- moe: 8 experts top-2 [hf:xai-org/grok-1; unverified] ------------------------
+GROK1 = _register(_mk(
+    "grok-1-314b", family="moe", n_layers=64, d_model=6144, n_heads=48,
+    n_kv_heads=8, d_ff=32768, vocab=131072, act="gelu", glu=False,
+    moe=MoECfg(num_experts=8, top_k=2, d_ff=32768),
+    optimizer="adafactor", param_dtype="bfloat16",
+    source="[hf:xai-org/grok-1; unverified]"))
+
+# --- dense: llama2-arch small [arXiv:2401.02385; hf] -----------------------------
+TINYLLAMA = _register(_mk(
+    "tinyllama-1.1b", family="dense", n_layers=22, d_model=2048, n_heads=32,
+    n_kv_heads=4, d_ff=5632, vocab=32000, act="silu", glu=True,
+    optimizer="adamw", source="[arXiv:2401.02385; hf]"))
+
+# --- dense: GQA 128k vocab [arXiv:2407.21783; unverified] ------------------------
+LLAMA3_405B = _register(_mk(
+    "llama3-405b", family="dense", n_layers=126, d_model=16384, n_heads=128,
+    n_kv_heads=8, d_ff=53248, vocab=128256, act="silu", glu=True,
+    rope_theta=500000.0,
+    optimizer="adafactor", param_dtype="bfloat16",
+    source="[arXiv:2407.21783; unverified]"))
+
+# --- dense: GQA [hf:ibm-granite/granite-3.0-2b-base; hf] -------------------------
+GRANITE3 = _register(_mk(
+    "granite-3-2b", family="dense", n_layers=40, d_model=2048, n_heads=32,
+    n_kv_heads=8, d_ff=8192, vocab=49155, act="silu", glu=True,
+    tied_embeddings=True,
+    optimizer="adamw", source="[hf:ibm-granite/granite-3.0-2b-base; hf]"))
+
+# --- dense: GQA, squared-ReLU [arXiv:2402.16819; unverified] ---------------------
+NEMOTRON4 = _register(_mk(
+    "nemotron-4-340b", family="dense", n_layers=96, d_model=18432, n_heads=96,
+    n_kv_heads=8, d_ff=73728, vocab=256000, act="relu2", glu=False,
+    optimizer="adafactor", param_dtype="bfloat16",
+    source="[arXiv:2402.16819; unverified]"))
+
+# --- audio: enc-dec, conv frontend (stub) [arXiv:2212.04356; unverified] ---------
+WHISPER = _register(_mk(
+    "whisper-large-v3", family="audio", n_layers=32, d_model=1280, n_heads=20,
+    n_kv_heads=20, d_ff=5120, vocab=51866, act="gelu", glu=False,
+    norm="layernorm",
+    encdec=EncDecCfg(enc_layers=32, enc_seq=1500),
+    frontend=FrontendStub(kind="audio", tokens=1500),
+    optimizer="adamw", source="[arXiv:2212.04356; unverified]"))
+
+# --- ssm: sLSTM + mLSTM blocks [arXiv:2405.04517; unverified] --------------------
+XLSTM = _register(_mk(
+    "xlstm-350m", family="ssm", n_layers=24, d_model=1024, n_heads=4,
+    n_kv_heads=4, d_ff=0, vocab=50304, act="gelu", glu=False,
+    xlstm=XLSTMCfg(slstm_every=6),
+    optimizer="adamw", source="[arXiv:2405.04517; unverified]"))
+
+
+ARCH_IDS = tuple(sorted(_CONFIGS))
+
+
+def config(arch_id: str) -> ArchConfig:
+    if arch_id not in _CONFIGS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {ARCH_IDS}")
+    return _CONFIGS[arch_id]
+
+
+# ------------------------------------------------------------- smoke reductions
+
+
+def smoke_config(arch_id: str) -> ArchConfig:
+    """Tiny same-family config: a few layers, small widths, tiny vocab."""
+    full = config(arch_id)
+    kw = dict(
+        name=full.name + "-smoke", n_layers=4, d_model=64, vocab=256,
+        param_dtype="float32", compute_dtype="float32")
+    if full.family == "ssm":
+        kw.update(n_heads=2, n_kv_heads=2, d_ff=0,
+                  xlstm=XLSTMCfg(slstm_every=2, chunk=16))
+    elif full.family == "hybrid":
+        kw.update(n_heads=4, n_kv_heads=4, d_ff=128, hybrid_attn_period=2,
+                  attn_window=64,
+                  ssm=SSMCfg(d_inner=128, head_dim=16, state_dim=8, chunk=16))
+    elif full.moe is not None:
+        # high capacity factor => dropless in tests (drops are batch-dependent
+        # and would make decode-vs-prefill comparisons flaky)
+        kw.update(n_heads=4, n_kv_heads=2, d_ff=96,
+                  moe=MoECfg(num_experts=4, top_k=2, d_ff=96,
+                             capacity_factor=8.0))
+    elif full.encdec is not None:
+        kw.update(n_heads=4, n_kv_heads=4, d_ff=128,
+                  encdec=EncDecCfg(enc_layers=2, enc_seq=24),
+                  frontend=FrontendStub(kind="audio", tokens=24))
+    elif full.frontend is not None:
+        kw.update(n_heads=4, n_kv_heads=2, d_ff=128,
+                  frontend=FrontendStub(kind="vision", tokens=8))
+    else:
+        kw.update(n_heads=4, n_kv_heads=2, d_ff=128)
+    return dataclasses.replace(full, **kw)

@@ -1,0 +1,12 @@
+"""TinyLlama-1.1B: llama2-arch small [arXiv:2401.02385; hf]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "tinyllama-1.1b"
+
+
+def config():
+    return _config("tinyllama-1.1b")
+
+
+def smoke_config():
+    return _smoke("tinyllama-1.1b")

@@ -1,0 +1,12 @@
+"""Whisper large-v3: enc-dec, conv frontend stubbed [arXiv:2212.04356; unverified]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "whisper-large-v3"
+
+
+def config():
+    return _config("whisper-large-v3")
+
+
+def smoke_config():
+    return _smoke("whisper-large-v3")

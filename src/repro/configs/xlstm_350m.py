@@ -1,0 +1,12 @@
+"""xLSTM-350M: sLSTM + mLSTM blocks [arXiv:2405.04517; unverified]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "xlstm-350m"
+
+
+def config():
+    return _config("xlstm-350m")
+
+
+def smoke_config():
+    return _smoke("xlstm-350m")

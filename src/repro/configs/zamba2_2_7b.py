@@ -1,0 +1,12 @@
+"""Zamba2-2.7B: 54L hybrid Mamba2 + shared attention blocks [arXiv:2411.15242; hf]"""
+from .registry import config as _config, smoke_config as _smoke
+
+ARCH_ID = "zamba2-2.7b"
+
+
+def config():
+    return _config("zamba2-2.7b")
+
+
+def smoke_config():
+    return _smoke("zamba2-2.7b")

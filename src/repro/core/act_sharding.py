@@ -1,0 +1,104 @@
+"""Activation sharding constraints, fed from the UPIR plan.
+
+XLA's sharding propagation can lose the batch sharding across embedding gathers
+and scan carries (observed: "involuntary full rematerialization" and replicated
+activations). The UPIR data attributes describe activations too; this module
+carries those specs from the plan into the model code at trace time.
+
+Model code calls ``constrain(x, "hidden")`` — a no-op unless a plan has installed
+specs (so smoke tests and single-device runs are untouched).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional
+
+import jax
+
+_SPECS: contextvars.ContextVar = contextvars.ContextVar("act_specs", default=None)
+
+
+@contextlib.contextmanager
+def activation_shardings(specs: Optional[Dict]):
+    tok = _SPECS.set(specs)
+    try:
+        yield
+    finally:
+        _SPECS.reset(tok)
+
+
+def distributed() -> bool:
+    """True when a plan has installed activation specs (multi-device trace)."""
+    return _SPECS.get() is not None
+
+
+def constrain(x, name: str):
+    specs = _SPECS.get()
+    if not specs or name not in specs or specs[name] is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, specs[name])
+    except ValueError:
+        return x  # rank mismatch etc. — constraint is best-effort
+
+
+def _sharded_grad_identity(sharding):
+    """Identity whose VJP pins the cotangent's sharding.
+
+    XLA decides the sharding of a scan-transpose carry (the stacked per-layer
+    dW) by fixpoint over the loop body; constraints applied outside the loop
+    are satisfied trivially by a post-loop reshard of already-replicated
+    gradients. Anchoring the cotangent *inside* the body — via this custom
+    VJP on each scanned param leaf — pins per-layer dW to the param sharding
+    at its production site, which the fixpoint must honor.
+    """
+    @jax.custom_vjp
+    def f(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        return (jax.lax.with_sharding_constraint(g, sharding),)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fsdp_gather_block(p_l, name: str):
+    """Explicit-FSDP gather hook (runtime/fsdp.py): inside a manual-'data'
+    shard_map, gather each scanned param leaf's FSDP shard at its use site.
+    AD of tiled all_gather is tiled psum_scatter — per-layer gradients come
+    out SHARDED by construction, which the GSPMD while-loop fixpoint refuses
+    to do (EXPERIMENTS.md §Perf T0/T3)."""
+    specs = _SPECS.get()
+    info = specs.get(name + "_fsdp") if specs else None
+    if info is None:
+        return p_l
+
+    def one(x, d):
+        if d is None:
+            return x
+        return jax.lax.all_gather(x, "data", axis=d, tiled=True)
+
+    return jax.tree.map(one, p_l, info)
+
+
+def anchor_block_grads(p_l, name: str = "block_grads"):
+    """Apply the grad anchor to a per-layer param tree inside a scan body."""
+    specs = _SPECS.get()
+    if not specs or name not in specs or specs[name] is None:
+        return p_l
+    tree_specs = specs[name]
+
+    def one(x, s):
+        if s is None:
+            return x
+        try:
+            return _sharded_grad_identity(s)(x)
+        except Exception:
+            return x
+
+    return jax.tree.map(one, p_l, tree_specs)

@@ -1,0 +1,244 @@
+"""Unified lowering: optimized UPIR ``Program`` -> JAX execution plan.
+
+This is the single transformation the paper argues for: every frontend's program —
+whatever model it was expressed in — arrives here as the same IR and leaves as the
+same artifact. Two backends realize the plan:
+
+  * **GSPMD backend** (default): the plan becomes ``NamedSharding`` in/out specs +
+    donation + microbatch/remat/overlap parameters consumed by ``jax.jit``; XLA's
+    SPMD partitioner materializes the collectives the IR prescribes.
+  * **explicit backend**: the same plan drives ``shard_map`` with hand-placed
+    ``jax.lax`` collectives (psum / all_gather / psum_scatter / all_to_all /
+    ppermute), one per ``SyncOp``. Tests assert both backends are numerically
+    identical — the JAX-level version of the paper's C2 claim.
+
+The plan's sharding lookup is pytree-path based: symbols in the IR are
+"params/blocks/wq"-style paths produced by ``path_str``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from fnmatch import fnmatch
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import ir
+
+# ----------------------------------------------------------------------- paths
+
+
+def path_str(path) -> str:
+    """Render a jax tree path as 'a/b/0/c'."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_symbols(tree, prefix: str = "") -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    """Flatten a pytree of arrays/ShapeDtypeStructs into a UPIR symbol table."""
+    out: Dict[str, Tuple[Tuple[int, ...], str]] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = (prefix + "/" if prefix else "") + path_str(path)
+        out[name] = (tuple(leaf.shape), str(leaf.dtype))
+    return out
+
+
+# ----------------------------------------------------------------------- plan
+
+
+@dataclasses.dataclass
+class LoweredPlan:
+    """Everything the numeric layer needs, extracted from the optimized IR."""
+
+    program: ir.Program
+    mesh_spec: ir.MeshSpec
+    specs: Dict[str, P]                      # symbol -> PartitionSpec
+    donated: Tuple[str, ...]                 # symbols whose buffers are donated
+    host_offload: Tuple[str, ...]
+    batch_axes: Tuple[str, ...]              # mesh axes the batch loop shards over
+    seq_axis: Optional[str]                  # mesh axis for sequence parallelism
+    microbatches: int                        # taskloop-derived accumulation count
+    remat: str                               # none | selective | full
+    grad_reduce: str                         # post | pipelined
+    zero: bool                               # RS+AG decomposition present
+    compression: Optional[str]               # None | int8
+    collectives: Tuple[ir.SyncOp, ...]       # flattened sync schedule
+
+    # ------------------------------------------------------------------ meshes
+
+    def make_mesh(self, shape: Optional[Tuple[int, ...]] = None) -> Mesh:
+        names = self.mesh_spec.names
+        sizes = shape or tuple(s for _, s in self.mesh_spec.axes)
+        return jax.make_mesh(
+            sizes, names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+
+    # ---------------------------------------------------------------- shardings
+
+    def spec(self, symbol: str) -> P:
+        if symbol in self.specs:
+            return self.specs[symbol]
+        for pat, sp in self.specs.items():
+            if fnmatch(symbol, pat):
+                return sp
+        return P()
+
+    def sharding_tree(self, mesh: Mesh, tree, prefix: str = ""):
+        def leaf_sharding(path, leaf):
+            name = (prefix + "/" if prefix else "") + path_str(path)
+            return NamedSharding(mesh, self.spec(name))
+        return jax.tree_util.tree_map_with_path(leaf_sharding, tree)
+
+    def batch_spec(self, extra_dims: int = 1) -> P:
+        """PartitionSpec for a [batch, ...] input sharded over the batch axes."""
+        return P(self.batch_axes if len(self.batch_axes) > 1 else
+                 (self.batch_axes[0] if self.batch_axes else None),
+                 *([None] * extra_dims))
+
+    def donate_symbol(self, symbol: str) -> bool:
+        return any(fnmatch(symbol, d) or symbol == d for d in self.donated)
+
+
+# ------------------------------------------------------------------ IR -> plan
+
+
+def partition_spec(attr: ir.DataAttr, ndim: Optional[int] = None) -> P:
+    """Build a PartitionSpec from a DataAttr's distribution list."""
+    if not attr.distribution:
+        return P()
+    max_dim = max(d.dim for d in attr.distribution)
+    n = ndim if ndim is not None else max_dim + 1
+    per_dim: list = [None] * n
+    for d in attr.distribution:
+        # "+"-joined axis names mean the dim is sharded over multiple mesh axes
+        axes = tuple(d.axis.split("+")) if "+" in d.axis else d.axis
+        if per_dim[d.dim] is None:
+            per_dim[d.dim] = axes
+        elif isinstance(per_dim[d.dim], tuple):
+            per_dim[d.dim] = per_dim[d.dim] + (axes if isinstance(axes, tuple)
+                                               else (axes,))
+        else:
+            per_dim[d.dim] = ((per_dim[d.dim],) +
+                              (axes if isinstance(axes, tuple) else (axes,)))
+    while per_dim and per_dim[-1] is None:
+        per_dim.pop()
+    return P(*per_dim)
+
+
+def plan_from_program(prog: ir.Program) -> LoweredPlan:
+    mesh_spec = None
+    for n in ir.walk(prog):
+        if isinstance(n, ir.SpmdRegion):
+            mesh_spec = n.mesh
+            break
+    assert mesh_spec is not None, f"program {prog.name} has no SPMD region"
+
+    symtab = prog.symbol_table()
+    specs: Dict[str, P] = {}
+    donated: list = []
+    offload: list = []
+    for attr in ir.find_all(prog, ir.DataAttr):
+        shape, _ = symtab.get(attr.symbol, (None, None))
+        ndim = len(shape) if shape is not None else None
+        specs[attr.symbol] = partition_spec(attr, ndim)
+        if ir.ext_get(attr.extensions, "donate", False):
+            donated.append(attr.symbol)
+        if ir.ext_get(attr.extensions, "host_offload", False):
+            offload.append(attr.symbol)
+
+    batch_axes: list = []
+    seq_axis = None
+    microbatches = 1
+    for loop in ir.find_all(prog, ir.LoopNode):
+        for p in loop.parallel:
+            if isinstance(p, ir.Worksharing) and p.axis:
+                if loop.induction == "batch":
+                    for a in p.axis.split("+"):
+                        if a not in batch_axes:
+                            batch_axes.append(a)
+                if loop.induction in ("seq", "sequence"):
+                    seq_axis = p.axis
+            if isinstance(p, ir.Taskloop) and loop.induction in ("microbatch", "batch"):
+                if p.num_tasks:
+                    microbatches = max(microbatches, p.num_tasks)
+                elif p.grainsize and isinstance(loop.upper, int):
+                    microbatches = max(microbatches, loop.upper // max(p.grainsize, 1))
+
+    syncs = tuple(s for s in ir.find_all(prog, ir.SyncOp))
+    grad_reduce = "post"
+    zero = False
+    compression = None
+    for s in syncs:
+        if ir.ext_get(s.extensions, "schedule") == "pipelined":
+            grad_reduce = "pipelined"
+        if ir.ext_get(s.extensions, "zero_decomposed", False):
+            zero = True
+        c = ir.ext_get(s.extensions, "compression")
+        if c:
+            compression = c
+
+    return LoweredPlan(
+        program=prog, mesh_spec=mesh_spec, specs=specs, donated=tuple(donated),
+        host_offload=tuple(offload), batch_axes=tuple(batch_axes), seq_axis=seq_axis,
+        microbatches=microbatches,
+        remat=ir.ext_get(prog.extensions, "remat", "none"),
+        grad_reduce=grad_reduce, zero=zero, compression=compression,
+        collectives=syncs)
+
+
+# ----------------------------------------------------- explicit sync lowering
+
+
+def lower_sync(sync: ir.SyncOp, value, axis_env: Optional[Tuple[str, ...]] = None):
+    """Lower one SyncOp to its jax.lax collective (explicit/shard_map backend)."""
+    axes = tuple(a for a in sync.axes if axis_env is None or a in axis_env)
+    if not axes:
+        return value
+    if sync.name in ("allreduce", "reduction"):
+        op = sync.operation or "add"
+        fn = {"add": jax.lax.psum, "max": jax.lax.pmax, "min": jax.lax.pmin}[op]
+        return jax.tree.map(lambda x: fn(x, axes), value)
+    if sync.name == "reduce_scatter":
+        return jax.tree.map(
+            lambda x: jax.lax.psum_scatter(x, axes[0], scatter_dimension=0,
+                                           tiled=True), value)
+    if sync.name == "all_gather":
+        return jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axes[0], axis=0, tiled=True), value)
+    if sync.name == "all_to_all":
+        return jax.tree.map(
+            lambda x: jax.lax.all_to_all(x, axes[0], split_axis=0, concat_axis=1,
+                                         tiled=True), value)
+    if sync.name == "broadcast":
+        # broadcast from primary unit: implemented as select + psum
+        def bcast(x):
+            idx = jax.lax.axis_index(axes[0])
+            src = int(sync.primary.split(":")[1]) if ":" in sync.primary and \
+                sync.primary.split(":")[1] != "*" else 0
+            return jax.lax.psum(jax.numpy.where(idx == src, x, 0), axes[0])
+        return jax.tree.map(bcast, value)
+    if sync.name in ("shift", "send", "recv"):
+        def shift(x):
+            n = jax.lax.axis_size(axes[0])
+            perm = [(i, (i + 1) % n) for i in range(n)]
+            return jax.lax.ppermute(x, axes[0], perm)
+        return jax.tree.map(shift, value)
+    if sync.name == "barrier":
+        return value  # SPMD programs on TPU are bulk-synchronous per-op already
+    raise NotImplementedError(
+        f"sync '{sync.name}' has no TPU lowering (see DESIGN.md §2 degenerations)")
+
+
+class UnsupportedOnTarget(NotImplementedError):
+    pass

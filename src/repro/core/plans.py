@@ -1,0 +1,317 @@
+"""Model-step planners: (arch config x shape x mesh) -> UPIR program -> LoweredPlan.
+
+This is where the paper's technique is a first-class feature of the framework:
+every parallelization decision for every architecture is *expressed as UPIR*
+(worksharing loops for DP/TP/SP/EP, a taskloop for microbatching, data attributes
+with block distributions for param/optimizer/cache sharding, sync ops for the
+gradient reduction), optimized by the unified pass pipeline, and only then lowered
+onto jax.jit shardings. There is one planner for all ten architectures — family
+differences enter only through the data-distribution rule table, exactly the
+"complete data attributes once, in the IR" argument of the paper (§2.1, §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCfg, input_specs
+from ..models import api
+from ..optim import make_optimizer
+from . import ir
+from .builder import PlanBuilder
+from .lower import LoweredPlan, plan_from_program, tree_symbols
+from .passes import run_pipeline
+
+HBM_BYTES = 16 * 2**30          # TPU v5e per chip
+
+
+# ------------------------------------------------------------- mesh definitions
+
+
+def mesh_axes(multi_pod: bool) -> Tuple[Tuple[str, int], ...]:
+    return ((("pod", 2),) if multi_pod else ()) + (("data", 16), ("model", 16))
+
+
+def dp_axis(multi_pod: bool) -> str:
+    return "pod+data" if multi_pod else "data"
+
+
+# ------------------------------------------------------- distribution rule table
+
+
+def dist_rules(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool,
+               fsdp: bool = True) -> Tuple:
+    """Ordered (pattern, candidates) table; first matching pattern wins, each
+    candidate is (dim, axis) accepted only if divisible (propagate pass)."""
+    dp = dp_axis(multi_pod)
+    fa = "data" if fsdp else None   # FSDP shard axis for params/moments
+
+    def p(*cands):
+        return tuple((d, a) for d, a in cands if a is not None)
+
+    rules = [
+        # adafactor factored stats are tiny: replicate
+        ("*/vr", ()), ("*/vc", ()),
+        # ---- inputs
+        ("in/tokens", p((0, dp))),
+        ("in/targets", p((0, dp))),
+        ("in/pos", p((0, dp))),
+        ("in/*_embeds", p((0, dp))),
+        ("in/encoder_memory", p((0, dp))),
+        # ---- decode caches: batch over data, seq (or width) over model
+        ("cache/xk", p((1, dp))),
+        ("cache/xv", p((1, dp))),
+        ("cache/k", p((1, dp), (2, "model"))),
+        ("cache/v", p((1, dp), (2, "model"))),
+        ("cache/conv", p((1, dp), (3, "model"))),
+        ("cache/ssm", p((1, dp), (2, "model"), (3, "model"))),
+        ("cache/blocks/*/C", p((0, dp), (2, "model"))),
+        ("cache/blocks/*", p((0, dp), (1, "model"))),
+        # ---- MoE (before generic mlp rules): experts over model if divisible
+        #      (phi3.5: 16e <-> 16-way EP), else d_ff over model (grok: expert-TP)
+        ("*moe/router", ()),
+        ("*moe/w1", p((1, "model"), (-1, "model"), (-2, fa))),
+        ("*moe/w3", p((1, "model"), (-1, "model"), (-2, fa))),
+        ("*moe/w2", p((1, "model"), (-2, "model"), (-1, fa))),
+        # ---- Mamba2
+        ("*mamba/w_x", p((-1, "model"), (-2, fa))),
+        ("*mamba/w_z", p((-1, "model"), (-2, fa))),
+        ("*mamba/w_bc", ()),
+        ("*mamba/w_dt", p((-1, "model"),)),
+        ("*mamba/conv_w", p((-1, "model"),)),
+        ("*mamba/out_norm", p((-1, "model"),)),
+        ("*mamba/w_out", p((-2, "model"), (-1, fa))),
+        # ---- xLSTM
+        ("*w_up", p((-1, "model"), (-2, fa))),
+        ("*w_down", p((-2, "model"), (-1, fa))),
+        ("*w_if", ()), ("*b_if", ()), ("*/r", ()),
+        ("*w_in", p((-1, "model"), (-2, fa))),
+        # ---- attention (wq/wk/wv/xq/xk/xv + wo/xo)
+        ("*[wx][qkv]", p((-1, "model"), (-2, fa))),
+        ("*[wx]o", p((-2, "model"), (-1, fa))),
+        # ---- embeddings/head: vocab over model (the lookup is a one-hot dot
+        #      in distributed mode — see layers.embed_lookup — so vocab-dim
+        #      sharding partitions cleanly for lookup AND logits)
+        ("*lm_head", p((-1, "model"), (-2, fa))),
+        ("*embed", p((0, "model"), (1, fa))),
+        # ---- dense MLP
+        ("*mlp/w1", p((-1, "model"), (-2, fa))),
+        ("*mlp/w3", p((-1, "model"), (-2, fa))),
+        ("*mlp/w2", p((-2, "model"), (-1, fa))),
+        ("*/w1", p((-1, "model"), (-2, fa))),
+        ("*/w2", p((-2, "model"), (-1, fa))),
+        ("*/w3", p((-1, "model"), (-2, fa))),
+        # ---- outputs
+        ("out/logits", p((0, dp), (2, "model"))),
+        ("out/*", ()),
+        # ---- everything else (norms, scalars, counters): replicated
+        ("*", ()),
+    ]
+    return tuple(rules)
+
+
+# ------------------------------------------------------------ size estimation
+
+
+def _microbatches(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool) -> int:
+    if shape.kind != "train":
+        return 1
+    dp = 32 if multi_pod else 16
+    per_replica = max(shape.global_batch // dp, 1)
+    n = cfg.param_count()
+    # Per-(layer x microbatch) FSDP weight gathers scale linearly with the
+    # microbatch count; with sequence-parallel boundaries + full remat even
+    # the 405B step fits at mb=1 (EXPERIMENTS.md §Perf T1: 8.2x on llama3).
+    # MoE is the exception: dispatch working sets grow with per-microbatch
+    # tokens, so MoE archs keep accumulation (§Perf M1).
+    if cfg.moe is not None and n > 20e9:
+        return min(8, per_replica)
+    if n > 20e9:
+        return 1
+    return min(2, per_replica)
+
+
+def _bytes_estimates(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool,
+                     microbatches: int) -> Tuple[int, int]:
+    """(act_bytes, resident_bytes) per device, rough napkin numbers for the
+    UPIR memory pass (which picks the remat policy)."""
+    chips = 512 if multi_pod else 256
+    dp = 32 if multi_pod else 16
+    tp = 16
+    n = cfg.param_count()
+    pbytes = 2 if cfg.param_dtype == "bfloat16" else 4
+    resident = int(n * pbytes / chips)
+    if shape.kind == "train":
+        if cfg.optimizer == "adamw":
+            resident += int(n * 8 / chips)
+        else:
+            resident += int(n * 4 / max(cfg.d_model, 1) / chips) * 2
+        tokens_mb = shape.global_batch * shape.seq_len // dp // microbatches
+        # ~10 live activations of width d_model per layer without remat
+        act = int(cfg.n_layers * tokens_mb * cfg.d_model * 10 * 2 / tp)
+    else:
+        act = int(cfg.n_layers * shape.global_batch // max(dp, 1)
+                  * cfg.d_model * 4 * 2 / tp)
+    return act, resident
+
+
+# ----------------------------------------------------------------- the planner
+
+
+def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
+                  fsdp: bool = True, compression: Optional[str] = None,
+                  overlap: bool = True, extra_ext: Optional[Dict] = None,
+                  microbatches: Optional[int] = None) -> ir.Program:
+    """Express the train/serve step of (cfg, shape) as a UPIR program."""
+    axes = mesh_axes(multi_pod)
+    dp = dp_axis(multi_pod)
+    mb = microbatches if microbatches else _microbatches(cfg, shape, multi_pod)
+    act, resident = _bytes_estimates(cfg, shape, multi_pod, mb)
+
+    b = PlanBuilder(f"{cfg.name}@{shape.name}")
+    b.mesh(axes, teams=("pod",) if multi_pod else (),
+           units=("data", "model"))
+    b.target("tpu")
+
+    # symbols: the full state/input tree
+    symbols = _symbols(cfg, shape)
+    for name, (shp, dt) in symbols.items():
+        b.symbol(name, shp, dt)
+
+    # loops
+    b.worksharing_loop("batch", shape.global_batch, dp)
+    if shape.kind == "train":
+        if mb > 1:
+            b.taskloop("microbatch", mb, num_tasks=mb)
+        b.loop("layer", cfg.n_layers, scan=True)
+        b.simd_loop("model_dim", cfg.d_model, simdlen=128,
+                    block=(512, 1024))
+        # gradient reduction: the paper's async-collective split applies here
+        grad_ext: Dict[str, Any] = {"overlap_candidate": bool(overlap and mb > 1)}
+        if compression:
+            grad_ext["compression"] = compression
+        b.sync("allreduce", axes=tuple(a for a in (("pod", "data") if multi_pod
+                                                   else ("data",))),
+               operation="add", data=("grads",), **grad_ext)
+        b.kernel("train_step", ("state", "in"))
+    else:
+        if shape.kind == "decode":
+            # flash-decode: KV sequence workshared over the model axis
+            b.worksharing_loop("seq", shape.seq_len, "model")
+        b.loop("layer", cfg.n_layers, scan=True)
+        b.simd_loop("model_dim", cfg.d_model, simdlen=128, block=(512, 1024))
+        b.kernel("prefill" if shape.kind == "prefill" else "decode_step",
+                 ("params", "cache", "in"))
+
+    # data attributes: mark state as tofrom (donated), params read-only at serve
+    if shape.kind == "train":
+        b.data("state", mapping="tofrom", access="read-write", fsdp=fsdp)
+        # grads are produced privately per unit, then reduced; fsdp tags them
+        # for the ZeRO (reduce_scatter + all_gather) rewrite in fuse_sync
+        b.data("grads", sharing="private", access="read-write", fsdp=fsdp)
+    else:
+        b.data("params", mapping="to", access="read-only")
+        if shape.kind == "decode":
+            b.data("cache", mapping="tofrom", access="read-write")
+
+    b.extension(
+        dist_rules=dist_rules(cfg, shape, multi_pod, fsdp=fsdp),
+        act_bytes=act, resident_bytes=resident, hbm_bytes=HBM_BYTES,
+        arch=cfg.name, shape=shape.name, kind=shape.kind,
+        multi_pod=multi_pod, fsdp=fsdp,
+        **(extra_ext or {}))
+    return b.build()
+
+
+def _symbols(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Tuple]:
+    """Flattened symbol table for state + inputs + outputs of this cell."""
+    symbols: Dict[str, Tuple] = {}
+    pspecs = api.param_specs(cfg)
+    if shape.kind == "train":
+        opt_init, _ = make_optimizer(cfg.optimizer)
+        opt_specs = jax.eval_shape(opt_init, pspecs)
+        symbols.update(tree_symbols({"params": pspecs, "opt": opt_specs}))
+    else:
+        symbols.update(tree_symbols({"params": pspecs}))
+        if shape.kind == "decode":
+            cspecs = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+            symbols.update(tree_symbols({"cache": cspecs}))
+    for k, v in input_specs(cfg, shape).items():
+        symbols[f"in/{k}"] = (tuple(v.shape), str(v.dtype))
+    if shape.kind != "train":
+        V = cfg.vocab
+        B = shape.global_batch
+        symbols["out/logits"] = ((B, 1, V), cfg.compute_dtype)
+    return symbols
+
+
+def _grad_anchor_specs(plan, cfg: ArchConfig, mesh, subtree: str,
+                       strip_layer_dim: bool = True):
+    """Per-layer grad shardings for a scanned param subtree (see
+    act_sharding.anchor_block_grads)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from .lower import path_str
+    pspecs = api.param_specs(cfg)
+    if subtree not in pspecs:
+        return None
+
+    def leaf(path, _leaf):
+        name = f"params/{subtree}/" + path_str(path)
+        spec = plan.spec(name)
+        entries = list(spec)
+        if strip_layer_dim and entries:
+            entries = entries[1:]
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(leaf, pspecs[subtree])
+
+
+def act_shardings(plan, cfg: ArchConfig, mesh, kind: str):
+    """Activation NamedShardings (hidden / logits / kv) from the plan's batch
+    axes — the UPIR counterpart of data attrs for intermediates."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bt = tuple(plan.batch_axes)
+    dp = bt if len(bt) > 1 else (bt[0] if bt else None)
+    # Megatron-style sequence parallelism at block boundaries: the scan carry
+    # (saved for backward) shards its seq dim over `model`; XLA all-gathers at
+    # block entry and reduce-scatters at exit. Cuts saved-activation HBM 16x
+    # (126 boundaries x 134MB = 17 GiB > v5e HBM for llama3-405b otherwise).
+    seq_sp = "model" if kind in ("train", "prefill") else None
+    hidden = NamedSharding(mesh, P(dp, seq_sp, None))
+    if cfg.vocab % 16 == 0:
+        logits = NamedSharding(mesh, P(dp, None, "model"))
+    else:
+        logits = NamedSharding(mesh, P(dp, None, None))
+    # per-layer KV inside prefill/decode scans: [B, S, KV, hd], seq over model
+    kv_seq = "model" if kind in ("prefill", "decode") else None
+    kv = NamedSharding(mesh, P(dp, kv_seq, None, None))
+    # q/expanded-KV [B, S, H, hd]: heads over model when divisible
+    heads4 = NamedSharding(mesh, P(dp, None,
+                                   "model" if cfg.n_heads % 16 == 0 else None,
+                                   None))
+    out = {"hidden": hidden, "logits": logits, "kv": kv, "heads4": heads4}
+    if kind == "train":
+        # grad anchors for scanned param subtrees (see act_sharding)
+        for subtree, strip in (("blocks", True), ("mamba", True),
+                               ("enc_blocks", True), ("dec_blocks", True),
+                               ("shared", False)):
+            specs = _grad_anchor_specs(plan, cfg, mesh, subtree,
+                                       strip_layer_dim=strip)
+            if specs is not None:
+                out[f"{subtree}_grads"] = specs
+    return out
+
+
+def make_plan(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
+              fsdp: bool = True, compression: Optional[str] = None,
+              overlap: bool = True, trace: Optional[list] = None,
+              extra_ext: Optional[Dict] = None,
+              microbatches: Optional[int] = None) -> LoweredPlan:
+    prog = build_program(cfg, shape, multi_pod=multi_pod, fsdp=fsdp,
+                         compression=compression, overlap=overlap,
+                         extra_ext=extra_ext, microbatches=microbatches)
+    prog = run_pipeline(prog, trace=trace)
+    return plan_from_program(prog)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, ShardedLMDataset, make_train_iterator
+
+__all__ = ["DataConfig", "ShardedLMDataset", "make_train_iterator"]

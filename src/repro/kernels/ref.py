@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of each kernel).
+
+These are the ground truth the per-kernel allclose sweeps compare against, and
+the lowering targets of the UPIR `worksharing` backend (kernels are the `simd`
+backend).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def axpy(a, x, y):
+    """y + a*x (the paper's AXPY, Fig. 8)."""
+    return a * x + y
+
+
+def matmul(a, b):
+    """C = A @ B (paper's matrix multiplication kernel)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def matvec(a, x):
+    """y = A @ x (paper's matrix-vector kernel)."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def stencil2d(u, w_center: float = -4.0, w_side: float = 1.0):
+    """5-point 2D stencil with zero boundary (paper's 2D stencil kernel).
+
+    out[i,j] = w_c*u[i,j] + w_s*(u[i-1,j] + u[i+1,j] + u[i,j-1] + u[i,j+1])
+    """
+    up = jnp.pad(u, 1)
+    return (w_center * u
+            + w_side * (up[:-2, 1:-1] + up[2:, 1:-1]
+                        + up[1:-1, :-2] + up[1:-1, 2:])).astype(u.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """Plain-softmax attention oracle. q/k/v: [B, S, H, hd] (same head count)."""
+    B, S, H, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_chunk_scan(x, dt, A, Bm, Cm):
+    """Sequential SSD oracle: one chunk, step-by-step recurrence.
+
+    x [B,Q,H,P]; dt [B,Q,H]; A [H]; Bm/Cm [B,Q,N] (G=1). Returns (y, h_final).
+    """
+    B, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                        # [B,H,P], [B,H], [B,N]x2
+        decay = jnp.exp(dtt.astype(f32) * A)         # [B,H]
+        h = decay[..., None, None] * h + jnp.einsum(
+            "bn,bhp->bhpn", bt.astype(f32), xt.astype(f32) * dtt.astype(f32)[..., None])
+        y = jnp.einsum("bn,bhpn->bhp", ct.astype(f32), h)
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), f32)
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    h, ys = jax.lax.scan(step, h0, (swap(x), swap(dt), swap(Bm), swap(Cm)))
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,95 @@
+"""Uniform model API over all families (decoder-only and encoder-decoder).
+
+Batches are dicts matching ``configs.input_specs``:
+  train:   {tokens, targets, [vision_embeds | audio_embeds]}
+  prefill: {tokens, [vision_embeds | audio_embeds]}
+  decode:  {tokens, pos, [encoder_memory]}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import encdec, transformer
+from .transformer import is_shape
+
+
+def _is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.encdec is not None
+
+
+def param_shapes(cfg: ArchConfig):
+    if _is_encdec(cfg):
+        return encdec.encdec_param_shapes(cfg)
+    return transformer.param_shapes(cfg)
+
+
+def param_specs(cfg: ArchConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dt), param_shapes(cfg),
+                        is_leaf=is_shape)
+
+
+def init_params(cfg: ArchConfig, key):
+    if _is_encdec(cfg):
+        shapes = encdec.encdec_param_shapes(cfg)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            shapes, is_leaf=is_shape)
+        keys = jax.random.split(key, len(flat))
+        dt = jnp.dtype(cfg.param_dtype)
+        leaves = []
+        for (path, shape), k in zip(flat, keys):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            leaves.append(transformer._init_one(name, shape, k, dt, cfg))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+    return transformer.init_params(cfg, key)
+
+
+def _extra_embeds(cfg: ArchConfig, batch: Dict[str, Any]):
+    if cfg.frontend is None or _is_encdec(cfg):
+        return None
+    return batch.get(f"{cfg.frontend.kind}_embeds")
+
+
+def loss_fn(cfg: ArchConfig, params, batch: Dict[str, Any], *,
+            remat: str = "none"):
+    if _is_encdec(cfg):
+        return encdec.loss_fn(cfg, params, batch["audio_embeds"],
+                              batch["tokens"], batch["targets"], remat=remat)
+    return transformer.loss_fn(cfg, params, batch["tokens"], batch["targets"],
+                               extra_embeds=_extra_embeds(cfg, batch),
+                               remat=remat)
+
+
+def cache_specs(cfg: ArchConfig, B: int, S_max: int):
+    if _is_encdec(cfg):
+        return encdec.cache_specs(cfg, B, S_max)
+    return transformer.cache_specs(cfg, B, S_max)
+
+
+def init_cache(cfg: ArchConfig, B: int, S_max: int):
+    if _is_encdec(cfg):
+        return encdec.init_cache(cfg, B, S_max)
+    return transformer.init_cache(cfg, B, S_max)
+
+
+def prefill(cfg: ArchConfig, params, batch: Dict[str, Any], *, s_max=None):
+    if _is_encdec(cfg):
+        return encdec.prefill(cfg, params, batch["tokens"],
+                              batch["audio_embeds"], s_max=s_max)
+    return transformer.prefill(cfg, params, batch["tokens"],
+                               extra_embeds=_extra_embeds(cfg, batch),
+                               s_max=s_max)
+
+
+def decode_step(cfg: ArchConfig, params, cache, batch: Dict[str, Any]):
+    if _is_encdec(cfg):
+        return encdec.decode_step(cfg, params, cache, batch["tokens"],
+                                  batch["pos"],
+                                  encoder_memory=batch.get("encoder_memory"))
+    return transformer.decode_step(cfg, params, cache, batch["tokens"],
+                                   batch["pos"])

@@ -1,0 +1,272 @@
+"""Shared layer primitives: norms, RoPE, attention paths, MLP variants.
+
+Everything is a pure function over explicit param pytrees. Matmuls run in the
+config's compute dtype (bf16 on TPU); normalization statistics and softmax run in
+f32. The chunked attention path is the XLA realization of online-softmax (flash)
+attention — ``kernels/flash_attention.py`` is the Pallas version of the same
+algorithm for real TPUs; both are validated against ``kernels/ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------- embedding
+
+
+def embed_lookup(embed, tokens, dtype):
+    """Token embedding lookup.
+
+    In distributed traces the lookup is a one-hot matmul (MaxText's iota-embed):
+    XLA's SPMD partitioner handles a dot over the model-sharded vocab dim
+    cleanly (partial products + psum), whereas a gather from a sharded table
+    triggers involuntary full rematerialization (observed on the 16x16 mesh).
+    """
+    from ..core.act_sharding import distributed
+    if distributed():
+        onehot = jax.nn.one_hot(tokens, embed.shape[0], dtype=dtype)
+        return jnp.einsum("...v,vd->...d", onehot, embed.astype(dtype))
+    return embed.astype(dtype)[tokens]
+
+
+# ------------------------------------------------------------------------- norms
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layernorm(x, w, b=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+    return y + b.astype(x.dtype) if b is not None else y
+
+
+def norm(x, w, kind: str = "rmsnorm"):
+    return rmsnorm(x, w) if kind == "rmsnorm" else layernorm(x, w)
+
+
+# -------------------------------------------------------------------------- rope
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))                 # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                        # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- MLP
+
+
+def mlp_apply(p, x, act: str, glu: bool, dtype):
+    x = x.astype(dtype)
+    h = jnp.einsum("...d,df->...f", x, p["w1"].astype(dtype))
+    h = _act(h, act)
+    if glu:
+        h = h * jnp.einsum("...d,df->...f", x, p["w3"].astype(dtype))
+    return jnp.einsum("...f,fd->...d", h, p["w2"].astype(dtype))
+
+
+def _act(h, act: str):
+    if act == "silu":
+        return jax.nn.silu(h)
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    if act == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(act)
+
+
+# --------------------------------------------------------------------- attention
+
+
+def gqa_expand(k, H: int):
+    """[B,S,KV,hd] -> [B,S,KV,G,hd] view helper factor G = H // KV."""
+    B, S, KV, hd = k.shape
+    return k, H // KV
+
+
+def gqa_expand_kv(k, H: int):
+    """Expand GQA K/V [B,S,KV,hd] -> [B,S,H,hd] by repeating each group.
+
+    On a TP mesh the q-head count divides the model axis where KV often does
+    not (kv=4/8 vs 16 shards); expanding keys/values lets scores shard on the
+    head dim instead of replicating attention across the model axis.
+    """
+    KV = k.shape[2]
+    if KV == H:
+        return k
+    return jnp.repeat(k, H // KV, axis=2)
+
+
+def attention_full(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                   bias=None):
+    """Plain-softmax attention. q: [B,Sq,H,hd], k/v: [B,Sk,KV,hd]."""
+    B, Sq, H, hd = q.shape
+    k = gqa_expand_kv(k, H)
+    v = gqa_expand_kv(v, H)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if bias is not None:
+        scores = scores + bias
+    if causal or window:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(k.shape[1])[None, :]
+        mask = jnp.ones((Sq, k.shape[1]), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
+                      kv_chunk: int = 1024, window: int = 0):
+    """Online-softmax attention, double-chunked (XLA flash). Memory O(chunk^2)."""
+    B, Sq, H, hd = q.shape
+    k = gqa_expand_kv(k, H)
+    v = gqa_expand_kv(v, H)
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = 1.0 / np.sqrt(hd)
+
+    qs = q.reshape(B, nq, q_chunk, H, hd)
+    ks = k.reshape(B, nk, kv_chunk, H, hd)
+    vs = v.reshape(B, nk, kv_chunk, H, hd)
+
+    def q_step(_, qi):
+        q_i, iq = qi                                   # [B,qc,H,hd]
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_j, v_j, jk = kj
+            s = jnp.einsum("bqhd,bshd->bhqs", q_i, k_j).astype(jnp.float32)
+            s = s * scale
+            if causal or window:
+                qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+                kpos = jk * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                ok = jnp.ones_like(kpos <= qpos)
+                if causal:
+                    ok &= kpos <= qpos
+                if window:
+                    ok &= kpos > qpos - window
+                s = jnp.where(ok[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(q.dtype), v_j).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks.swapaxes(0, 1), vs.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)               # [B,H,qc,hd]
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qs.swapaxes(0, 1), jnp.arange(nq)))
+    # outs: [nq, B, H, qc, hd] -> [B, Sq, H, hd]
+    outs = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, hd)
+    return outs
+
+
+def attention_decode(q, k_cache, v_cache, pos, *, window: int = 0,
+                     new_kv=None):
+    """One-token attention against a (possibly rolling) KV cache.
+
+    q: [B,1,H,hd]; k_cache/v_cache: [B,S,KV,hd]; pos: [B] absolute position of
+    the *new* token. Entries past ``pos`` are masked. With ``window``, cache
+    slots hold the last ``window`` positions (rolling), mask handles validity.
+
+    ``new_kv=(k_new, v_new)`` ([B,1,KV,hd] each) runs in *deferred-insert*
+    mode: the cache is read-only (positions < pos) and the new token's K/V is
+    merged into the softmax on the fly — the caller scatters it into the cache
+    once, outside the layer loop (in-loop insert forces XLA to copy the whole
+    stacked cache every iteration: §Perf D2).
+    """
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    slot = jnp.arange(S)[None, :]                      # [1,S]
+    limit = pos if new_kv is not None else pos + 1
+    if window:
+        valid = slot < jnp.minimum(limit, window)[:, None]
+    else:
+        valid = slot < limit[:, None]
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    if new_kv is not None:
+        k_new, v_new = new_kv
+        s_new = jnp.einsum("bkgh,bskh->bkgs", qg,
+                           k_new).astype(jnp.float32)[..., 0] / np.sqrt(hd)
+        # online-softmax merge (concatenating scores across the seq-SHARDED
+        # dim forces an SPMD gather — measured 2.5x collective blowup): all
+        # reductions over S stay local-per-shard + tiny cross-shard reduces
+        m = jnp.maximum(scores.max(axis=-1), s_new)          # [B,KV,G]
+        p = jnp.exp(scores - m[..., None])
+        l_c = p.sum(axis=-1)
+        o_c = jnp.einsum("bkgs,bskh->bkgh", p.astype(q.dtype), v_cache)
+        p_n = jnp.exp(s_new - m)                             # [B,KV,G]
+        o = (o_c.astype(jnp.float32)
+             + p_n[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32))
+        out = (o / (l_c + p_n)[..., None]).astype(q.dtype)
+        return out.reshape(B, 1, H, hd)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+def cache_insert(cache, new, pos, *, window: int = 0):
+    """Insert [B,1,KV,hd] into [B,S,KV,hd] at per-example position (rolling if
+    windowed).
+
+    Two lowerings (§Perf D1-D3):
+      * single-device: vmapped dynamic_update_slice — in-place scatter;
+      * distributed: one-hot masked select — a dynamic-index scatter into the
+        seq-SHARDED cache dim forces the SPMD partitioner to gather the shard
+        boundary (measured 2.5x collective blowup on llama3 decode), while the
+        mask form is embarrassingly local. Call it ONCE per step (outside the
+        layer scan) — in-loop it rewrites the whole cache per layer (D2).
+    """
+    from ..core.act_sharding import distributed
+    idx = pos % window if window else pos
+    if distributed():
+        S = cache.shape[1]
+        onehot = (jnp.arange(S)[None, :] == idx[:, None])     # [B,S] bool
+        return jnp.where(onehot[..., None, None], new, cache)
+
+    def one(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+
+    return jax.vmap(one)(cache, new, idx)

@@ -1,0 +1,156 @@
+"""Mamba2 (SSD) block: chunked selective-state-space scan.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk masked matmul +
+inter-chunk state recurrence, scanned over chunks) — O(S·Q) compute with O(Q^2)
+working set, the TPU-friendly counterpart of the paper's GPU kernel. Decode is the
+O(1)-per-token state recurrence. ``kernels/ssm_scan.py`` is the Pallas version of
+the chunk recurrence; both check against ``kernels/ref.py``.
+
+Shapes: x [B,S,H,P]; dt [B,S,H] (>0); A [H] (<0); B/C [B,S,G,N]; state [B,H,P,N].
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan. Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    B, S0, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    Q = min(chunk, S0)
+    # pad S to a multiple of Q; padded steps have dt=0 => identity on the state
+    pad = (-S0) % Q
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        x, dt, Bm, Cm = zpad(x), zpad(dt), zpad(Bm), zpad(Cm)
+    S = S0 + pad
+    nc = S // Q
+    f32 = jnp.float32
+
+    xq = x.reshape(B, nc, Q, G, hpg, P).astype(f32)
+    dtq = dt.reshape(B, nc, Q, G, hpg).astype(f32)
+    Bq = Bm.reshape(B, nc, Q, G, N).astype(f32)
+    Cq = Cm.reshape(B, nc, Q, G, N).astype(f32)
+    a = dtq * A.reshape(G, hpg)                     # [B,nc,Q,G,hpg], negative
+    cum = jnp.cumsum(a, axis=2)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(h_prev, inp):
+        x_c, dt_c, B_c, C_c, cum_c = inp            # leading dim B
+        # intra-chunk: M[t,s] = (C_t.B_s) * exp(cum_t - cum_s) * dt_s, s <= t
+        seg = cum_c[:, :, None] - cum_c[:, None]    # [B,t,s,G,hpg]
+        L = jnp.where(causal[None, :, :, None, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("btgn,bsgn->btsg", C_c, B_c)
+        M = CB[..., None] * L * dt_c[:, None]       # [B,t,s,G,hpg]
+        y_intra = jnp.einsum("btsgh,bsghp->btghp", M, x_c)
+        # inter-chunk: y_inter[t] = exp(cum_t) * C_t . h_prev
+        y_inter = jnp.einsum("btgn,bghpn->btghp", C_c, h_prev) * \
+            jnp.exp(cum_c)[..., None]
+        # state update: h = exp(cum_Q) h_prev + sum_s exp(cum_Q - cum_s) dt_s B_s x_s
+        w = jnp.exp(cum_c[:, -1:] - cum_c) * dt_c   # [B,Q,G,hpg]
+        dstate = jnp.einsum("bsgn,bsghp->bghpn", B_c, x_c * w[..., None])
+        h_new = jnp.exp(cum_c[:, -1])[..., None, None] * h_prev + dstate
+        return h_new, (y_intra + y_inter)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, G, hpg, P, N), f32)
+    else:
+        h0 = h0.reshape(B, G, hpg, P, N).astype(f32)
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)          # [B,nc,...] -> [nc,B,...]
+    h_fin, ys = jax.lax.scan(
+        chunk_step, h0, (swap(xq), swap(dtq), swap(Bq), swap(Cq), swap(cum)))
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, H, P)[:, :S0]
+    return y.astype(x.dtype), h_fin.reshape(B, H, P, N)
+
+
+def ssd_decode(x, dt, A, Bm, Cm, h):
+    """One-token SSD step. x [B,H,P]; dt [B,H]; B/C [B,G,N]; h [B,H,P,N]."""
+    B, H, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[2]
+    hpg = H // G
+    f32 = jnp.float32
+    xg = x.reshape(B, G, hpg, P).astype(f32)
+    dtg = dt.reshape(B, G, hpg).astype(f32)
+    hg = h.reshape(B, G, hpg, P, N).astype(f32)
+    decay = jnp.exp(dtg * A.reshape(G, hpg))        # [B,G,hpg]
+    dstate = jnp.einsum("bgn,bghp->bghpn", Bm.astype(f32), xg * dtg[..., None])
+    h_new = decay[..., None, None] * hg + dstate
+    y = jnp.einsum("bgn,bghpn->bghp", Cm.astype(f32), h_new)
+    return y.reshape(B, H, P).astype(x.dtype), h_new.reshape(B, H, P, N)
+
+
+def causal_conv(x, w, state=None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over seq. x [B,S,C]; w [K,C]; state [B,K-1,C].
+
+    Returns (y [B,S,C], new_state [B,K-1,C]).
+    """
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)        # [B, S+K-1, C]
+    y = sum(xp[:, i:i + S] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def mamba_params_shapes(d_model: int, s) -> dict:
+    """Per-block param shapes (unstacked); s: SSMCfg."""
+    di, H, N, G, K = s.d_inner, s.n_heads, s.state_dim, s.n_groups, s.conv_kernel
+    return {
+        "ln": (d_model,),
+        "w_x": (d_model, di),
+        "w_z": (d_model, di),
+        "w_bc": (d_model, 2 * G * N),
+        "w_dt": (d_model, H),
+        "dt_bias": (H,),
+        "conv_w": (K, di),
+        "A_log": (H,),
+        "D_skip": (H,),
+        "out_norm": (di,),
+        "w_out": (di, d_model),
+    }
+
+
+def mamba_block(p, x, s, dtype, conv_state=None, ssm_state=None, decode=False):
+    """Apply one Mamba2 block. x: [B,S,D] (S==1 for decode).
+
+    Returns (out [B,S,D], (conv_state, ssm_state)).
+    """
+    B, S, D = x.shape
+    di, H, P = s.d_inner, s.n_heads, s.head_dim
+    G, N = s.n_groups, s.state_dim
+    xr = rmsnorm(x, p["ln"]).astype(dtype)
+    xin = jnp.einsum("bsd,de->bse", xr, p["w_x"].astype(dtype))
+    z = jnp.einsum("bsd,de->bse", xr, p["w_z"].astype(dtype))
+    bc = jnp.einsum("bsd,de->bse", xr, p["w_bc"].astype(dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xr, p["w_dt"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    xin, conv_state = causal_conv(xin, p["conv_w"].astype(dtype), conv_state)
+    xin = jax.nn.silu(xin)
+    Bm = bc[..., :G * N].reshape(B, S, G, N)
+    Cm = bc[..., G * N:].reshape(B, S, G, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, S, H, P)
+    if decode:
+        y, ssm_state = ssd_decode(xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0],
+                                  ssm_state)
+        y = y[:, None]
+    else:
+        y, ssm_state = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, ssm_state)
+    y = y + p["D_skip"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["out_norm"]).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dtype))
+    return out.astype(x.dtype), (conv_state, ssm_state)

@@ -1,0 +1,202 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar memory,
+strictly sequential scan).
+
+mLSTM is a gated linear-attention recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T with
+exponential input gates, stabilized in log-space by the running max m. We train it
+in chunked-parallel form (like SSD): intra-chunk masked attention + inter-chunk
+state carry — O(S·Q) with bounded working set. sLSTM has a true hidden-to-hidden
+recurrence (block-diagonal per head) so it scans one step at a time, which is the
+xLSTM paper's own stated trade-off; its share of blocks is small (1 in
+``slstm_every``).
+
+Decode for both is an O(1) state update — this is why xlstm-350m runs the
+long_500k cell that full-attention architectures skip.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import mlp_apply, rmsnorm
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------- mLSTM
+
+
+def mlstm_params_shapes(d_model: int, H: int, proj: float) -> Dict[str, tuple]:
+    di = int(d_model * proj)
+    return {
+        "ln": (d_model,), "w_up": (d_model, 2 * di),
+        "wq": (di, di), "wk": (di, di), "wv": (di, di),
+        "w_if": (di, 2 * H), "b_if": (2 * H,),
+        "out_norm": (di,), "w_down": (di, d_model),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state, chunk: int):
+    """Chunked stabilized mLSTM. q/k/v [B,S,H,dk]; li/lf [B,S,H] log gates.
+
+    state: (C [B,H,dk,dv], n [B,H,dk], m [B,H]) scaled by exp(-m).
+    Returns (y [B,S,H,dv], state).
+    """
+    B, S0, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = min(chunk, S0)
+    # pad to a chunk multiple; padded steps: lf=0 (keep), li=NEG (no input)
+    pad = (-S0) % Q
+    if pad:
+        zpad = lambda t, c=0.0: jnp.pad(t, [(0, 0), (0, pad)] +
+                                        [(0, 0)] * (t.ndim - 2),
+                                        constant_values=c)
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        li, lf = zpad(li, NEG), zpad(lf, 0.0)
+    S = S0 + pad
+    nc = S // Q
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(dk).astype(f32)
+
+    qs = q.reshape(B, nc, Q, H, dk).astype(f32) * scale
+    ks = k.reshape(B, nc, Q, H, dk).astype(f32)
+    vs = v.reshape(B, nc, Q, H, dv).astype(f32)
+    lis = li.reshape(B, nc, Q, H).astype(f32)
+    lfs = lf.reshape(B, nc, Q, H).astype(f32)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(carry, inp):
+        C, n, m = carry                               # scaled by exp(-m)
+        q_c, k_c, v_c, li_c, lf_c = inp
+        F = jnp.cumsum(lf_c, axis=1)                  # [B,Q,H]
+        # G[t,s] = F_t - F_s + li_s  (decay over s+1..t, then input gate at s)
+        Gmat = F[:, :, None] - F[:, None] + li_c[:, None]       # [B,t,s,H]
+        Gmat = jnp.where(causal[None, :, :, None], Gmat, NEG)
+        inter_logit = F + m[:, None]                  # [B,Q,H] carry contribution
+        m_t = jnp.maximum(Gmat.max(axis=2), inter_logit)        # [B,Q,H]
+        w = jnp.exp(Gmat - m_t[:, :, None])           # [B,t,s,H]
+        qk = jnp.einsum("bthd,bshd->btsh", q_c, k_c)
+        y_intra = jnp.einsum("btsh,btsh,bshv->bthv", w, qk, v_c)
+        inter_w = jnp.exp(inter_logit - m_t)          # [B,Q,H]
+        y_inter = jnp.einsum("bthd,bhdv->bthv", q_c, C) * inter_w[..., None]
+        # normalizer: n_t = sum_s exp(G-m) k_s + exp(inter-m) n_prev
+        n_t = jnp.einsum("btsh,bshd->bthd", w, k_c) + \
+            n[:, None] * inter_w[..., None]
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", q_c, n_t)), jnp.exp(-m_t))
+        y = (y_intra + y_inter) / denom[..., None]
+        # chunk-final state
+        F_Q = F[:, -1]                                # [B,H]
+        g_end = F_Q[:, None] - F + li_c               # [B,Q,H]
+        m_new = jnp.maximum(F_Q + m, g_end.max(axis=1))
+        wc = jnp.exp(g_end - m_new[:, None])
+        C_new = jnp.exp(F_Q + m - m_new)[..., None, None] * C + \
+            jnp.einsum("bsh,bshd,bshv->bhdv", wc, k_c, v_c)
+        n_new = jnp.exp(F_Q + m - m_new)[..., None] * n + \
+            jnp.einsum("bsh,bshd->bhd", wc, k_c)
+        return (C_new, n_new, m_new), y
+
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    (C, n, m), ys = jax.lax.scan(step, state,
+                                 (swap(qs), swap(ks), swap(vs), swap(lis),
+                                  swap(lfs)))
+    y = jnp.swapaxes(ys, 0, 1).reshape(B, S, H, dv)[:, :S0]
+    return y, (C, n, m)
+
+
+def mlstm_init_state(B: int, H: int, dk: int, dv: int):
+    return (jnp.zeros((B, H, dk, dv), jnp.float32),
+            jnp.zeros((B, H, dk), jnp.float32),
+            jnp.full((B, H), NEG, jnp.float32))
+
+
+def mlstm_block(p, x, H: int, dtype, state=None, decode: bool = False,
+                chunk: int = 256):
+    """Pre-norm residual mLSTM block. x [B,S,D]."""
+    B, S, D = x.shape
+    xr = rmsnorm(x, p["ln"]).astype(dtype)
+    up = jnp.einsum("bsd,de->bse", xr, p["w_up"].astype(dtype))
+    di = up.shape[-1] // 2
+    main, gate = up[..., :di], up[..., di:]
+    dk = di // H
+    q = jnp.einsum("bse,ef->bsf", main, p["wq"].astype(dtype)).reshape(B, S, H, dk)
+    k = jnp.einsum("bse,ef->bsf", main, p["wk"].astype(dtype)).reshape(B, S, H, dk)
+    v = jnp.einsum("bse,ef->bsf", main, p["wv"].astype(dtype)).reshape(B, S, H, dk)
+    gif = (jnp.einsum("bse,eh->bsh", main, p["w_if"].astype(dtype))
+           .astype(jnp.float32) + p["b_if"].astype(jnp.float32))
+    li = gif[..., :H]                                  # log input gate (exp gate)
+    lf = jax.nn.log_sigmoid(gif[..., H:])              # log forget gate
+    if state is None:
+        state = mlstm_init_state(B, H, dk, dk)
+    if decode:
+        y, state = _mlstm_chunk(q, k, v, li, lf, state, chunk=1)
+    else:
+        y, state = _mlstm_chunk(q, k, v, li, lf, state, chunk=chunk)
+    y = y.reshape(B, S, di).astype(dtype)
+    y = y * jax.nn.silu(gate)
+    y = rmsnorm(y, p["out_norm"]).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(dtype))
+    return (x + out).astype(x.dtype), state
+
+
+# --------------------------------------------------------------------- sLSTM
+
+
+def slstm_params_shapes(d_model: int, H: int, proj: float) -> Dict[str, tuple]:
+    dh = d_model // H
+    dff = int(d_model * proj)
+    return {
+        "ln": (d_model,), "w_in": (d_model, 4 * d_model),
+        "r": (H, dh, 4 * dh), "b": (4 * d_model,),
+        "ln2": (d_model,), "w1": (d_model, dff), "w2": (dff, d_model),
+    }
+
+
+def slstm_init_state(B: int, D: int):
+    z = jnp.zeros((B, D), jnp.float32)
+    return (z, z, z, jnp.full((B, D), NEG, jnp.float32))  # h, c, n, m
+
+
+def _slstm_cell(p, x_gates, state, H: int):
+    """One sLSTM step. x_gates [B,4D] precomputed input contribution."""
+    h, c, n, m = state
+    B, D4 = x_gates.shape
+    D = D4 // 4
+    dh = D // H
+    hr = h.reshape(B, H, dh).astype(jnp.float32)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["r"].astype(jnp.float32))
+    rec = rec.reshape(B, 4 * D)
+    g = x_gates.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(gf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(gf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(p, x, H: int, act: str, dtype, state=None, decode: bool = False):
+    """Pre-norm sLSTM block + gated FF. x [B,S,D]."""
+    B, S, D = x.shape
+    xr = rmsnorm(x, p["ln"]).astype(dtype)
+    xg = jnp.einsum("bsd,de->bse", xr, p["w_in"].astype(dtype))
+    if state is None:
+        state = slstm_init_state(B, D)
+
+    def step(st, xt):
+        st = _slstm_cell(p, xt, st, H)
+        return st, st[0]
+
+    state, hs = jax.lax.scan(step, state, jnp.swapaxes(xg, 0, 1))
+    y = jnp.swapaxes(hs, 0, 1).astype(dtype)          # [B,S,D]
+    x = x + y.astype(x.dtype)
+    xr2 = rmsnorm(x, p["ln2"]).astype(dtype)
+    ff = mlp_apply({"w1": p["w1"], "w2": p["w2"]}, xr2, act="gelu", glu=False,
+                   dtype=dtype)
+    return (x + ff).astype(x.dtype), state

@@ -1,0 +1,9 @@
+from .optimizers import (OptState, adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, make_optimizer)
+from .schedules import cosine_warmup
+
+__all__ = [
+    "OptState", "adamw_init", "adamw_update", "adafactor_init",
+    "adafactor_update", "clip_by_global_norm", "make_optimizer",
+    "cosine_warmup",
+]

@@ -1,0 +1,143 @@
+"""Optimizers: AdamW (moments mirror param sharding — ZeRO falls out of the UPIR
+data distribution) and Adafactor (factored second moment; the scale-driven default
+for the 300B+ archs, where even ZeRO-sharded AdamW would not fit v5e HBM — see
+DESIGN.md §4).
+
+Implemented from scratch (no optax dependency), pytree-native, dtype-explicit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    inner: Any                 # optimizer-specific pytree
+    count: jax.Array           # step counter (int32 scalar)
+
+
+# ----------------------------------------------------------------------- utils
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+# ----------------------------------------------------------------------- adamw
+
+
+def adamw_init(params, dtype=jnp.float32) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return OptState(
+        inner={"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)},
+        count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: OptState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1) -> Tuple[Any, OptState]:
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + weight_decay * p.astype(jnp.float32)
+        return -lr * step, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    # flatten/unflatten (not tree.map with tuple leaves): param trees may
+    # legitimately contain tuples as *structure* (xLSTM's per-block tuple)
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = tdef.flatten_up_to(state.inner["m"])
+    flat_v = tdef.flatten_up_to(state.inner["v"])
+    flat_p = tdef.flatten_up_to(params)
+    ups, ms, vs = zip(*[upd(g, m, v, p) for g, m, v, p in
+                        zip(flat_g, flat_m, flat_v, flat_p)])
+    unflat = lambda xs: jax.tree_util.tree_unflatten(tdef, xs)
+    return unflat(ups), OptState(
+        inner={"m": unflat(ms), "v": unflat(vs)}, count=count)
+
+
+# ------------------------------------------------------------------- adafactor
+
+
+def _factored_dims(shape):
+    """Factor the two largest trailing dims; None for <2D tensors."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor_init(params) -> OptState:
+    def make(p):
+        f = _factored_dims(p.shape)
+        if f is None:
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        r, c = f
+        vr_shape = tuple(s for i, s in enumerate(p.shape) if i != c)
+        vc_shape = tuple(s for i, s in enumerate(p.shape) if i != r)
+        return {"vr": jnp.zeros(vr_shape, jnp.float32),
+                "vc": jnp.zeros(vc_shape, jnp.float32)}
+    return OptState(inner=jax.tree.map(make, params,
+                                       is_leaf=lambda x: hasattr(x, "shape")),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads, state: OptState, params, *, lr, decay=0.8,
+                     eps=1e-30, clip_threshold=1.0) -> Tuple[Any, OptState]:
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        f = _factored_dims(g.shape)
+        if f is None:
+            v = beta * s["v"] + (1 - beta) * g2
+            pre = g * jax.lax.rsqrt(v + eps)
+            new_s = {"v": v}
+        else:
+            r, c = f
+            vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=c)
+            vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=r)
+            mean_r = vr.mean(axis=-1, keepdims=True)
+            rfac = jax.lax.rsqrt(jnp.expand_dims(vr / jnp.maximum(mean_r, eps), c)
+                                 + eps)
+            cfac = jax.lax.rsqrt(jnp.expand_dims(vc, r) + eps)
+            pre = g * rfac * cfac
+            new_s = {"vr": vr, "vc": vc}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(pre * pre) + eps)
+        pre = pre / jnp.maximum(1.0, rms / clip_threshold)
+        return -lr * pre, new_s
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_s = tdef.flatten_up_to(state.inner)
+    flat_p = tdef.flatten_up_to(params)
+    ups, new_ss = zip(*[upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)])
+    updates = jax.tree_util.tree_unflatten(tdef, ups)
+    inner = jax.tree_util.tree_unflatten(tdef, new_ss)
+    return updates, OptState(inner=inner, count=count)
+
+
+# --------------------------------------------------------------------- factory
+
+
+def make_optimizer(name: str):
+    """Returns (init_fn(params) -> OptState, update_fn(grads, state, params, lr))."""
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)

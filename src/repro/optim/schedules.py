@@ -1,0 +1,15 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((t - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup_steps, warm, cos)

@@ -1,0 +1,52 @@
+"""int8 gradient compression with error feedback.
+
+The UPIR sync op carries ``compression='int8'`` as an extension; the explicit
+backend wraps its gradient reduction with encode/decode, keeping a per-param
+f32 residual (error feedback) so compression noise is corrected over steps
+(classic 1-bit/QSGD-style EF-SGD). Quantization is per-tensor symmetric.
+
+On the GSPMD backend there is no explicit collective to wrap — compression is
+an explicit-backend (and real-deployment shard_map) feature; see DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, *, bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor quantization: returns (int8 codes, f32 scale)."""
+    absmax = jnp.max(jnp.abs(g)).astype(jnp.float32)
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(absmax / qmax, 1e-12)
+    codes = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -qmax, qmax)
+    return codes.astype(jnp.int8), scale
+
+
+def dequantize(codes, scale):
+    return codes.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residual):
+    """Error-feedback encode: g' = Q(g + r); r' = (g + r) - deq(g')."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        codes, scale = quantize(corrected)
+        deq = dequantize(codes, scale)
+        return codes, scale, corrected - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    codes, scales, res = zip(*[one(g, r) for g, r in zip(flat_g, flat_r)])
+    un = lambda xs: jax.tree_util.tree_unflatten(tdef, xs)
+    return un(codes), un(scales), un(res)
+
+
+def ef_decompress_tree(codes, scales):
+    return jax.tree.map(dequantize, codes, scales)
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,82 @@
+"""Serving steps (prefill / decode) from a LoweredPlan.
+
+Decode shards the KV cache's sequence dim over the ``model`` axis (UPIR seq
+worksharing loop) — flash-decode — and batch over ``data``; the cache is donated
+every step. Prefill is the forward pass that also emits the cache with the same
+sharding, so prefill -> decode hand-off never reshards.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, SHAPES, ShapeCfg, input_specs
+from ..core.act_sharding import activation_shardings
+from ..core.lower import LoweredPlan
+from ..models import api
+
+
+def make_prefill_step(cfg: ArchConfig, shape: ShapeCfg,
+                      act_specs=None) -> Callable:
+    def prefill_step(params, batch):
+        with activation_shardings(act_specs):
+            logits, cache = api.prefill(cfg, params, batch,
+                                        s_max=shape.seq_len)
+            return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, sample: str = "greedy",
+                     act_specs=None) -> Callable:
+    def decode_step(params, cache, batch):
+        with activation_shardings(act_specs):
+            logits, cache = api.decode_step(cfg, params, cache, batch)
+            next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            return next_tok.astype(jnp.int32), logits, cache
+    return decode_step
+
+
+def jit_decode_step(cfg: ArchConfig, plan: LoweredPlan, mesh, shape: ShapeCfg):
+    from ..core.plans import act_shardings
+    step = make_decode_step(cfg, act_specs=act_shardings(plan, cfg, mesh,
+                                                         "decode"))
+    pspecs = api.param_specs(cfg)
+    cspecs = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
+    param_sh = plan.sharding_tree(mesh, pspecs, prefix="params")
+    cache_sh = plan.sharding_tree(mesh, cspecs, prefix="cache")
+    bspecs = input_specs(cfg, shape)
+    batch_sh = plan.sharding_tree(mesh, bspecs, prefix="in")
+    # next-token sharding follows "in/pos" (already divisibility-checked by
+    # the propagate pass — long_500k has B=1 and must stay replicated)
+    tok_sh = NamedSharding(mesh, plan.spec("in/pos"))
+    logit_sh = NamedSharding(mesh, plan.spec("out/logits"))
+    donate = (1,) if plan.donate_symbol("cache") else ()
+    fn = jax.jit(step,
+                 in_shardings=(param_sh, cache_sh, batch_sh),
+                 out_shardings=(tok_sh, logit_sh, cache_sh),
+                 donate_argnums=donate)
+    return fn, (pspecs, cspecs, bspecs), (param_sh, cache_sh, batch_sh)
+
+
+def jit_prefill_step(cfg: ArchConfig, plan: LoweredPlan, mesh, shape: ShapeCfg,
+                     decode_plan: LoweredPlan = None):
+    """Prefill jit; cache out_shardings follow the decode plan so hand-off is
+    reshard-free."""
+    from ..core.plans import act_shardings
+    step = make_prefill_step(cfg, shape,
+                             act_specs=act_shardings(plan, cfg, mesh,
+                                                     "prefill"))
+    pspecs = api.param_specs(cfg)
+    param_sh = plan.sharding_tree(mesh, pspecs, prefix="params")
+    bspecs = input_specs(cfg, shape)
+    batch_sh = plan.sharding_tree(mesh, bspecs, prefix="in")
+    cspecs = jax.eval_shape(step, pspecs, bspecs)[1]
+    cplan = decode_plan or plan
+    cache_sh = cplan.sharding_tree(mesh, cspecs, prefix="cache")
+    logit_sh = NamedSharding(mesh, cplan.spec("out/logits"))
+    fn = jax.jit(step, in_shardings=(param_sh, batch_sh),
+                 out_shardings=(logit_sh, cache_sh))
+    return fn, (pspecs, bspecs), (param_sh, batch_sh)

@@ -1,0 +1,32 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — tests run on the
+single real CPU device; multi-device tests spawn subprocesses with their own
+XLA_FLAGS (the dry-run owns the 512-device configuration)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run python code in a fresh process with N XLA host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = str(SRC)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env, cwd=str(REPO))
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_in_subprocess

@@ -1,0 +1,54 @@
+"""Integration check over the recorded dry-run sweep: every supported
+(arch x shape x mesh) cell compiled; skips are exactly the documented ones."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_supported, config
+
+RESULTS = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not RESULTS.exists() or not list(RESULTS.glob("*.json")),
+    reason="dry-run sweep has not been executed (run launch/dryrun.py --all)")
+
+
+def _load(arch, shape, mesh):
+    f = RESULTS / f"{arch}__{shape}__{mesh}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_cells_recorded_ok(arch, mesh):
+    for shape_name, shape in SHAPES.items():
+        rec = _load(arch, shape_name, mesh)
+        assert rec is not None, f"missing cell {arch} x {shape_name} x {mesh}"
+        ok, _ = cell_supported(config(arch), shape)
+        if ok:
+            assert rec["status"] == "ok", (arch, shape_name, mesh,
+                                           rec.get("error", "")[:500])
+            rf = rec["roofline"]
+            assert rf["flops_per_device"] > 0
+            assert rf["dominant"] in ("compute_s", "memory_s", "collective_s")
+        else:
+            assert rec["status"] == "skipped"
+
+
+def test_skips_are_exactly_long_context_full_attention():
+    skipped = [f.name for f in RESULTS.glob("*__long_500k__single.json")
+               if json.loads(f.read_text())["status"] == "skipped"]
+    assert len(skipped) == 8            # 10 archs - zamba2 - xlstm
+    for name in skipped:
+        arch = name.split("__")[0]
+        assert not config(arch).sub_quadratic
+
+
+def test_multi_pod_uses_pod_axis():
+    rec = _load("tinyllama-1.1b", "train_4k", "multi")
+    if rec is None:
+        pytest.skip("multi-pod cell missing")
+    assert rec["plan"]["batch_axes"] == ["pod", "data"]

@@ -1,0 +1,94 @@
+"""End-to-end fault tolerance: crash/recovery with exact deterministic replay."""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ShapeCfg, smoke_config
+from repro.core import plans
+from repro.data import DataConfig, ShardedLMDataset
+from repro.runtime import trainer
+from repro.runtime.fault_tolerance import (FailureInjector, StragglerTracker,
+                                           run_training)
+
+CFG = smoke_config("tinyllama-1.1b")
+SHAPE = ShapeCfg("smoke", "train", 32, 8)
+DC = DataConfig(vocab=CFG.vocab, seq_len=32, global_batch=8)
+
+
+def make_step():
+    plan = plans.make_plan(CFG, SHAPE)
+    return jax.jit(trainer.make_train_step(CFG, plan), donate_argnums=0)
+
+
+def make_iter_factory():
+    ds = ShardedLMDataset(DC)
+
+    def make(start):
+        def gen():
+            s = start
+            while True:
+                yield ds.batch_at(s)
+                s += 1
+        return gen()
+    return make
+
+
+def run(fail_at, td, steps=16):
+    step = make_step()
+    state = trainer.init_state(CFG, jax.random.key(0))
+    mk = make_iter_factory()
+    ckpt = CheckpointManager(td, keep=2, every=4)
+    inj = FailureInjector(fail_at=fail_at)
+    state, hist = run_training(
+        train_step=step, state=state, data_iter=mk(0), ckpt=ckpt,
+        num_steps=steps, injector=inj,
+        state_like=trainer.init_state(CFG, jax.random.key(0)),
+        make_data_iter=mk)
+    return state, hist
+
+
+def test_recovery_replays_identically():
+    """A failed-and-recovered run must produce the same per-step losses as an
+    uninterrupted run — checkpoint + counter-based data stream = exact replay."""
+    with tempfile.TemporaryDirectory() as a, tempfile.TemporaryDirectory() as b:
+        _, hist_clean = run((), a)
+        _, hist_fail = run((10,), b)
+        clean = {h["step"]: h["loss"] for h in hist_clean if "loss" in h}
+        failed = {}
+        for h in hist_fail:
+            if "loss" in h:
+                failed[h["step"]] = h["loss"]  # post-recovery overwrites
+        events = [h for h in hist_fail if "event" in h]
+        assert len(events) == 1
+        for s in clean:
+            np.testing.assert_allclose(clean[s], failed[s], rtol=1e-5,
+                                       err_msg=f"step {s}")
+
+
+def test_failure_before_first_checkpoint_raises():
+    with tempfile.TemporaryDirectory() as td:
+        step = make_step()
+        state = trainer.init_state(CFG, jax.random.key(0))
+        mk = make_iter_factory()
+        ckpt = CheckpointManager(td, keep=2, every=100)   # never saves early
+        with pytest.raises(RuntimeError, match="before first checkpoint"):
+            run_training(train_step=step, state=state, data_iter=mk(0),
+                         ckpt=ckpt, num_steps=8,
+                         injector=FailureInjector(fail_at=(2,)),
+                         state_like=state, make_data_iter=mk)
+
+
+def test_elastic_restore_across_shard_counts():
+    """Checkpoint written under one data-shard layout restores under another
+    (shardings are mesh-relative; here we verify the host-side path)."""
+    from repro.checkpoint import restore, save
+    with tempfile.TemporaryDirectory() as td:
+        state = trainer.init_state(CFG, jax.random.key(0))
+        save(td, 3, state)
+        like = trainer.init_state(CFG, jax.random.key(1))
+        restored = restore(td, 3, like)
+        for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -1,0 +1,99 @@
+"""Roofline analyzer tests: flops/bytes/collectives from compiled HLO with
+while-loop trip multipliers (XLA's cost_analysis visits loop bodies once)."""
+import numpy as np
+import pytest
+
+from repro.launch import roofline as rl
+
+
+def test_shape_parsing():
+    assert rl._shape_bytes("f32[16,1024]{1,0}") == 16 * 1024 * 4
+    assert rl._shape_bytes("bf16[8]{0}") == 16
+    assert rl._shape_bytes("(f32[4]{0}, bf16[2,2]{1,0})") == 16 + 8
+    assert rl._shape_elems("pred[10]") == 10
+
+
+def test_group_size_parsing():
+    assert rl._group_size("replica_groups=[16,16]<=[256]") == 16
+    assert rl._group_size("replica_groups={{0,1,2,3}}") == 4
+
+
+def test_analyzer_on_synthetic_hlo():
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant(0)
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    costs = rl.analyze_hlo(hlo)
+    # dot: 2*8*8*8 = 1024 flops x 5 trips
+    assert costs.dot_flops == 1024 * 5
+    # all-reduce: 2 * 256B * 3/4 per trip x 5
+    np.testing.assert_allclose(costs.coll_bytes, 2 * 256 * 0.75 * 5)
+    assert costs.coll_count == 5
+
+
+def test_while_multiplier_scales_with_length(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro.launch import roofline as rl
+def make(L):
+    def f(w, x):
+        def step(x, wl):
+            return jnp.tanh(x @ wl), None
+        x, _ = jax.lax.scan(step, x, w)
+        return x.sum()
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((L, 32, 32), jnp.float32),
+                         jax.ShapeDtypeStruct((8, 32), jnp.float32)).compile()
+    return rl.analyze_hlo(c.as_text())
+a, b = make(2), make(8)
+ratio = b.dot_flops / a.dot_flops
+assert 3.5 < ratio < 4.5, ratio
+print("OK", ratio)
+""", devices=1)
+    assert "OK" in out
+
+
+def test_model_flops():
+    from repro.configs import SHAPES, config
+    cfg = config("tinyllama-1.1b")
+    mf = rl.model_flops(cfg, SHAPES["train_4k"])
+    # 6 * N * tokens
+    expect = 6 * cfg.active_param_count() * 256 * 4096
+    np.testing.assert_allclose(mf, expect)
+    mf_d = rl.model_flops(cfg, SHAPES["decode_32k"])
+    np.testing.assert_allclose(mf_d, 2 * cfg.active_param_count() * 128)
+
+
+def test_moe_active_params():
+    from repro.configs import config
+    cfg = config("phi3.5-moe-42b-a6.6b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert active < total * 0.35          # 2 of 16 experts active
+    assert 35e9 < total < 50e9            # ~42B total
+    assert 5e9 < active < 9e9             # ~6.6B active

@@ -1,0 +1,222 @@
+"""Substrate tests: optimizers, data pipeline, checkpointing, fault tolerance,
+straggler detection, gradient compression."""
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.data import DataConfig, ShardedLMDataset, make_train_iterator
+from repro.optim import (adafactor_init, adafactor_update, adamw_init,
+                         adamw_update, clip_by_global_norm, cosine_warmup)
+from repro.runtime import compression as comp
+from repro.runtime.fault_tolerance import StragglerTracker
+
+KEY = jax.random.key(0)
+
+
+# ------------------------------------------------------------------ optimizers
+
+
+def quad_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.5]), "b": jnp.asarray(2.0),
+            "nested": ({"m": jnp.ones((2, 2))},)}
+
+
+@pytest.mark.parametrize("name,init,update", [
+    ("adamw", adamw_init, adamw_update),
+    ("adafactor", adafactor_init, adafactor_update),
+])
+def test_optimizer_minimizes_quadratic(name, init, update):
+    params = quad_params()
+    state = init(params)
+    loss = lambda p: sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(p))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = update(g, state, params, lr=0.05)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(loss(params)) < 0.05 * float(loss(quad_params()))
+
+
+def test_optimizer_handles_tuple_structures():
+    # xLSTM-style params: tuples as tree structure
+    params = ({"a": jnp.ones((4, 4))}, {"b": jnp.ones((4,))})
+    for init, update in ((adamw_init, adamw_update),
+                         (adafactor_init, adafactor_update)):
+        st_ = init(params)
+        g = jax.tree.map(jnp.ones_like, params)
+        upd, st_ = update(g, st_, params, lr=0.1)
+        assert jax.tree_util.tree_structure(upd) == \
+            jax.tree_util.tree_structure(params)
+
+
+def test_adafactor_factored_state_is_small():
+    params = {"w": jnp.zeros((512, 256))}
+    st_ = adafactor_init(params)
+    sizes = [x.size for x in jax.tree.leaves(st_.inner)]
+    assert sum(sizes) == 512 + 256          # vr + vc, not 512*256
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), np.sqrt(1000.0), rtol=1e-5)
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                         for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_cosine_warmup_schedule():
+    lr0 = cosine_warmup(jnp.asarray(0), peak_lr=1.0, warmup_steps=10,
+                        total_steps=100)
+    lr_peak = cosine_warmup(jnp.asarray(10), peak_lr=1.0, warmup_steps=10,
+                            total_steps=100)
+    lr_end = cosine_warmup(jnp.asarray(100), peak_lr=1.0, warmup_steps=10,
+                           total_steps=100)
+    assert float(lr0) == 0.0
+    np.testing.assert_allclose(float(lr_peak), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(lr_end), 0.1, rtol=1e-4)
+
+
+# ------------------------------------------------------------------------ data
+
+
+def test_data_deterministic_and_shard_disjoint():
+    base = dict(vocab=1000, seq_len=16, global_batch=8, seed=3)
+    full = ShardedLMDataset(DataConfig(**base))
+    s0 = ShardedLMDataset(DataConfig(**base, n_shards=2, shard_id=0))
+    s1 = ShardedLMDataset(DataConfig(**base, n_shards=2, shard_id=1))
+    b_full = full.batch_at(7)
+    b0, b1 = s0.batch_at(7), s1.batch_at(7)
+    np.testing.assert_array_equal(
+        np.concatenate([b0["tokens"], b1["tokens"]]), b_full["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # deterministic across calls
+    np.testing.assert_array_equal(full.batch_at(7)["tokens"],
+                                  b_full["tokens"])
+    # different steps differ
+    assert not np.array_equal(full.batch_at(8)["tokens"], b_full["tokens"])
+
+
+def test_data_targets_shifted():
+    ds = ShardedLMDataset(DataConfig(vocab=50, seq_len=8, global_batch=2))
+    b = ds.batch_at(0)
+    # targets are the next-token stream of the same underlying sequence
+    assert b["tokens"].shape == b["targets"].shape == (2, 8)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_prefetch_iterator_resumes():
+    dc = DataConfig(vocab=100, seq_len=8, global_batch=2)
+    it = make_train_iterator(dc, start_step=5, prefetch=2)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"],
+                                  ShardedLMDataset(dc).batch_at(5)["tokens"])
+
+
+# ------------------------------------------------------------------ checkpoint
+
+
+def tree_example(v=1.0):
+    return {"params": {"w": jnp.full((4, 3), v), "blocks": (jnp.ones((2,)) * v,
+                                                            jnp.zeros((3,)))},
+            "step": jnp.asarray(7)}
+
+
+def test_checkpoint_roundtrip_exact():
+    with tempfile.TemporaryDirectory() as td:
+        t = tree_example(3.5)
+        save(td, 10, t)
+        assert latest_step(td) == 10
+        r = restore(td, 10, tree_example())
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_and_latest():
+    with tempfile.TemporaryDirectory() as td:
+        for s in (1, 2, 3, 4):
+            save(td, s, tree_example(float(s)), keep=2)
+        assert latest_step(td) == 4
+        kept = sorted(p.name for p in Path(td).glob("step_*"))
+        assert len(kept) == 2
+
+
+def test_checkpoint_async_commit_is_atomic():
+    with tempfile.TemporaryDirectory() as td:
+        th = save(td, 5, tree_example(), blocking=False)
+        th.join()
+        # no .tmp dirs survive a completed commit
+        assert not list(Path(td).glob("*.tmp"))
+        assert latest_step(td) == 5
+
+
+def test_checkpoint_manager_every():
+    with tempfile.TemporaryDirectory() as td:
+        m = CheckpointManager(td, keep=3, every=5)
+        saved = [s for s in range(12) if m.maybe_save(s, tree_example())]
+        m.wait()
+        assert saved == [0, 5, 10]
+
+
+# ------------------------------------------------------------- fault tolerance
+
+
+def test_straggler_tracker_flags_sustained_slowness():
+    tr = StragglerTracker(window=50, ratio=2.0, patience=3)
+    for _ in range(20):
+        tr.observe(0.1)
+    assert not tr.should_remesh
+    flags = [tr.observe(0.5) for _ in range(4)]
+    assert all(flags)
+    assert tr.should_remesh
+
+
+def test_straggler_recovers_after_transient():
+    tr = StragglerTracker(window=50, ratio=2.0, patience=5)
+    for _ in range(20):
+        tr.observe(0.1)
+    tr.observe(0.5)
+    for _ in range(10):
+        tr.observe(0.1)
+    assert not tr.should_remesh
+
+
+# ----------------------------------------------------------------- compression
+
+
+def test_quantize_roundtrip_error_bounded():
+    g = jax.random.normal(KEY, (1000,))
+    codes, scale = comp.quantize(g)
+    err = jnp.abs(comp.dequantize(codes, scale) - g)
+    assert float(err.max()) <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_accumulates_residual():
+    grads = {"w": jax.random.normal(KEY, (64,))}
+    res = comp.init_residual(grads)
+    codes, scales, res2 = comp.ef_compress_tree(grads, res)
+    deq = comp.ef_decompress_tree(codes, scales)
+    # residual + dequantized == original (by construction)
+    np.testing.assert_allclose(
+        np.asarray(deq["w"] + res2["w"]), np.asarray(grads["w"]), rtol=1e-5,
+        atol=1e-6)
+
+
+@given(st.integers(2, 10))
+@settings(max_examples=10, deadline=None)
+def test_ef_compression_converges_on_mean(n):
+    # with error feedback, repeated compression of a constant converges
+    target = {"w": jnp.full((8,), 0.123)}
+    res = comp.init_residual(target)
+    total = jnp.zeros((8,))
+    for _ in range(n):
+        codes, scales, res = comp.ef_compress_tree(target, res)
+        total = total + comp.ef_decompress_tree(codes, scales)["w"]
+    np.testing.assert_allclose(np.asarray(total / n),
+                               np.asarray(target["w"]), atol=0.12 / n + 1e-3)

@@ -1,0 +1,231 @@
+"""UPIR pass unit + property tests (C5: IR carries enough for sync/data opt)."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ir
+from repro.core.builder import PlanBuilder
+from repro.core.passes import (eliminate_redundant_sync, fuse_sync, normalize,
+                               plan_memory, propagate_data_attrs, run_pipeline,
+                               split_arrive_wait)
+
+AX = (("data", 16), ("model", 16))
+
+
+def prog_with_syncs(*syncs, loops=(), data=(), ext=None):
+    b = PlanBuilder("t").mesh(AX, teams=(), units=("data", "model"))
+    for d in data:
+        b._data[d.symbol] = d
+    for s in syncs:
+        b._syncs.append(s)
+    for l in loops:
+        b._loops.append(l)
+    b.kernel("k")
+    if ext:
+        b.extension(**ext)
+    return normalize(b.build())
+
+
+def sync(name, **kw):
+    return ir.SyncOp(name=name, **kw)
+
+
+# ------------------------------------------------------------------ sync elim
+
+
+def test_barrier_barrier_collapses():
+    p = prog_with_syncs(sync("barrier", axes=("data",)),
+                        sync("barrier", axes=("data",)))
+    out = eliminate_redundant_sync(p)
+    assert len(ir.find_all(out, ir.SyncOp)) == 1
+
+
+def test_barrier_after_allreduce_removed():
+    p = prog_with_syncs(
+        sync("allreduce", axes=("data",), operation="add", data=("g",)),
+        sync("barrier", axes=("data",)))
+    out = eliminate_redundant_sync(p)
+    names = [s.name for s in ir.find_all(out, ir.SyncOp)]
+    assert names == ["allreduce"]
+
+
+def test_duplicate_allreduce_deduped():
+    s = sync("allreduce", axes=("data",), operation="add", data=("g",))
+    out = eliminate_redundant_sync(prog_with_syncs(s, s))
+    assert len(ir.find_all(out, ir.SyncOp)) == 1
+
+
+def test_barrier_on_wider_axes_kept():
+    p = prog_with_syncs(sync("barrier", axes=("data",)),
+                        sync("barrier", axes=("data", "model")))
+    out = eliminate_redundant_sync(p)
+    assert len(ir.find_all(out, ir.SyncOp)) == 2
+
+
+# ----------------------------------------------------------------- sync fusion
+
+
+def test_reduction_barrier_fuses_to_allreduce():
+    p = prog_with_syncs(
+        sync("allreduce", axes=("data",), operation="add", data=("g",)),
+        sync("barrier", axes=("data",)))
+    out = fuse_sync(p)
+    ops = ir.find_all(out, ir.SyncOp)
+    assert len(ops) == 1 and ops[0].name == "allreduce"
+    assert ir.ext_get(ops[0].extensions, "fused_barrier")
+
+
+def test_bucketing_merges_adjacent_allreduces():
+    p = prog_with_syncs(
+        sync("allreduce", axes=("data",), operation="add", data=("g1",)),
+        sync("allreduce", axes=("data",), operation="add", data=("g2",)))
+    out = fuse_sync(p)
+    ops = ir.find_all(out, ir.SyncOp)
+    assert len(ops) == 1 and ops[0].data == ("g1", "g2")
+    assert ir.ext_get(ops[0].extensions, "bucketed")
+
+
+def test_zero_decomposition_for_fsdp_data():
+    g = ir.DataAttr(symbol="grads", extensions=ir.ext(fsdp=True))
+    p = prog_with_syncs(
+        sync("allreduce", axes=("data",), operation="add", data=("grads",)),
+        data=(g,))
+    out = fuse_sync(p)
+    names = [s.name for s in ir.find_all(out, ir.SyncOp)]
+    assert names == ["reduce_scatter", "all_gather"]
+
+
+# -------------------------------------------------------------------- overlap
+
+
+def test_arrive_wait_split_requires_taskloop():
+    s = sync("allreduce", axes=("data",), operation="add", data=("g",),
+             extensions=ir.ext(overlap_candidate=True))
+    p_no = prog_with_syncs(s)
+    assert all(x.step == "both" for x in
+               ir.find_all(split_arrive_wait(p_no), ir.SyncOp))
+    loop = ir.LoopNode(induction="microbatch", upper=8,
+                       parallel=(ir.Taskloop(num_tasks=8),))
+    p_yes = prog_with_syncs(s, loops=(loop,))
+    steps = [x.step for x in ir.find_all(split_arrive_wait(p_yes), ir.SyncOp)]
+    assert steps == ["arrive-compute", "wait-release"]
+
+
+# ------------------------------------------------------------------ propagate
+
+
+def test_propagate_divisibility_fallback():
+    b = PlanBuilder("t").mesh(AX, units=("data", "model"))
+    b.symbol("params/embed", (49155, 2048), "float32")   # granite vocab: odd
+    b.extension(dist_rules=(("*embed", ((0, "model"), (1, "data"))),))
+    b.kernel("k")
+    out = propagate_data_attrs(normalize(b.build()))
+    attr = {d.symbol: d for d in ir.find_all(out, ir.DataAttr)}["params/embed"]
+    assert attr.distribution == (ir.DataDist(dim=1, axis="data"),)
+    assert ir.ext_get(attr.extensions, "dist_fallback")
+
+
+def test_propagate_multi_axis():
+    b = PlanBuilder("t").mesh((("pod", 2),) + AX, teams=("pod",),
+                              units=("data", "model"))
+    b.symbol("in/tokens", (256, 4096), "int32")
+    b.extension(dist_rules=(("in/tokens", ((0, "pod+data"),)),))
+    b.kernel("k")
+    out = propagate_data_attrs(normalize(b.build()))
+    attr = {d.symbol: d for d in ir.find_all(out, ir.DataAttr)}["in/tokens"]
+    assert attr.distribution == (ir.DataDist(dim=0, axis="pod+data"),)
+
+
+def test_propagate_completes_all_symbols():
+    b = PlanBuilder("t").mesh(AX, units=("data", "model"))
+    b.symbol("w", (64, 64), "float32")
+    b.symbol("b", (64,), "float32")
+    b.kernel("k")
+    out = propagate_data_attrs(normalize(b.build()))
+    syms = {d.symbol for d in ir.find_all(out, ir.DataAttr)}
+    assert {"w", "b"} <= syms
+
+
+# --------------------------------------------------------------------- memory
+
+
+def test_memory_pass_remat_policies():
+    for act, expect in ((16 * 2**30, "full"), (2 * 2**30, "selective"),
+                        (64 * 2**20, "none")):
+        p = prog_with_syncs(ext={"act_bytes": act, "resident_bytes": 4 * 2**30})
+        out = plan_memory(p)
+        assert ir.ext_get(out.extensions, "remat") == expect, (act, expect)
+
+
+def test_memory_pass_donation():
+    d = ir.DataAttr(symbol="state", mapping="tofrom", access="read-write")
+    out = plan_memory(prog_with_syncs(data=(d,)))
+    attr = {a.symbol: a for a in ir.find_all(out, ir.DataAttr)}["state"]
+    assert ir.ext_get(attr.extensions, "donate")
+
+
+# ------------------------------------------------------------------ properties
+
+
+sync_names = st.sampled_from(["barrier", "allreduce", "reduce_scatter",
+                              "all_gather", "broadcast"])
+
+
+@st.composite
+def random_syncs(draw):
+    n = draw(st.integers(0, 8))
+    out = []
+    for i in range(n):
+        name = draw(sync_names)
+        axes = tuple(draw(st.sampled_from([("data",), ("model",),
+                                           ("data", "model")])))
+        if name == "barrier":
+            data = ()
+        else:
+            data = tuple(draw(st.lists(st.sampled_from(["g1", "g2", "g3"]),
+                                       max_size=2, unique=True)))
+        out.append(ir.SyncOp(name=name, axes=axes, data=data,
+                             operation="add" if name != "barrier" else ""))
+    return tuple(out)
+
+
+@given(random_syncs())
+@settings(max_examples=60, deadline=None)
+def test_pipeline_idempotent(syncs):
+    p = prog_with_syncs(*syncs)
+    once = run_pipeline(p)
+    twice = run_pipeline(once)
+    assert once == twice
+
+
+@given(random_syncs())
+@settings(max_examples=60, deadline=None)
+def test_elim_never_increases_syncs_and_keeps_semantics(syncs):
+    p = prog_with_syncs(*syncs)
+    out = eliminate_redundant_sync(p)
+    before = ir.find_all(p, ir.SyncOp)
+    after = ir.find_all(out, ir.SyncOp)
+    assert len(after) <= len(before)
+    # every surviving op existed before (elimination never invents syncs)
+    for s in after:
+        assert s in before
+    # reduced data is never lost: any (name,data,axes) reduced before is
+    # still reduced after (dedup only removes exact duplicates)
+    key = lambda s: (s.name, s.axes, s.operation, s.data, s.step)
+    assert {key(s) for s in after if s.data} == \
+        {key(s) for s in before if s.data}
+
+
+@given(random_syncs())
+@settings(max_examples=60, deadline=None)
+def test_fusion_preserves_reduced_symbols(syncs):
+    p = prog_with_syncs(*syncs)
+    out = fuse_sync(p)
+    def reduced(prog):
+        acc = set()
+        for s in ir.find_all(prog, ir.SyncOp):
+            if s.operation == "add":
+                acc.update(s.data)
+        return acc
+    assert reduced(out) == reduced(p)
