@@ -9,7 +9,10 @@ Sections:
                   (sync counts before/after elimination/fusion/overlap —
                   the paper's Table 1 + §5 claims, measured);
   * roofline    — per-cell roofline terms from the dry-run sweep (§Roofline
-                  of EXPERIMENTS.md; requires experiments/dryrun/*.json).
+                  of EXPERIMENTS.md; requires experiments/dryrun/*.json);
+  * serve       — continuous-batching engine vs sequential serving throughput
+                  (delegates to benchmarks/serve_bench.py; not in the default
+                  section list — run it directly or via --section serve).
 
 Every section prints ``name,us_per_call,derived``-style CSV rows.
 """
@@ -92,7 +95,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--section", choices=("figs13_16", "pass_table",
-                                          "roofline"), default=None)
+                                          "roofline", "serve"), default=None)
     args = ap.parse_args()
     sections = [args.section] if args.section else ["figs13_16", "pass_table",
                                                     "roofline"]
@@ -101,6 +104,9 @@ def main() -> None:
             figs13_16(fast=not args.full)
         elif s == "pass_table":
             pass_table()
+        elif s == "serve":
+            from benchmarks.serve_bench import run_bench
+            run_bench(fast=not args.full)
         else:
             roofline_table()
         print()

@@ -1,69 +1,71 @@
-"""Serving driver: batched prefill + greedy decode with a donated KV cache.
+"""Serving driver: continuous-batching engine vs one-request-at-a-time decode.
 
-    PYTHONPATH=src python examples/serve_decode.py [--tokens 32]
+    PYTHONPATH=src python examples/serve_decode.py [--requests 8 --tokens 16]
 
-Demonstrates the serving path the decode dry-run cells exercise at scale:
-prefill builds the cache sized for the full decode horizon, then the decode
-step (cache donated, one token per sequence per step) runs auto-regressively.
+Requests (mixed generation lengths) flow through the engine's admission queue
+into a fixed-width decode batch; finished sequences free their slot for the
+next queued request without re-jitting. The same requests are then served
+sequentially (the pre-engine path) for comparison. Plans and step functions
+come from the process-wide PlanCache keyed by the canonical UPIR program
+fingerprint — the printed hit rate shows re-lowering being skipped.
 """
 import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import ShapeCfg, smoke_config
+from repro.configs import smoke_config
 from repro.models import api
-from repro.runtime import server
+from repro.runtime.engine import Engine, EngineConfig, serve_sequential
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
-    B, P, T = args.batch, args.prompt_len, args.tokens
-    s_max = P + T
+    bucket = args.prompt_len
+    max_seq = bucket + args.tokens
 
     params = api.init_params(cfg, jax.random.key(0))
-    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
+    engine = Engine(cfg, EngineConfig(slots=args.slots,
+                                      prompt_buckets=(bucket,),
+                                      max_seq=max_seq), params=params)
 
-    shape = ShapeCfg("serve", "decode", s_max, B)
-    prefill_step = jax.jit(
-        lambda p, t: api.prefill(cfg, p, {"tokens": t}, s_max=s_max))
-    decode_step = jax.jit(server.make_decode_step(cfg), donate_argnums=1)
+    rng = np.random.default_rng(0)
+    # mixed generation lengths exercise slot recycling
+    requests = [engine.make_request(
+        rng.integers(0, cfg.vocab, size=bucket).tolist(),
+        int(rng.integers(args.tokens // 2, args.tokens + 1)))
+        for _ in range(args.requests)]
 
-    t0 = time.time()
-    logits, cache = prefill_step(params, prompts)
-    next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None]
-    jax.block_until_ready(next_tok)
-    t_prefill = time.time() - t0
+    # warm up (jit compile) outside the measured run
+    engine.run([engine.make_request([0] * bucket, 2)
+                for _ in range(args.slots)])
+    engine.reset_stats()
 
-    out_tokens = [next_tok]
-    t0 = time.time()
-    for i in range(T - 1):
-        pos = jnp.full((B,), P + i, jnp.int32)
-        tok, _logits, cache = decode_step(params, cache,
-                                          {"tokens": out_tokens[-1],
-                                           "pos": pos})
-        out_tokens.append(tok[:, None].astype(jnp.int32))
-    jax.block_until_ready(out_tokens[-1])
-    t_decode = time.time() - t0
+    engine.run(requests)
+    st = engine.stats()
+    print(f"arch={cfg.name} requests={args.requests} slots={args.slots}")
+    print(f"engine:     {st['tokens_per_s']:8.1f} tok/s  "
+          f"steps={st['decode_steps']} recycles={st['recycles']} "
+          f"occupancy={st['batch_occupancy']:.2f} "
+          f"cache_hit_rate={st['plan_cache']['hit_rate']:.2f}")
 
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={P} generated={T}")
-    print(f"prefill: {t_prefill*1000:.1f} ms   "
-          f"decode: {t_decode/max(T-1,1)*1000:.2f} ms/token")
-    for b in range(min(B, 2)):
-        print(f"seq {b}: {gen[b, :16].tolist()} ...")
+    seq = serve_sequential(cfg, params, requests, max_seq=max_seq,
+                           prompt_buckets=(bucket,))
+    print(f"sequential: {seq['tokens_per_s']:8.1f} tok/s")
+    for r in requests[:2]:
+        print(f"seq {r.rid}: {engine.finalize_request(r)[:12]} ...")
 
 
 if __name__ == "__main__":

@@ -18,8 +18,10 @@ The plan's sharding lookup is pytree-path based: symbols in the IR are
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import OrderedDict
 from fnmatch import fnmatch
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -74,15 +76,19 @@ class LoweredPlan:
     zero: bool                               # RS+AG decomposition present
     compression: Optional[str]               # None | int8
     collectives: Tuple[ir.SyncOp, ...]       # flattened sync schedule
+    fingerprint: str = ""                    # canonical program fingerprint
 
     # ------------------------------------------------------------------ meshes
 
     def make_mesh(self, shape: Optional[Tuple[int, ...]] = None) -> Mesh:
         names = self.mesh_spec.names
         sizes = shape or tuple(s for _, s in self.mesh_spec.axes)
-        return jax.make_mesh(
-            sizes, names,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+        # AxisType landed after jax 0.4.37; older jax means Auto implicitly
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:
+            return jax.make_mesh(
+                sizes, names, axis_types=(axis_type.Auto,) * len(names))
+        return jax.make_mesh(sizes, names)
 
     # ---------------------------------------------------------------- shardings
 
@@ -200,6 +206,14 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
 # ----------------------------------------------------- explicit sync lowering
 
 
+def axis_size(name: str):
+    """Size of a mapped mesh axis; jax.lax.axis_size on new jax, the psum-of-1
+    identity (folded to a constant at trace time) on <= 0.4.x."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 def lower_sync(sync: ir.SyncOp, value, axis_env: Optional[Tuple[str, ...]] = None):
     """Lower one SyncOp to its jax.lax collective (explicit/shard_map backend)."""
     axes = tuple(a for a in sync.axes if axis_env is None or a in axis_env)
@@ -230,7 +244,7 @@ def lower_sync(sync: ir.SyncOp, value, axis_env: Optional[Tuple[str, ...]] = Non
         return jax.tree.map(bcast, value)
     if sync.name in ("shift", "send", "recv"):
         def shift(x):
-            n = jax.lax.axis_size(axes[0])
+            n = axis_size(axes[0])
             perm = [(i, (i + 1) % n) for i in range(n)]
             return jax.lax.ppermute(x, axes[0], perm)
         return jax.tree.map(shift, value)
@@ -242,3 +256,81 @@ def lower_sync(sync: ir.SyncOp, value, axis_env: Optional[Tuple[str, ...]] = Non
 
 class UnsupportedOnTarget(NotImplementedError):
     pass
+
+
+# ------------------------------------------------------------------ plan cache
+
+
+class PlanCache:
+    """Process-wide cache of compiled serving artifacts.
+
+    Entries are keyed by a canonical ``Program`` fingerprint
+    (``printer.program_fingerprint``) plus whatever distinguishes the compiled
+    artifact — backend, mesh shape, batch geometry — so a repeat request for the
+    same (config, shape, backend, mesh) skips the pass pipeline, the
+    IR -> plan extraction, AND the jax.jit re-trace. LRU-bounded; hit/miss
+    counters feed the serving engine's stats.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._entries: "OrderedDict[Any, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+
+    def get_or_build(self, key, build: Callable[[], Any]):
+        """Return the cached value for ``key``, building (and caching) on miss."""
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.misses += 1
+        value = build()
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+        return value
+
+    def lowered_plan(self, prog: ir.Program, *, backend: str = "jit",
+                     mesh_shape: Optional[Tuple[Tuple[str, int], ...]] = None,
+                     trace: Optional[list] = None) -> LoweredPlan:
+        """Optimized-IR + LoweredPlan for ``prog``, cached by fingerprint.
+
+        On a hit the unified pass pipeline does not run at all; ``trace`` (the
+        pass-trace list) only grows on misses, which is itself a visible
+        witness of cache effectiveness.
+        """
+        from .passes import run_pipeline
+        from .printer import program_fingerprint
+        fp = program_fingerprint(prog)
+
+        def build() -> LoweredPlan:
+            plan = plan_from_program(run_pipeline(prog, trace=trace))
+            plan.fingerprint = fp
+            return plan
+
+        return self.get_or_build(("plan", fp, backend, mesh_shape), build)
+
+    def stats(self) -> Dict[str, Any]:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._entries),
+                "hit_rate": self.hits / total if total else 0.0}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+
+_PLAN_CACHE = PlanCache()
+
+
+def default_plan_cache() -> PlanCache:
+    """The process-wide PlanCache shared by server/engine entry points."""
+    return _PLAN_CACHE

@@ -18,6 +18,7 @@ used by tests as a second witness of the C1 claim, and by `examples/upir_showcas
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Dict, List
 
 from . import ir
@@ -26,6 +27,18 @@ from . import ir
 def to_mlir(prog: ir.Program) -> str:
     pr = _Printer(prog)
     return pr.render()
+
+
+def program_fingerprint(prog: ir.Program) -> str:
+    """Canonical ``Program`` fingerprint: sha256 of the deterministic MLIR
+    rendering.
+
+    Because the renderer is deterministic (sorted symbol table, sorted data
+    attrs, fixed SSA numbering), two structurally equal programs — however
+    they were built — always fingerprint identically. ``PlanCache`` in
+    ``core.lower`` keys compiled serving plans on this.
+    """
+    return hashlib.sha256(to_mlir(prog).encode("utf-8")).hexdigest()[:16]
 
 
 class _Printer:

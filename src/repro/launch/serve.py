@@ -1,10 +1,16 @@
-"""Serving launcher: batched prefill + autoregressive decode.
+"""Serving launcher: continuous-batching engine over the UPIR decode plan.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
-        --batch 4 --prompt-len 32 --tokens 32
+        --requests 8 --slots 4 --prompt-len 16 --tokens 16
 
-Uses the same UPIR decode plan as the dry-run cells (flash-decode seq-sharded
-cache, donated per step). On the CPU container use --smoke.
+Requests enter the engine's admission queue; prefill fills free decode slots
+and a fixed-width decode batch advances every active sequence one token per
+step, recycling slots as sequences finish (see ``runtime.engine``). All
+lowering + jit artifacts come from the process-wide PlanCache, so repeated
+launches in one process never re-run the pass pipeline.
+
+``--sequential`` also runs the old one-request-at-a-time path for comparison.
+On the CPU container use --smoke.
 """
 import argparse
 
@@ -13,53 +19,65 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="KV horizon (default: prompt bucket + tokens)")
+    ap.add_argument("--sequential", action="store_true",
+                    help="also time the pre-engine one-at-a-time path")
     args = ap.parse_args()
 
-    import time
+    import numpy as np
 
     import jax
-    import jax.numpy as jnp
 
-    from ..configs import ShapeCfg, config, smoke_config
+    from ..configs import config, smoke_config
     from ..models import api
-    from ..runtime import server
+    from ..runtime.engine import Engine, EngineConfig, serve_sequential
 
     cfg = smoke_config(args.arch) if args.smoke else config(args.arch)
-    B, P, T = args.batch, args.prompt_len, args.tokens
-    s_max = P + T
+    bucket = 1 << max(args.prompt_len - 1, 1).bit_length()
+    max_seq = args.max_seq or bucket + args.tokens
 
     params = api.init_params(cfg, jax.random.key(0))
-    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab)
-    batch = {"tokens": prompts}
-    if cfg.encdec is not None:
-        batch["audio_embeds"] = jax.random.normal(
-            jax.random.key(2), (B, cfg.frontend.tokens, cfg.d_model)) * 0.02
+    engine = Engine(cfg, EngineConfig(slots=args.slots,
+                                      prompt_buckets=(bucket,),
+                                      max_seq=max_seq),
+                    params=params)
 
-    prefill_step = jax.jit(lambda p, b: api.prefill(cfg, p, b, s_max=s_max))
-    decode_step = jax.jit(server.make_decode_step(cfg), donate_argnums=1)
+    rng = np.random.default_rng(0)
+    requests = [
+        engine.make_request(
+            rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
+            args.tokens)
+        for _ in range(args.requests)]
 
-    t0 = time.time()
-    logits, cache = prefill_step(params, batch)
-    tok = jnp.argmax(logits[:, -1].astype(jnp.float32), -1)[:, None] \
-        .astype(jnp.int32)
-    jax.block_until_ready(tok)
-    print(f"prefill({B}x{P}): {(time.time() - t0) * 1e3:.1f} ms")
+    # warm up (jit compile) outside the measured run
+    engine.run([engine.make_request([0] * args.prompt_len, 2)
+                for _ in range(args.slots)])
+    engine.reset_stats()
 
-    out = [tok]
-    t0 = time.time()
-    for i in range(T - 1):
-        pos = jnp.full((B,), P + i, jnp.int32)
-        nxt, _l, cache = decode_step(params, cache,
-                                     {"tokens": out[-1], "pos": pos})
-        out.append(nxt[:, None].astype(jnp.int32))
-    jax.block_until_ready(out[-1])
-    dt = (time.time() - t0) / max(T - 1, 1)
-    print(f"decode: {dt * 1e3:.2f} ms/token ({B / dt:.1f} tok/s aggregate)")
-    gen = jnp.concatenate(out, axis=1)
-    print("sample:", gen[0, :16].tolist())
+    engine.run(requests)
+    st = engine.stats()
+    print(f"engine: arch={cfg.name} requests={args.requests} "
+          f"slots={args.slots} prompt={args.prompt_len} tokens={args.tokens}")
+    print(f"  completed={st['completed']} rejected={st['rejected']} "
+          f"decode_steps={st['decode_steps']} recycles={st['recycles']}")
+    print(f"  occupancy={st['batch_occupancy']:.2f} "
+          f"throughput={st['tokens_per_s']:.1f} tok/s "
+          f"plan_cache_hit_rate={st['plan_cache']['hit_rate']:.2f}")
+    done = [r for r in requests if r.state == "done"]
+    if done:
+        print("  sample:", engine.finalize_request(done[0])[:16])
+
+    if args.sequential:
+        seq = serve_sequential(cfg, params, requests, max_seq=max_seq,
+                               prompt_buckets=(bucket,))
+        print(f"sequential: throughput={seq['tokens_per_s']:.1f} tok/s "
+              f"({st['tokens_per_s'] / max(seq['tokens_per_s'], 1e-9):.2f}x "
+              f"engine speedup)")
 
 
 if __name__ == "__main__":

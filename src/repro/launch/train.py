@@ -40,8 +40,8 @@ def main():
 
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from .mesh import make_mesh
+        mesh = make_mesh((d, m), ("data", "model"))
         with mesh:
             step, _, (state_sh, batch_sh) = trainer.jit_train_step(
                 cfg, plan, mesh, total_steps=args.steps)

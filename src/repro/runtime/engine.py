@@ -1,0 +1,434 @@
+"""Continuous-batching serving engine on top of ``LoweredPlan``.
+
+The missing runtime layer between the UPIR compiler and "heavy traffic":
+requests enter a bounded queue (admission control), prefill one-at-a-time into
+a **fixed-width decode batch** of slots, and decode advances every active slot
+one token per step. When a sequence finishes, its slot is freed and refilled
+from the queue on the next step — the decode batch shape never changes, so
+slot recycling never re-jits.
+
+All compiled artifacts route through ``core.lower.PlanCache``:
+
+  * the optimized UPIR program + ``LoweredPlan`` for the decode shape, keyed
+    by the canonical ``program_fingerprint`` (a warm cache skips the whole
+    pass pipeline on repeat (config, shape, backend, mesh) requests);
+  * the jitted prefill (per prompt bucket), decode, and cache slot-insert
+    step functions.
+
+Prompts are right-padded to the nearest configured bucket so each bucket
+compiles exactly once; generation starts after the padded prompt (the
+sequential baseline below pads identically, so comparisons are exact).
+
+Engine events and stats flow through the same trace machinery the pass
+pipeline uses: a list of dicts, one per event, interleaved with the per-pass
+entries that ``run_pipeline`` appends when the plan is first compiled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..core.lower import PlanCache, default_plan_cache
+from ..models import api
+
+# ----------------------------------------------------------------- requests
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``tokens_out`` is filled by the engine."""
+
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    state: str = "new"             # new | queued | active | done | rejected
+    reason: str = ""               # rejection reason
+    bucket: int = 0                # padded prompt length
+    slot: int = -1                 # decode slot while active
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    # engine-internal countdown of decode steps remaining
+    _remaining: int = 0
+    _first_tok: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    slots: int = 4                     # fixed decode batch width
+    max_queue: int = 64                # admission-control queue bound
+    prompt_buckets: Tuple[int, ...] = (16, 32, 64)
+    max_seq: int = 128                 # KV-cache horizon per slot
+    backend: str = "jit"               # single-process jax.jit serving
+    keep_results: int = 4096           # unfinalized request outputs retained
+    max_trace_events: int = 10000      # trace ring bound (long-lived process)
+
+
+# ------------------------------------------------------------------- engine
+
+
+class Engine:
+    """Slot-based continuous-batching engine for decoder-only families."""
+
+    def __init__(self, cfg: ArchConfig, ecfg: EngineConfig = EngineConfig(), *,
+                 params=None, key=None, plan_cache: Optional[PlanCache] = None,
+                 trace: Optional[list] = None):
+        if cfg.encdec is not None:
+            raise NotImplementedError(
+                "encoder-decoder serving needs per-slot encoder memory "
+                "(ROADMAP: multi-modal engine)")
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.plan_cache = plan_cache if plan_cache is not None \
+            else default_plan_cache()
+        self.trace = trace if trace is not None else []
+
+        # the decode plan: UPIR program -> pass pipeline -> LoweredPlan,
+        # cached by canonical fingerprint (warm engines skip re-lowering)
+        from . import server
+        self.shape = ShapeCfg(f"engine_b{ecfg.slots}", "decode",
+                              ecfg.max_seq, ecfg.slots)
+        self.plan = server.serving_plan(cfg, self.shape, backend=ecfg.backend,
+                                        plan_cache=self.plan_cache,
+                                        trace=self.trace)
+
+        self.params = params if params is not None \
+            else api.init_params(cfg, key if key is not None else jax.random.key(0))
+
+        fkey = (self.plan.fingerprint, cfg, ecfg.backend, ecfg.slots,
+                ecfg.max_seq)
+        self._decode = self.plan_cache.get_or_build(
+            fkey + ("decode",), self._build_decode)
+        self._insert = self.plan_cache.get_or_build(
+            fkey + ("insert",), self._build_insert)
+        self._fkey = fkey
+
+        # mutable serving state
+        self.cache = api.init_cache(cfg, ecfg.slots, ecfg.max_seq)
+        self.tokens = jnp.zeros((ecfg.slots, 1), jnp.int32)
+        self.pos = np.zeros((ecfg.slots,), np.int32)
+        self.queue: Deque[Request] = deque()
+        self.slots_req: List[Optional[Request]] = [None] * ecfg.slots
+        self._slot_used = [False] * ecfg.slots
+        self._toklog: List[Tuple[Any, Tuple[int, ...]]] = []
+        self._pending_tokens: Dict[int, List[int]] = {}
+        self._rid = 0
+        # counters
+        self.decode_steps = 0
+        self.prefills = 0
+        self.recycles = 0
+        self.rejected = 0
+        self.submitted = 0
+        self.completed = 0
+        self.tokens_generated = 0
+        self._occupancy_sum = 0
+        self.elapsed_s = 0.0
+
+    # ------------------------------------------------------------ step fns
+
+    def _build_decode(self):
+        cfg = self.cfg
+
+        def step(params, cache, tokens, pos):
+            logits, cache = api.decode_step(cfg, params, cache,
+                                            {"tokens": tokens, "pos": pos})
+            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    def _cache_batch_dims(self):
+        """Per-leaf batch dim of the cache pytree, found structurally: the dim
+        whose extent tracks B (works for KV, conv/ssm state, and xLSTM cells
+        alike, whatever the family's layout)."""
+        a = api.cache_specs(self.cfg, 2, self.ecfg.max_seq)
+        b = api.cache_specs(self.cfg, 3, self.ecfg.max_seq)
+
+        def bdim(x, y):
+            for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+                if p != q:
+                    return i
+            return -1  # batch-independent leaf: keep the engine's copy
+
+        return jax.tree.map(bdim, a, b)
+
+    def _build_insert(self):
+        bdims = self._cache_batch_dims()
+
+        def insert(cache, one, slot):
+            def leaf(c, o, d):
+                if d < 0:
+                    return c
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, o.astype(c.dtype), slot, axis=d)
+            return jax.tree.map(leaf, cache, one, bdims)
+
+        return jax.jit(insert, donate_argnums=(0,))
+
+    def _prefill_fn(self, bucket: int):
+        cfg, s_max = self.cfg, self.ecfg.max_seq
+
+        def build():
+            def pre(params, tokens):
+                logits, cache = api.prefill(cfg, params, {"tokens": tokens},
+                                            s_max=s_max)
+                nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+                return nxt.astype(jnp.int32), cache
+            return jax.jit(pre)
+
+        return self.plan_cache.get_or_build(
+            self._fkey + ("prefill", bucket), build)
+
+    # ------------------------------------------------------------ admission
+
+    def make_request(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
+        self._rid += 1
+        return Request(rid=self._rid, prompt=list(prompt),
+                       max_new_tokens=max_new_tokens)
+
+    def submit(self, req: Request) -> bool:
+        """Admission control: bounded queue + horizon check. False = rejected."""
+        req.t_submit = time.perf_counter()
+        self.submitted += 1
+        bucket = next((b for b in sorted(self.ecfg.prompt_buckets)
+                       if b >= len(req.prompt)), None)
+        if bucket is None:
+            return self._reject(req, f"prompt len {len(req.prompt)} exceeds "
+                                     f"largest bucket")
+        if bucket + req.max_new_tokens > self.ecfg.max_seq:
+            return self._reject(req, f"bucket {bucket} + {req.max_new_tokens} "
+                                     f"new tokens exceeds max_seq "
+                                     f"{self.ecfg.max_seq}")
+        if req.max_new_tokens < 1:
+            return self._reject(req, "max_new_tokens must be >= 1")
+        if len(self.queue) >= self.ecfg.max_queue:
+            return self._reject(req, "queue full")
+        req.bucket = bucket
+        req.state = "queued"
+        self.queue.append(req)
+        self.trace.append({"event": "submit", "rid": req.rid,
+                           "bucket": bucket, "queue_depth": len(self.queue)})
+        return True
+
+    def _reject(self, req: Request, reason: str) -> bool:
+        req.state, req.reason = "rejected", reason
+        self.rejected += 1
+        self.trace.append({"event": "reject", "rid": req.rid, "reason": reason})
+        return False
+
+    # ------------------------------------------------------------ serving
+
+    def _admit_into_free_slots(self) -> None:
+        for i in range(self.ecfg.slots):
+            while self.slots_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                toks = np.zeros((req.bucket,), np.int32)
+                toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
+                nxt0, one = self._prefill_fn(req.bucket)(
+                    self.params, jnp.asarray(toks)[None, :])
+                self.cache = self._insert(self.cache, one, i)
+                self.tokens = self.tokens.at[i, 0].set(nxt0[0])
+                self.pos[i] = req.bucket
+                self.prefills += 1
+                recycled = self._slot_used[i]
+                if recycled:
+                    self.recycles += 1
+                self._slot_used[i] = True
+                req.state, req.slot = "active", i
+                req._first_tok = nxt0
+                req._remaining = req.max_new_tokens - 1
+                self.trace.append({"event": "admit", "rid": req.rid,
+                                   "slot": i, "recycled": recycled})
+                if req._remaining <= 0:
+                    self._finish(req)      # 1-token request: done at prefill
+                else:
+                    self.slots_req[i] = req
+
+    def _finish(self, req: Request) -> None:
+        req.state = "done"
+        req.t_done = time.perf_counter()
+        self.completed += 1
+        self.tokens_generated += req.max_new_tokens
+        if req.slot >= 0 and self.slots_req[req.slot] is req:
+            self.slots_req[req.slot] = None
+        self.trace.append({"event": "finish", "rid": req.rid,
+                           "slot": req.slot})
+
+    def step(self) -> int:
+        """One engine iteration: refill free slots, then one decode step for
+        the whole batch. Returns the number of active slots decoded."""
+        self._admit_into_free_slots()
+        active = [i for i in range(self.ecfg.slots)
+                  if self.slots_req[i] is not None]
+        if not active:
+            return 0
+        nxt, self.cache = self._decode(self.params, self.cache, self.tokens,
+                                       jnp.asarray(self.pos))
+        self.tokens = nxt[:, None]
+        rids = tuple(self.slots_req[i].rid if self.slots_req[i] is not None
+                     else -1 for i in range(self.ecfg.slots))
+        self._toklog.append((nxt, rids))
+        self.decode_steps += 1
+        self._occupancy_sum += len(active)
+        for i in active:
+            req = self.slots_req[i]
+            self.pos[i] += 1
+            req._remaining -= 1
+            if req._remaining <= 0:
+                self._finish(req)
+        return len(active)
+
+    def run(self, requests: Sequence[Request] = (), *,
+            max_steps: int = 1_000_000) -> List[Request]:
+        """Submit ``requests`` and drive the engine until drained."""
+        for r in requests:
+            self.submit(r)
+        t0 = time.perf_counter()
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slots_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        jax.block_until_ready(self.tokens)
+        self.elapsed_s += time.perf_counter() - t0
+        self._collect_tokens()
+        self.trace.append({"event": "stats", **self.stats()})
+        self._bound_state()
+        return list(requests)
+
+    def _bound_state(self) -> None:
+        """Keep a long-lived engine's memory flat: evict the oldest
+        unfinalized outputs and oldest trace events beyond the config bounds."""
+        while len(self._pending_tokens) > self.ecfg.keep_results:
+            self._pending_tokens.pop(next(iter(self._pending_tokens)))
+        excess = len(self.trace) - self.ecfg.max_trace_events
+        if excess > 0:
+            del self.trace[:excess]
+
+    def _collect_tokens(self) -> None:
+        """Distribute the device-side token log into per-request outputs.
+        Done once, after the decode loop — the hot loop never syncs to host."""
+        if not self._toklog:
+            return
+        toks = np.asarray(jnp.stack([t for t, _ in self._toklog]))
+        for srow, rids in zip(toks, (r for _, r in self._toklog)):
+            for slot, rid in enumerate(rids):
+                if rid >= 0:
+                    self._pending_tokens.setdefault(rid, []).append(
+                        int(srow[slot]))
+        self._toklog = []
+
+    def finalize_request(self, req: Request) -> List[int]:
+        """First token (from prefill logits) + decode-step tokens."""
+        if not req.tokens_out:
+            out: List[int] = []
+            if req._first_tok is not None:
+                out.append(int(np.asarray(req._first_tok)[0]))
+                req._first_tok = None
+            out.extend(self._pending_tokens.pop(req.rid, []))
+            req.tokens_out = out
+        return req.tokens_out
+
+    # -------------------------------------------------------------- stats
+
+    def reset_stats(self) -> None:
+        """Zero the counters (keep compiled artifacts) — call after warmup so
+        throughput numbers exclude jit compilation."""
+        self.decode_steps = 0
+        self.prefills = 0
+        self.recycles = 0
+        self.rejected = 0
+        self.submitted = 0
+        self.completed = 0
+        self.tokens_generated = 0
+        self._occupancy_sum = 0
+        self.elapsed_s = 0.0
+
+    def stats(self) -> Dict[str, Any]:
+        occ = (self._occupancy_sum / self.decode_steps / self.ecfg.slots
+               if self.decode_steps else 0.0)
+        return {
+            "queue_depth": len(self.queue),
+            "active_slots": sum(1 for r in self.slots_req if r is not None),
+            "slots": self.ecfg.slots,
+            "decode_steps": self.decode_steps,
+            "prefills": self.prefills,
+            "recycles": self.recycles,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "batch_occupancy": occ,
+            "tokens_generated": self.tokens_generated,
+            "elapsed_s": self.elapsed_s,
+            "tokens_per_s": (self.tokens_generated / self.elapsed_s
+                             if self.elapsed_s else 0.0),
+            "plan_cache": self.plan_cache.stats(),
+        }
+
+
+# ------------------------------------------------------- sequential baseline
+
+
+def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
+                     max_seq: int, prompt_buckets: Tuple[int, ...] = (16, 32, 64),
+                     warmup: bool = True) -> Dict[str, Any]:
+    """The pre-engine path: one request at a time, B=1 prefill + B=1 decode
+    loop. Pads prompts to the same buckets as the engine so token streams are
+    comparable; ``warmup`` compiles both steps before the timed region.
+    Returns per-request tokens + aggregate throughput."""
+    def pre(params, tokens):
+        logits, cache = api.prefill(cfg, params, {"tokens": tokens},
+                                    s_max=max_seq)
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    def dec(params, cache, tokens, pos):
+        logits, cache = api.decode_step(cfg, params, cache,
+                                        {"tokens": tokens, "pos": pos})
+        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    prefill_fn = jax.jit(pre)
+    decode_fn = jax.jit(dec, donate_argnums=(1,))
+
+    if warmup and requests:
+        for b in {next((b for b in sorted(prompt_buckets)
+                        if b >= len(r.prompt)), None) for r in requests}:
+            if b is None:
+                continue
+            nxt, cache = prefill_fn(params, jnp.zeros((1, b), jnp.int32))
+            nxt, cache = decode_fn(params, cache, nxt[:, None],
+                                   jnp.full((1,), b, jnp.int32))
+            jax.block_until_ready(nxt)
+
+    outputs: Dict[int, List[int]] = {}
+    total = 0
+    t0 = time.perf_counter()
+    for req in requests:
+        bucket = next((b for b in sorted(prompt_buckets)
+                       if b >= len(req.prompt)), None)
+        if bucket is None or bucket + req.max_new_tokens > max_seq:
+            outputs[req.rid] = []
+            continue
+        toks = np.zeros((bucket,), np.int32)
+        toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
+        nxt, cache = prefill_fn(params, jnp.asarray(toks)[None, :])
+        gen = [nxt]
+        for i in range(req.max_new_tokens - 1):
+            pos = jnp.full((1,), bucket + i, jnp.int32)
+            nxt, cache = decode_fn(params, cache, gen[-1][:, None], pos)
+            gen.append(nxt)
+        jax.block_until_ready(gen[-1])
+        outputs[req.rid] = [int(np.asarray(g)[0]) for g in gen]
+        total += req.max_new_tokens
+    elapsed = time.perf_counter() - t0
+    return {"tokens": outputs, "tokens_generated": total,
+            "elapsed_s": elapsed,
+            "tokens_per_s": total / elapsed if elapsed else 0.0}

@@ -26,7 +26,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..configs.base import ArchConfig
-from ..core.lower import LoweredPlan
+from ..core.lower import LoweredPlan, axis_size
 from ..models import api
 from ..optim import clip_by_global_norm, cosine_warmup, make_optimizer
 from . import compression as comp
@@ -95,7 +95,7 @@ def make_explicit_train_step(cfg: ArchConfig, plan: LoweredPlan, mesh: Mesh,
             else:
                 grads = jax.tree.map(lambda g: jax.lax.psum(g, data_axis),
                                      grads)
-        n_data = jax.lax.axis_size(data_axis)
+        n_data = axis_size(data_axis)
         grads = jax.tree.map(lambda g: g / n_data, grads)
 
         grads, gnorm = clip_by_global_norm(grads, grad_clip)

@@ -4,10 +4,16 @@ Decode shards the KV cache's sequence dim over the ``model`` axis (UPIR seq
 worksharing loop) — flash-decode — and batch over ``data``; the cache is donated
 every step. Prefill is the forward pass that also emits the cache with the same
 sharding, so prefill -> decode hand-off never reshards.
+
+Serving entry points route through ``core.lower.PlanCache``: ``serving_plan``
+compiles (config x shape x backend x mesh) exactly once per process, and the
+jitted step builders below accept a ``plan_cache`` so repeat requests reuse
+the traced functions. The continuous-batching layer above this module lives in
+``runtime.engine``.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,8 +21,25 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, SHAPES, ShapeCfg, input_specs
 from ..core.act_sharding import activation_shardings
-from ..core.lower import LoweredPlan
+from ..core.lower import LoweredPlan, PlanCache, default_plan_cache
 from ..models import api
+
+
+def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
+                 mesh=None, plan_cache: Optional[PlanCache] = None,
+                 trace: Optional[list] = None) -> LoweredPlan:
+    """(config, shape, backend, mesh) -> LoweredPlan, via the PlanCache.
+
+    Builds the UPIR program for the serving step and asks the cache for its
+    optimized/lowered form; a warm cache skips the pass pipeline entirely
+    (the hit is visible in ``plan_cache.stats()``).
+    """
+    from ..core.plans import build_program
+    cache = plan_cache if plan_cache is not None else default_plan_cache()
+    mesh_shape = tuple(mesh.shape.items()) if mesh is not None else None
+    prog = build_program(cfg, shape)
+    return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
+                              trace=trace)
 
 
 def make_prefill_step(cfg: ArchConfig, shape: ShapeCfg,
@@ -39,7 +62,18 @@ def make_decode_step(cfg: ArchConfig, sample: str = "greedy",
     return decode_step
 
 
-def jit_decode_step(cfg: ArchConfig, plan: LoweredPlan, mesh, shape: ShapeCfg):
+def _step_cache_key(kind: str, cfg: ArchConfig, plan: LoweredPlan, mesh,
+                    shape: ShapeCfg):
+    return ("step", kind, plan.fingerprint, cfg, shape.name, shape.kind,
+            shape.seq_len, shape.global_batch, tuple(mesh.shape.items()))
+
+
+def jit_decode_step(cfg: ArchConfig, plan: LoweredPlan, mesh, shape: ShapeCfg,
+                    plan_cache: Optional[PlanCache] = None):
+    if plan_cache is not None:
+        return plan_cache.get_or_build(
+            _step_cache_key("decode", cfg, plan, mesh, shape),
+            lambda: jit_decode_step(cfg, plan, mesh, shape))
     from ..core.plans import act_shardings
     step = make_decode_step(cfg, act_specs=act_shardings(plan, cfg, mesh,
                                                          "decode"))
@@ -62,9 +96,16 @@ def jit_decode_step(cfg: ArchConfig, plan: LoweredPlan, mesh, shape: ShapeCfg):
 
 
 def jit_prefill_step(cfg: ArchConfig, plan: LoweredPlan, mesh, shape: ShapeCfg,
-                     decode_plan: LoweredPlan = None):
+                     decode_plan: LoweredPlan = None,
+                     plan_cache: Optional[PlanCache] = None):
     """Prefill jit; cache out_shardings follow the decode plan so hand-off is
     reshard-free."""
+    if plan_cache is not None:
+        dfp = decode_plan.fingerprint if decode_plan is not None else ""
+        return plan_cache.get_or_build(
+            _step_cache_key("prefill", cfg, plan, mesh, shape) + (dfp,),
+            lambda: jit_prefill_step(cfg, plan, mesh, shape,
+                                     decode_plan=decode_plan))
     from ..core.plans import act_shardings
     step = make_prefill_step(cfg, shape,
                              act_specs=act_shardings(plan, cfg, mesh,

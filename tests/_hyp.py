@@ -1,0 +1,85 @@
+"""Optional-hypothesis shim.
+
+``from _hyp import given, settings, st`` gives the real hypothesis API when
+the package is installed. On a bare interpreter (the tier-1 CPU container has
+no hypothesis) it degrades to a deterministic fixed-seed fallback: ``given``
+re-runs the test body over a bounded number of draws from a seeded PRNG, so
+the property tests still execute real examples instead of being skipped.
+
+Only the strategy surface this repo uses is emulated: ``integers``,
+``sampled_from``, ``lists`` and ``composite``.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_MAX_EXAMPLES = 10   # keep bare-interpreter runs fast
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None, unique=False):
+            hi = max_size if max_size is not None else min_size + 4
+
+            def draw(rng):
+                out = []
+                for _ in range(rng.randint(min_size, hi)):
+                    v = elements.draw(rng)
+                    if unique and v in out:
+                        continue
+                    out.append(v)
+                return out
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def draw_fn(rng):
+                    return fn(lambda strat: strat.draw(rng), *args, **kwargs)
+                return _Strategy(draw_fn)
+            return make
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # no functools.wraps: copying __wrapped__ would make pytest see
+            # the original signature and hunt for fixtures named after the
+            # drawn arguments
+            def wrapper():
+                n = min(getattr(fn, "_fallback_max_examples",
+                                _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = random.Random(0)
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strategies))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -12,7 +12,8 @@ from repro.data import DataConfig, ShardedLMDataset
 from repro.runtime import trainer
 cfg = smoke_config("tinyllama-1.1b")
 shape = ShapeCfg("smoke", "train", 32, 8)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 plan = plans.make_plan(cfg, shape)
 state = trainer.init_state(cfg, jax.random.key(0))
 ds = ShardedLMDataset(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
@@ -93,8 +94,8 @@ from repro.data import DataConfig, ShardedLMDataset
 from repro.runtime import trainer
 cfg = smoke_config("tinyllama-1.1b")
 shape = ShapeCfg("smoke", "train", 32, 8)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 plan = plans.make_plan(cfg, shape)
 with mesh:
     step, (sspecs, bspecs), (state_sh, batch_sh) = \\
@@ -123,7 +124,8 @@ from functools import partial
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-mesh = jax.make_mesh((4,), ("stage",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("stage",))
 L, D, B, MB = 4, 16, 8, 4     # 4 stages, 4 microbatches
 key = jax.random.key(0)
 Ws = jax.random.normal(key, (L, D, D)) * 0.3

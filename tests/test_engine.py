@@ -1,0 +1,178 @@
+"""Continuous-batching engine + PlanCache: fingerprint stability, hit/miss
+accounting, slot recycling under mixed-length decode, and engine-vs-sequential
+token equality."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ShapeCfg, smoke_config
+from repro.core.lower import PlanCache
+from repro.core.passes import run_pipeline
+from repro.core.plans import build_program
+from repro.core.printer import program_fingerprint
+from repro.models import api
+from repro.runtime.engine import Engine, EngineConfig, serve_sequential
+
+CFG = smoke_config("tinyllama-1.1b")
+BUCKET = 8
+TOKENS = 6
+MAX_SEQ = BUCKET + TOKENS
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def decode_shape(batch=2):
+    return ShapeCfg(f"engine_b{batch}", "decode", MAX_SEQ, batch)
+
+
+# ------------------------------------------------------------- fingerprints
+
+
+def test_fingerprint_stable_across_builds():
+    a = build_program(CFG, decode_shape())
+    b = build_program(CFG, decode_shape())
+    assert program_fingerprint(a) == program_fingerprint(b)
+
+
+def test_fingerprint_stable_across_pass_pipeline():
+    a = run_pipeline(build_program(CFG, decode_shape()))
+    b = run_pipeline(build_program(CFG, decode_shape()))
+    assert program_fingerprint(a) == program_fingerprint(b)
+
+
+def test_fingerprint_distinguishes_shapes():
+    a = build_program(CFG, decode_shape(batch=2))
+    b = build_program(CFG, decode_shape(batch=4))
+    assert program_fingerprint(a) != program_fingerprint(b)
+
+
+# --------------------------------------------------------------- plan cache
+
+
+def test_plan_cache_hit_miss():
+    cache = PlanCache()
+    p1 = cache.lowered_plan(build_program(CFG, decode_shape()))
+    assert (cache.hits, cache.misses) == (0, 1)
+    p2 = cache.lowered_plan(build_program(CFG, decode_shape()))
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert p1 is p2
+    assert p1.fingerprint
+    assert cache.stats()["hit_rate"] == 0.5
+
+
+def test_plan_cache_miss_on_different_key():
+    cache = PlanCache()
+    cache.lowered_plan(build_program(CFG, decode_shape()))
+    cache.lowered_plan(build_program(CFG, decode_shape()), backend="gspmd")
+    cache.lowered_plan(build_program(CFG, decode_shape(batch=4)))
+    assert cache.misses == 3 and cache.hits == 0
+
+
+def test_plan_cache_skips_pipeline_on_hit():
+    cache = PlanCache()
+    trace = []
+    cache.lowered_plan(build_program(CFG, decode_shape()), trace=trace)
+    n_pass_entries = len(trace)
+    assert n_pass_entries > 0
+    cache.lowered_plan(build_program(CFG, decode_shape()), trace=trace)
+    assert len(trace) == n_pass_entries  # warm hit: pipeline never ran
+
+
+def test_plan_cache_lru_bound():
+    cache = PlanCache(maxsize=2)
+    for b in (2, 3, 4):
+        cache.lowered_plan(build_program(CFG, decode_shape(batch=b)))
+    assert cache.stats()["size"] == 2
+
+
+# ------------------------------------------------------------------- engine
+
+
+def mk_engine(params, slots=2, max_queue=64):
+    return Engine(CFG, EngineConfig(slots=slots, max_queue=max_queue,
+                                    prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ),
+                  params=params, plan_cache=PlanCache())
+
+
+def prompts(n, length=BUCKET, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, CFG.vocab, size=length).tolist() for _ in range(n)]
+
+
+def test_engine_matches_sequential_tokens(params):
+    engine = mk_engine(params, slots=2)
+    reqs = [engine.make_request(p, TOKENS) for p in prompts(4)]
+    engine.run(reqs)
+    seq = serve_sequential(CFG, params, reqs, max_seq=MAX_SEQ,
+                           prompt_buckets=(BUCKET,))
+    for r in reqs:
+        assert r.state == "done"
+        assert engine.finalize_request(r) == seq["tokens"][r.rid], r.rid
+
+    st = engine.stats()
+    assert st["completed"] == 4
+    assert st["recycles"] >= 2          # 4 requests through 2 slots
+    assert st["tokens_generated"] == 4 * TOKENS
+
+
+def test_engine_slot_recycling_mixed_lengths(params):
+    engine = mk_engine(params, slots=2)
+    lengths = [2, 5, 3, 6, 1, 4]
+    reqs = [engine.make_request(p, n)
+            for p, n in zip(prompts(len(lengths), seed=1), lengths)]
+    engine.run(reqs)
+    st = engine.stats()
+    assert all(r.state == "done" for r in reqs)
+    assert [len(engine.finalize_request(r)) for r in reqs] == lengths
+    assert st["recycles"] >= len(lengths) - engine.ecfg.slots
+    assert st["active_slots"] == 0 and st["queue_depth"] == 0
+    assert 0 < st["batch_occupancy"] <= 1.0
+    # decode batch never re-jits: exactly one traced decode fn in the cache
+    assert st["decode_steps"] < sum(lengths)  # batching beat sequential steps
+
+
+def test_engine_admission_control(params):
+    engine = mk_engine(params, slots=2, max_queue=2)
+    ok = [engine.submit(engine.make_request(p, 2)) for p in prompts(4)]
+    assert ok == [True, True, False, False]
+    assert engine.stats()["rejected"] == 2
+    # horizon violation and oversized prompt are rejected up front
+    too_long = engine.make_request(prompts(1)[0], TOKENS + 99)
+    assert not engine.submit(too_long)
+    assert "exceeds" in too_long.reason
+    big = engine.make_request(list(range(BUCKET + 1)), 2)
+    assert not engine.submit(big)
+    assert big.state == "rejected"
+
+
+def test_engine_warm_plan_cache_across_engines(params):
+    cache = PlanCache()
+    e1 = Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                  max_seq=MAX_SEQ),
+                params=params, plan_cache=cache)
+    e1.run([e1.make_request(p, 2) for p in prompts(2)])
+    misses_after_first = cache.misses
+    e2 = Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                  max_seq=MAX_SEQ),
+                params=params, plan_cache=cache)
+    e2.run([e2.make_request(p, 2) for p in prompts(2)])
+    # everything the second engine needed (plan, decode, insert, prefill)
+    # was a hit: no re-lowering, no re-jit
+    assert cache.misses == misses_after_first
+    assert cache.hits >= 4
+    assert e2.stats()["plan_cache"]["hit_rate"] > 0
+
+
+def test_engine_trace_has_lifecycle_events(params):
+    engine = mk_engine(params, slots=1)
+    reqs = [engine.make_request(p, 2) for p in prompts(2)]
+    engine.run(reqs)
+    events = [e.get("event") for e in engine.trace if "event" in e]
+    passes = [e for e in engine.trace if "pass" in e]
+    assert passes, "pass-pipeline trace entries flow through the same list"
+    for ev in ("submit", "admit", "finish", "stats"):
+        assert ev in events

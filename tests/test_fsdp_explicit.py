@@ -1,6 +1,15 @@
 """Explicit-FSDP (shard_map, manual 'data' axis) trainer: the T3 structural
 fix — per-layer gradients born sharded via the AD of tiled all_gather."""
+import jax
 import pytest
+
+# Partial-manual shard_map (manual 'data', auto 'model') crashes the XLA
+# bundled with jax <= 0.4.x (Check failed: sharding.IsManualSubgroup()).
+# jax.shard_map's presence marks the versions where it works.
+pytestmark = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map requires jax >= 0.5 "
+           "(XLA IsManualSubgroup crash on older jax)")
 
 
 def test_fsdp_step_compiles_with_reduce_scatter(subproc):
@@ -12,8 +21,8 @@ from repro.runtime.fsdp import make_fsdp_train_step
 cfg = smoke_config("tinyllama-1.1b")
 shape = ShapeCfg("t", "train", 64, 16)
 plan = plans.make_plan(cfg, shape, microbatches=1)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 with mesh:
     step, (ss, bs), _ = make_fsdp_train_step(cfg, plan, mesh)
     compiled = step.lower(ss, bs).compile()
@@ -36,8 +45,8 @@ from repro.runtime.fsdp import make_fsdp_train_step
 cfg = smoke_config("tinyllama-1.1b")
 shape = ShapeCfg("t", "train", 64, 16)
 plan = plans.make_plan(cfg, shape, microbatches=1)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4, 2), ("data", "model"))
 ds = ShardedLMDataset(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16))
 batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
 with mesh:

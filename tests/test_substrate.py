@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or fixed-seed fallback
 
 from repro.checkpoint import CheckpointManager, latest_step, restore, save
 from repro.data import DataConfig, ShardedLMDataset, make_train_iterator

@@ -2,7 +2,7 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or fixed-seed fallback
 
 from repro.core import ir
 from repro.core.builder import PlanBuilder
