@@ -1,8 +1,10 @@
-"""Serving benchmark: continuous-batching engine vs the sequential path.
+"""Serving benchmark: continuous-batching engine vs the sequential path,
+plus the paged-KV mixed-length comparison.
 
-    PYTHONPATH=src python -m benchmarks.serve_bench [--full]
+    PYTHONPATH=src python -m benchmarks.serve_bench [--full] [--json PATH]
 
-For each (smoke) architecture, serves the same request set two ways:
+Section 1 — for each (smoke) architecture, serves the same request set two
+ways:
 
   * sequential — the pre-engine path: one request at a time, B=1 prefill +
     B=1 decode loop (what ``launch.serve`` did before the engine existed);
@@ -14,11 +16,28 @@ bucket, so the comparison is decode scheduling only. A second engine run
 against the warm PlanCache reports the cache hit rate — repeat requests never
 re-run the UPIR pass pipeline or re-jit.
 
+Section 2 — the paged-KV comparison on a mixed-length workload (short+long
+prompts, skewed generation lengths), all three engines at EQUAL KV memory:
+
+  * dense          — slots=4, every slot reserves the full max_seq horizon;
+  * paged          — slots=8 over the same bytes (free-list pool, overcommit
+    admission, eviction-by-recompute when the pool truly runs dry);
+  * paged+chunked  — paged with chunked prefill: long prompts prefill one
+    page-aligned chunk per slot per engine step, interleaved with decode, so
+    a 1k-token prompt no longer stalls every other request's first token.
+
+Requests are submitted at queue depth >= 2x slots; engines run in per-step
+sync mode so time-to-first-token is wall-clock-accurate. Token streams are
+asserted identical across all three. ``--json`` writes the section-2 metrics
+(tokens/s, p99 TTFT, peak pages in use, ...) for perf tracking — CI emits
+``BENCH_2.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 FAST_ARCHS = ("tinyllama-1.1b", "granite-3-2b", "xlstm-350m")
 FULL_ARCHS = FAST_ARCHS + ("zamba2-2.7b",)
@@ -102,11 +121,159 @@ def run_bench(fast: bool = True) -> None:
           f"batch={SLOTS}; warm PlanCache hits={hits} (re-lowering skipped)")
 
 
+# ---------------------------------------------------- paged KV mixed-length
+
+PAGED_ARCH = "tinyllama-1.1b"
+PAGED_MAX_SEQ = 1088
+PAGE_SIZE = 64
+DENSE_SLOTS = 4
+PAGED_SLOTS = 8
+PAGED_BUCKETS = (16, 1024)
+PAGED_CHUNK = 128
+PAGED_REQUESTS = 24          # queue depth 3x paged slots, 6x dense slots
+LONG_POSITIONS = (1, 9)      # long prompts land early / mid-queue
+
+
+def _mixed_workload(vocab: int, n: int = PAGED_REQUESTS):
+    """Long-tail traffic: mostly short prompts with short generations, a few
+    1k-token prompts — the shape dense per-slot reservation is worst at, and
+    the one where a one-shot prefill stalls every queued request's first
+    token (one monolithic dispatch worth ~60 decode steps)."""
+    import numpy as np
+    rng = np.random.default_rng(7)
+    work = []
+    for i in range(n):
+        if i in LONG_POSITIONS:  # long tail: bucket 1024, modest generation
+            plen = int(rng.integers(700, 1025))
+            new = int(rng.integers(16, 33))
+        else:                    # short head: bucket 16, few tokens
+            plen = int(rng.integers(4, 17))
+            new = int(rng.integers(4, 17))
+        work.append((rng.integers(0, vocab, size=plen).tolist(), new))
+    return work
+
+
+def _run_engine(cfg, params, ecfg, workload):
+    import numpy as np
+
+    from repro.runtime.engine import Engine
+
+    engine = Engine(cfg, ecfg, params=params)
+    # warmup: compile every bucket's prefill + the decode/insert steps
+    warm = [engine.make_request([0] * (b - 1), 2) for b in PAGED_BUCKETS
+            for _ in range(2)]
+    engine.run(warm)
+    # throughput run: async hot loop (never syncs), decode tokens/s
+    engine.reset_stats()
+    engine.run([engine.make_request(p, n) for p, n in workload])
+    tput = engine.stats()
+    # latency run: per-step device sync so TTFT timestamps are wall-clock
+    engine.reset_stats()
+    reqs = [engine.make_request(p, n) for p, n in workload]
+    engine.run(reqs, sync_per_step=True)
+    st = engine.stats()
+    done = [r for r in reqs if r.state == "done"]
+    ttft = np.asarray([r.t_first - r.t_submit for r in done])
+    streams = [engine.finalize_request(r) for r in reqs]
+    return {
+        "completed": len(done),
+        "tokens_per_s": tput["tokens_per_s"],
+        "peak_concurrent": st["peak_concurrent"],
+        "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+        "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+        "peak_pages": st.get("peak_pages", 0),
+        "evictions": st.get("evictions", 0),
+        "prefill_chunks": st.get("prefill_chunks", 0),
+        "occupancy": st["batch_occupancy"],
+    }, streams
+
+
+def bench_paged(json_path=None):
+    """Dense vs paged vs paged+chunked at equal KV memory (section 2)."""
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import EngineConfig
+
+    cfg = smoke_config(PAGED_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    workload = _mixed_workload(cfg.vocab)
+
+    # equal KV memory: dense reserves DENSE_SLOTS*MAX_SEQ token rows; the
+    # paged pool spends the same rows as num_pages data pages + 1 null page
+    num_pages = DENSE_SLOTS * PAGED_MAX_SEQ // PAGE_SIZE - 1
+    common = dict(prompt_buckets=PAGED_BUCKETS, max_seq=PAGED_MAX_SEQ,
+                  max_queue=2 * PAGED_REQUESTS)
+    engines = {
+        "dense": EngineConfig(slots=DENSE_SLOTS, **common),
+        "paged": EngineConfig(slots=PAGED_SLOTS, kv_layout="paged",
+                              page_size=PAGE_SIZE, num_pages=num_pages,
+                              **common),
+        "paged_chunked": EngineConfig(slots=PAGED_SLOTS, kv_layout="paged",
+                                      page_size=PAGE_SIZE,
+                                      num_pages=num_pages,
+                                      prefill_chunk=PAGED_CHUNK, **common),
+    }
+    results = {}
+    streams = {}
+    for name, ecfg in engines.items():
+        results[name], streams[name] = _run_engine(cfg, params, ecfg, workload)
+    identical = (streams["dense"] == streams["paged"]
+                 == streams["paged_chunked"])
+    if not identical:
+        # this is the CI gate on paged-path correctness, not just a metric
+        raise SystemExit("serve_bench_paged: greedy token streams diverged "
+                         "between dense/paged/chunked engines")
+
+    print("# serve_bench_paged: engine,slots,kv_rows,completed,tok_s,"
+          "peak_concurrent,ttft_p50_ms,ttft_p99_ms,peak_pages,evictions,"
+          "occupancy")
+    kv_rows = DENSE_SLOTS * PAGED_MAX_SEQ
+    for name, r in results.items():
+        slots = engines[name].slots
+        print(f"{name},{slots},{kv_rows},{r['completed']},"
+              f"{r['tokens_per_s']:.1f},{r['peak_concurrent']},"
+              f"{r['ttft_p50_ms']:.1f},{r['ttft_p99_ms']:.1f},"
+              f"{r['peak_pages']},{r['evictions']},{r['occupancy']:.2f}")
+    conc = (results["paged"]["peak_concurrent"]
+            / max(results["dense"]["peak_concurrent"], 1))
+    tok = (results["paged"]["tokens_per_s"]
+           / max(results["dense"]["tokens_per_s"], 1e-9))
+    ttft = (results["paged_chunked"]["ttft_p99_ms"]
+            / max(results["paged"]["ttft_p99_ms"], 1e-9))
+    print(f"# paged sustains {conc:.2f}x dense concurrency at equal memory, "
+          f"{tok:.2f}x dense decode tokens/s; chunked prefill p99 TTFT "
+          f"{ttft:.2f}x of one-shot; streams identical: {identical}")
+
+    if json_path:
+        payload = {
+            "bench": "paged_kv_mixed_length",
+            "arch": cfg.name,
+            "requests": PAGED_REQUESTS,
+            "kv_rows": kv_rows,
+            "page_size": PAGE_SIZE,
+            "num_pages": num_pages,
+            "engines": results,
+            "paged_vs_dense_concurrency": conc,
+            "paged_vs_dense_tokens_per_s": tok,
+            "chunked_vs_oneshot_p99_ttft": ttft,
+            "streams_identical": identical,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write paged-benchmark metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
+    bench_paged(json_path=args.json)
 
 
 if __name__ == "__main__":

@@ -71,8 +71,18 @@ class PlanBuilder:
         self._moves.append(ir.MoveOp(symbol=symbol, direction=direction, is_async=is_async))
         return self
 
-    def alloc(self, symbol: str, allocator: str = "default_mem_alloc") -> "PlanBuilder":
-        self._mems.append(ir.MemOp(kind="alloc", symbol=symbol, allocator=allocator))
+    def alloc(self, symbol: str, allocator: str = "default_mem_alloc",
+              **extensions: Any) -> "PlanBuilder":
+        self._mems.append(ir.MemOp(kind="alloc", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
+        return self
+
+    def dealloc(self, symbol: str, allocator: str = "default_mem_alloc",
+                **extensions: Any) -> "PlanBuilder":
+        self._mems.append(ir.MemOp(kind="dealloc", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
         return self
 
     # ---------------------------------------------------------------------- loops

@@ -53,7 +53,8 @@ MAPPING = ("to", "from", "tofrom", "allocate", "none")
 ACCESS = ("read-only", "write-only", "read-write")
 VISIBILITY = ("implicit", "explicit")
 PATTERNS = ("block", "cyclic", "linear", "loop")
-ALLOCATORS = ("default_mem_alloc", "large_cap_mem_alloc", "vmem_alloc", "host_mem_alloc")
+ALLOCATORS = ("default_mem_alloc", "large_cap_mem_alloc", "vmem_alloc",
+              "host_mem_alloc", "paged_kv_alloc")
 
 
 @dataclass(frozen=True, order=True)

@@ -77,6 +77,9 @@ class LoweredPlan:
     compression: Optional[str]               # None | int8
     collectives: Tuple[ir.SyncOp, ...]       # flattened sync schedule
     fingerprint: str = ""                    # canonical program fingerprint
+    # paged-KV geometry (num_pages, page_size, pages_per_slot) when the
+    # program manages the decode cache through paged_kv_alloc, else None
+    page_geometry: Optional[Tuple[int, int, int]] = None
 
     # ------------------------------------------------------------------ meshes
 
@@ -163,6 +166,14 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         if ir.ext_get(attr.extensions, "host_offload", False):
             offload.append(attr.symbol)
 
+    page_geometry = None
+    for attr in ir.find_all(prog, ir.DataAttr):
+        if attr.allocator == "paged_kv_alloc":
+            page_geometry = (ir.ext_get(attr.extensions, "num_pages", 0),
+                             ir.ext_get(attr.extensions, "page_size", 0),
+                             ir.ext_get(attr.extensions, "pages_per_slot", 0))
+            break
+
     batch_axes: list = []
     seq_axis = None
     microbatches = 1
@@ -200,7 +211,7 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         microbatches=microbatches,
         remat=ir.ext_get(prog.extensions, "remat", "none"),
         grad_reduce=grad_reduce, zero=zero, compression=compression,
-        collectives=syncs)
+        collectives=syncs, page_geometry=page_geometry)
 
 
 # ----------------------------------------------------- explicit sync lowering

@@ -61,6 +61,12 @@ def dist_rules(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool,
         ("in/pos", p((0, dp))),
         ("in/*_embeds", p((0, dp))),
         ("in/encoder_memory", p((0, dp))),
+        # ---- paged decode caches (before the dense cache rules): the pool
+        #      [L, NP, PS, KV, hd] has no batch dim — pages shard over model
+        #      (the paged analogue of flash-decode seq worksharing); the page
+        #      table is tiny control state and stays replicated
+        ("cache/*_pages", p((1, "model"))),
+        ("cache/page_table", ()),
         # ---- decode caches: batch over data, seq (or width) over model
         ("cache/xk", p((1, dp))),
         ("cache/xv", p((1, dp))),
@@ -164,12 +170,24 @@ def _bytes_estimates(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool,
 def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   fsdp: bool = True, compression: Optional[str] = None,
                   overlap: bool = True, extra_ext: Optional[Dict] = None,
-                  microbatches: Optional[int] = None) -> ir.Program:
-    """Express the train/serve step of (cfg, shape) as a UPIR program."""
+                  microbatches: Optional[int] = None,
+                  page_geometry: Optional[Tuple[int, int, int]] = None
+                  ) -> ir.Program:
+    """Express the train/serve step of (cfg, shape) as a UPIR program.
+
+    ``page_geometry=(num_pages, page_size, pages_per_slot)`` switches a decode
+    program to the paged-KV layout: the cache symbols become the physical page
+    pool + page table, the cache data attribute carries the geometry as an
+    explicit memory-management annotation (``paged_kv_alloc``), and
+    ``alloc_pages``/``free_pages`` MemOps make the allocator lifecycle part of
+    the IR — all of which the printer fingerprints, so page geometry
+    participates in the PlanCache key exactly like shapes do.
+    """
     axes = mesh_axes(multi_pod)
     dp = dp_axis(multi_pod)
     mb = microbatches if microbatches else _microbatches(cfg, shape, multi_pod)
     act, resident = _bytes_estimates(cfg, shape, multi_pod, mb)
+    paged = page_geometry is not None and shape.kind == "decode"
 
     b = PlanBuilder(f"{cfg.name}@{shape.name}")
     b.mesh(axes, teams=("pod",) if multi_pod else (),
@@ -177,7 +195,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     b.target("tpu")
 
     # symbols: the full state/input tree
-    symbols = _symbols(cfg, shape)
+    symbols = _symbols(cfg, shape,
+                       page_geometry=page_geometry if paged else None)
     for name, (shp, dt) in symbols.items():
         b.symbol(name, shp, dt)
 
@@ -214,7 +233,23 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
         b.data("grads", sharing="private", access="read-write", fsdp=fsdp)
     else:
         b.data("params", mapping="to", access="read-only")
-        if shape.kind == "decode":
+        if shape.kind == "decode" and paged:
+            npages, ps, pps = page_geometry
+            b.data("cache", mapping="tofrom", access="read-write",
+                   allocator="paged_kv_alloc", page_size=ps,
+                   num_pages=npages, pages_per_slot=pps)
+            # the page table IS the explicit data-movement plan: logical
+            # position -> physical page, shipped to the device every step
+            b.data("cache/page_table", mapping="to", access="read-only",
+                   page_map=True)
+            b.alloc("cache/k_pages", allocator="paged_kv_alloc",
+                    num_pages=npages, page_size=ps)
+            b.alloc("cache/v_pages", allocator="paged_kv_alloc",
+                    num_pages=npages, page_size=ps)
+            # sequences release their pages on completion/eviction
+            b.dealloc("cache/k_pages", allocator="paged_kv_alloc")
+            b.dealloc("cache/v_pages", allocator="paged_kv_alloc")
+        elif shape.kind == "decode":
             b.data("cache", mapping="tofrom", access="read-write")
 
     b.extension(
@@ -226,7 +261,9 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     return b.build()
 
 
-def _symbols(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Tuple]:
+def _symbols(cfg: ArchConfig, shape: ShapeCfg,
+             page_geometry: Optional[Tuple[int, int, int]] = None
+             ) -> Dict[str, Tuple]:
     """Flattened symbol table for state + inputs + outputs of this cell."""
     symbols: Dict[str, Tuple] = {}
     pspecs = api.param_specs(cfg)
@@ -236,7 +273,12 @@ def _symbols(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, Tuple]:
         symbols.update(tree_symbols({"params": pspecs, "opt": opt_specs}))
     else:
         symbols.update(tree_symbols({"params": pspecs}))
-        if shape.kind == "decode":
+        if shape.kind == "decode" and page_geometry is not None:
+            npages, ps, pps = page_geometry
+            cspecs = api.paged_cache_specs(cfg, npages, ps)
+            symbols.update(tree_symbols({"cache": cspecs}))
+            symbols["cache/page_table"] = ((shape.global_batch, pps), "int32")
+        elif shape.kind == "decode":
             cspecs = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
             symbols.update(tree_symbols({"cache": cspecs}))
     for k, v in input_specs(cfg, shape).items():

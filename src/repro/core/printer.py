@@ -83,6 +83,9 @@ class _Printer:
             fields.append(f"allocator({a.allocator})")
         if a.memcpy != "default":
             fields.append(f"memcpy({a.memcpy})")
+        mm = _mm_fields(a.extensions)
+        if mm:
+            fields.append(mm)
         self.lines.append(
             f"  {name} = upir.parallel_data_info({', '.join(fields)})")
 
@@ -156,9 +159,11 @@ class _Printer:
                 f"{pad}upir.memcpy {a}direction({node.direction}) "
                 f"data({self._refs([node.symbol])})")
         elif isinstance(node, ir.MemOp):
+            mm = _mm_fields(node.extensions)
             self.lines.append(
                 f"{pad}upir.memory_{node.kind} allocator({node.allocator}) "
-                f"data({self._refs([node.symbol])})")
+                + (mm + " " if mm else "")
+                + f"data({self._refs([node.symbol])})")
         elif isinstance(node, ir.KernelOp):
             args = ", ".join(node.args)
             self.lines.append(f"{pad}upir.kernel @{node.fn}({args})")
@@ -184,6 +189,22 @@ def _parallel(p) -> str:
             fields.append(f"num_tasks({p.num_tasks})")
         return f"taskloop({' '.join(fields)})"
     return str(p)
+
+
+# Memory-management extension keys rendered into the canonical text (and thus
+# the program fingerprint): paged-KV geometry must distinguish plans the same
+# way shapes do, so a PlanCache warmed at one page size never serves another.
+MM_EXT_KEYS = ("page_size", "num_pages", "pages_per_slot", "page_map")
+
+
+def _mm_fields(extensions) -> str:
+    parts = []
+    for key in MM_EXT_KEYS:
+        v = ir.ext_get(extensions, key)
+        if v is None:
+            continue
+        parts.append(key if v is True else f"{key}({v})")
+    return f"mm({' '.join(parts)})" if parts else ""
 
 
 def _sanitize(s: str) -> str:

@@ -1,0 +1,163 @@
+"""Paged-attention decode Pallas kernel — block-gather through a page table.
+
+One token per sequence attends to a KV cache stored as fixed-size physical
+pages: the page table (a scalar-prefetch operand, resident before the kernel
+body runs) drives the ``BlockSpec`` index maps, so each grid step DMAs exactly
+one physical page of K and V — the kernel never materializes the gathered
+logical view that the XLA path (``models.layers.attention_decode_paged``)
+builds. Online softmax over pages with running (m, l, acc) in VMEM scratch,
+same recurrence as ``flash_attention.py``.
+
+Grid: (batch, kv_heads, logical_pages); pages are the innermost (sequential)
+dim so the q tile and accumulators stay VMEM-resident while pages stream.
+GQA is native: the q block is the [G, hd] group of one KV head, so K/V pages
+are loaded once per KV head, not per q head.
+
+The kernel computes attention over *cached* tokens only (positions < limit);
+the deferred-insert merge of the current token's K/V (see
+``attention_decode``'s ``new_kv`` contract) happens outside in
+``paged_attention_decode`` from the kernel's (out, m, l) partials.
+
+Validated in interpret mode against the XLA paged path and the dense cache —
+tests assert identical greedy token streams through the serving engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _paged_decode_kernel(pt_ref, limit_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_out_ref, l_out_ref,
+                         m_ref, l_ref, acc_ref, *,
+                         scale, page_size, pages, window):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        # NEG (not -inf) so an all-masked table leaves exact zeros, no NaNs
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                    # [G, hd]
+    k = k_ref[0, :, 0, :]                              # [page_size, hd]
+    v = v_ref[0, :, 0, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    limit = limit_ref[b]
+    kpos = ip * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]               # [page_size]
+    valid = kpos < limit
+    if window:
+        valid &= kpos >= limit - window
+    s = jnp.where(valid[None, :], s, NEG)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    # explicit re-mask: when every entry so far is masked, m_new == NEG and
+    # exp(s - m_new) would be 1 for masked entries
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ip == pages - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(
+                           o_ref.dtype)
+        m_out_ref[0, 0] = m_ref[...]
+        l_out_ref[0, 0] = l_ref[...]
+
+
+def paged_attention_partial(q, k_pages, v_pages, page_table, limit, *,
+                            window: int = 0, interpret: bool = True):
+    """Cache-only paged attention with softmax partials.
+
+    q: [B,1,H,hd]; k_pages/v_pages: [NP,PS,KV,hd]; page_table: [B,P] int32;
+    limit: [B] — positions ``< limit`` (and ``>= limit - window`` when
+    windowed) are attended. Returns (out [B,KV,G,hd] normalized, m [B,KV,G],
+    l [B,KV,G]) so callers can merge more keys online.
+    """
+    B, _, H, hd = q.shape
+    NP, PS, KV, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, i, pt, lim: (b, k, 0, 0)),
+            pl.BlockSpec((1, PS, 1, hd),
+                         lambda b, k, i, pt, lim: (pt[b, i], 0, k, 0)),
+            pl.BlockSpec((1, PS, 1, hd),
+                         lambda b, k, i, pt, lim: (pt[b, i], 0, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, i, pt, lim: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, k, i, pt, lim: (b, k, 0)),
+            pl.BlockSpec((1, 1, G), lambda b, k, i, pt, lim: (b, k, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out, m, l = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, scale=scale, page_size=PS,
+                          pages=P, window=window),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, limit, qg, k_pages, v_pages)
+    return out, m, l
+
+
+def paged_attention_decode(q, k_pages, v_pages, page_table, pos, *,
+                           window: int = 0, new_kv=None,
+                           interpret: bool = True):
+    """Drop-in kernel counterpart of ``attention_decode_paged``.
+
+    Same signature/semantics: ``new_kv=(k_new, v_new)`` runs deferred-insert
+    (cache positions ``< pos``; the new token's K/V merged online outside the
+    kernel); without it, positions ``<= pos`` must already be in the pool.
+    Returns [B,1,H,hd].
+    """
+    B, _, H, hd = q.shape
+    KV = k_pages.shape[2]
+    G = H // KV
+    limit = (pos if new_kv is not None else pos + 1).astype(jnp.int32)
+    o_c, m_c, l_c = paged_attention_partial(
+        q, k_pages, v_pages, page_table, limit, window=window,
+        interpret=interpret)
+    if new_kv is None:
+        return o_c.reshape(B, 1, H, hd)
+    k_new, v_new = new_kv
+    qg = q.reshape(B, KV, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    s_new = jnp.einsum("bkgh,bkh->bkg", qg.astype(jnp.float32),
+                       k_new[:, 0].astype(jnp.float32)) * scale
+    m_tot = jnp.maximum(m_c, s_new)
+    alpha = jnp.exp(m_c - m_tot)                       # [B,KV,G]
+    p_n = jnp.exp(s_new - m_tot)
+    acc = o_c.astype(jnp.float32) * (l_c * alpha)[..., None] \
+        + p_n[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32)
+    out = acc / (l_c * alpha + p_n)[..., None]
+    return out.astype(q.dtype).reshape(B, 1, H, hd)

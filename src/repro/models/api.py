@@ -93,3 +93,48 @@ def decode_step(cfg: ArchConfig, params, cache, batch: Dict[str, Any]):
                                   encoder_memory=batch.get("encoder_memory"))
     return transformer.decode_step(cfg, params, cache, batch["tokens"],
                                    batch["pos"])
+
+
+# ------------------------------------------------------------------ paged KV
+# Explicit memory management for serving: a [num_pages, page_size] physical
+# KV pool + per-slot page tables (dense/moe/vlm families only — state-space
+# and encoder-decoder caches are not pageable; the dispatchers raise).
+
+
+def supports_paged_kv(cfg: ArchConfig) -> bool:
+    return cfg.encdec is None and cfg.family in transformer.PAGED_FAMILIES
+
+
+def paged_cache_specs(cfg: ArchConfig, num_pages: int, page_size: int):
+    if _is_encdec(cfg):
+        raise NotImplementedError("paged KV: encoder-decoder caches are not "
+                                  "pageable (per-slot encoder memory)")
+    return transformer.paged_cache_specs(cfg, num_pages, page_size)
+
+
+def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
+    if _is_encdec(cfg):
+        raise NotImplementedError("paged KV: encoder-decoder caches are not "
+                                  "pageable (per-slot encoder memory)")
+    return transformer.init_paged_cache(cfg, num_pages, page_size)
+
+
+def decode_step_paged(cfg: ArchConfig, params, pool, page_table,
+                      batch: Dict[str, Any], *, attn_impl: str = "xla",
+                      interpret: bool = True):
+    if _is_encdec(cfg):
+        raise NotImplementedError("paged KV: encoder-decoder caches are not "
+                                  "pageable (per-slot encoder memory)")
+    return transformer.decode_step_paged(cfg, params, pool, page_table,
+                                         batch["tokens"], batch["pos"],
+                                         attn_impl=attn_impl,
+                                         interpret=interpret)
+
+
+def prefill_chunk(cfg: ArchConfig, params, pool, page_row,
+                  batch: Dict[str, Any], offset):
+    if _is_encdec(cfg):
+        raise NotImplementedError("paged KV: encoder-decoder caches are not "
+                                  "pageable (per-slot encoder memory)")
+    return transformer.prefill_chunk(cfg, params, pool, page_row,
+                                     batch["tokens"], offset)

@@ -213,18 +213,27 @@ def attention_decode(q, k_cache, v_cache, pos, *, window: int = 0,
     once, outside the layer loop (in-loop insert forces XLA to copy the whole
     stacked cache every iteration: §Perf D2).
     """
-    B, S, KV, hd = k_cache.shape
-    H = q.shape[2]
-    G = H // KV
-    qg = q.reshape(B, KV, G, hd)
-    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32)
-    scores = scores / np.sqrt(hd)
+    S = k_cache.shape[1]
     slot = jnp.arange(S)[None, :]                      # [1,S]
     limit = pos if new_kv is not None else pos + 1
     if window:
         valid = slot < jnp.minimum(limit, window)[:, None]
     else:
         valid = slot < limit[:, None]
+    return _attend_cached(q, k_cache, v_cache, valid, new_kv)
+
+
+def _attend_cached(q, k_cache, v_cache, valid, new_kv):
+    """Shared decode-attention core: softmax over cache entries where ``valid``
+    ([B,S] bool), optionally merging a deferred new-token K/V online. The dense
+    rolling path and the paged path both route here so their arithmetic is
+    op-for-op identical (token-stream equality between layouts)."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
     scores = jnp.where(valid[:, None, None], scores, -1e30)
     if new_kv is not None:
         k_new, v_new = new_kv
@@ -270,3 +279,103 @@ def cache_insert(cache, new, pos, *, window: int = 0):
         return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
 
     return jax.vmap(one)(cache, new, idx)
+
+
+# ----------------------------------------------------------------- paged KV
+
+# Physical page 0 is reserved as the *null page*: page-table entries of
+# inactive/unmapped slots point at it, so stray scatters land somewhere
+# harmless and stray gathers read data that the position mask discards.
+NULL_PAGE = 0
+
+
+def gather_kv_pages(pool, page_table):
+    """Gather a logical-order KV view through the page table.
+
+    pool: [NP, PS, KV, hd] physical pages; page_table: [B, P] int32 mapping
+    logical page i of sequence b to a physical page. Returns
+    [B, P*PS, KV, hd] where row j holds the K/V of logical position j
+    (garbage past the sequence length — callers mask by position).
+    """
+    g = pool[page_table]                               # [B, P, PS, KV, hd]
+    B, P, PS, KV, hd = g.shape
+    return g.reshape(B, P * PS, KV, hd)
+
+
+def attention_decode_paged(q, k_pages, v_pages, page_table, pos, *,
+                           window: int = 0, new_kv=None):
+    """One-token attention against a paged KV pool.
+
+    q: [B,1,H,hd]; k_pages/v_pages: [NP,PS,KV,hd]; page_table: [B,P] int32;
+    pos: [B]. Same contract as ``attention_decode`` (including deferred-insert
+    ``new_kv``) but the cache is gathered through the page table, and the
+    layout is logical-order (non-rolling), so a ``window`` masks positions
+    ``[limit - window, limit)`` instead of rolling slots.
+    """
+    k_c = gather_kv_pages(k_pages, page_table)
+    v_c = gather_kv_pages(v_pages, page_table)
+    S = k_c.shape[1]
+    slot = jnp.arange(S)[None, :]
+    limit = pos if new_kv is not None else pos + 1
+    valid = slot < limit[:, None]
+    if window:
+        valid &= slot >= (limit - window)[:, None]
+    return _attend_cached(q, k_c, v_c, valid, new_kv)
+
+
+def cache_insert_paged(pool, new, page_table, pos):
+    """Scatter one new token's K/V into the paged pool, all layers at once.
+
+    pool: [L,NP,PS,KV,hd]; new: [L,B,1,KV,hd]; page_table: [B,P]; pos: [B].
+    The target page is ``page_table[b, pos // PS]`` at offset ``pos % PS``.
+    Slots whose page-table row is null (all ``NULL_PAGE``) scatter into the
+    reserved null page — harmless by construction.
+    """
+    ps = pool.shape[2]
+    B = pos.shape[0]
+    phys = jnp.take_along_axis(page_table, (pos // ps)[:, None], axis=1)[:, 0]
+    off = pos % ps
+    return pool.at[:, phys, off].set(new[:, :, 0].astype(pool.dtype))
+
+
+def cache_write_pages(pool, kv, page_ids):
+    """Write whole pages of prefilled K/V into the pool.
+
+    pool: [L,NP,PS,KV,hd]; kv: [L,1,n*PS,KV,hd] (page-aligned chunk of one
+    sequence); page_ids: [n] int32 physical destinations, one per page.
+    """
+    L, NP, PS, KV, hd = pool.shape
+    kvr = kv.reshape(L, -1, PS, KV, hd)
+    return pool.at[:, page_ids].set(kvr.astype(pool.dtype))
+
+
+def attention_prefill_chunk(q, k_ctx, v_ctx, k_new, v_new, offset, *,
+                            window: int = 0):
+    """Chunked-prefill attention: a chunk of queries at absolute positions
+    ``offset + [0, C)`` attends to already-cached context (positions
+    ``< offset``, gathered in logical order) plus itself causally.
+
+    q: [B,C,H,hd]; k_ctx/v_ctx: [B,Sc,KV,hd]; k_new/v_new: [B,C,KV,hd];
+    offset: [B] int32. Plain softmax, mirroring ``attention_full`` so chunked
+    prefill reproduces the one-shot prefill numerics.
+    """
+    B, C, H, hd = q.shape
+    Sc = k_ctx.shape[1]
+    k = gqa_expand_kv(jnp.concatenate([k_ctx, k_new], axis=1), H)
+    v = gqa_expand_kv(jnp.concatenate([v_ctx, v_new], axis=1), H)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    qpos = offset[:, None] + jnp.arange(C)[None, :]            # [B,C]
+    kpos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(Sc)[None, :], (B, Sc)), qpos],
+        axis=1)                                                # [B,Sc+C]
+    is_ctx = (jnp.arange(Sc + C) < Sc)[None, None, :]          # [1,1,Sc+C]
+    ctx_ok = (kpos < offset[:, None])[:, None, :]              # [B,1,Sc+C]
+    causal_ok = kpos[:, None, :] <= qpos[:, :, None]           # [B,C,Sc+C]
+    ok = jnp.where(is_ctx, ctx_ok, causal_ok)
+    if window:
+        ok &= kpos[:, None, :] > qpos[:, :, None] - window
+    scores = jnp.where(ok[:, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out.reshape(B, C, H, hd)

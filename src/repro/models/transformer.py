@@ -27,8 +27,9 @@ from ..core.act_sharding import (anchor_block_grads, constrain,
                                  fsdp_gather_block)
 from . import mamba2, moe as moe_lib, xlstm as xlstm_lib
 from .layers import (apply_rope, attention_chunked, attention_decode,
-                     attention_full, cache_insert, embed_lookup, mlp_apply,
-                     norm)
+                     attention_decode_paged, attention_full,
+                     attention_prefill_chunk, cache_insert, cache_insert_paged,
+                     embed_lookup, gather_kv_pages, mlp_apply, norm)
 
 CHUNKED_ATTN_THRESHOLD = 8192
 
@@ -562,3 +563,135 @@ def prefill(cfg: ArchConfig, params, tokens, *, extra_embeds=None, s_max=None):
     hidden = norm(x, params["final_norm"], cfg.norm)
     logits = logits_fn(cfg, params, hidden[:, -1:])
     return logits, {"k": k_all, "v": v_all}
+
+
+# ------------------------------------------------------------------ paged KV
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _check_paged(cfg: ArchConfig) -> None:
+    if cfg.family not in PAGED_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV cache needs a dense per-layer K/V cache; family "
+            f"'{cfg.family}' keeps recurrent/rolling state (ROADMAP)")
+
+
+def paged_cache_shapes(cfg: ArchConfig, num_pages: int,
+                       page_size: int) -> Dict[str, Tuple[int, ...]]:
+    """Physical KV pool: ``num_pages`` allocatable pages + 1 reserved null
+    page (physical page 0) that unmapped page-table entries point at."""
+    _check_paged(cfg)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    shape = (L, num_pages + 1, page_size, KV, hd)
+    return {"k_pages": shape, "v_pages": shape}
+
+
+def paged_cache_specs(cfg: ArchConfig, num_pages: int, page_size: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dt),
+                        paged_cache_shapes(cfg, num_pages, page_size),
+                        is_leaf=is_shape)
+
+
+def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        paged_cache_specs(cfg, num_pages, page_size))
+
+
+def decode_step_paged(cfg: ArchConfig, params, pool, page_table, tokens, pos,
+                      *, attn_impl: str = "xla", interpret: bool = True):
+    """One decode step against the paged pool. tokens [B,1], pos [B],
+    page_table [B,P] int32 (logical page -> physical page; null rows for
+    inactive slots). Returns (logits [B,1,V], pool).
+
+    Structure mirrors the dense ``decode_step``: the pool is scanned
+    READ-ONLY per layer, attention gathers K/V through the page table
+    (``attn_impl='pallas'`` streams physical pages in the Pallas kernel
+    instead), and the new token's K/V is scattered into its page once,
+    post-scan.
+    """
+    _check_paged(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    x = constrain(embed_lookup(params["embed"], tokens, dtype), "hidden")
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def body(x, xs_l):
+        p_l, k_pg, v_pg = xs_l
+        xr = norm(x, p_l["ln1"], cfg.norm).astype(dtype)
+        q = jnp.einsum("bsd,dh->bsh", xr, p_l["wq"].astype(dtype)) \
+            .reshape(B, 1, H, hd)
+        k = jnp.einsum("bsd,dh->bsh", xr, p_l["wk"].astype(dtype)) \
+            .reshape(B, 1, KV, hd)
+        v = jnp.einsum("bsd,dh->bsh", xr, p_l["wv"].astype(dtype)) \
+            .reshape(B, 1, KV, hd)
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        if attn_impl == "pallas":
+            from ..kernels.paged_attention import paged_attention_decode
+            o = paged_attention_decode(q, k_pg, v_pg, page_table, pos,
+                                       new_kv=(k, v), interpret=interpret)
+        else:
+            o = attention_decode_paged(q, k_pg, v_pg, page_table, pos,
+                                       new_kv=(k, v))
+        a = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, H * hd).astype(dtype),
+                       p_l["wo"].astype(dtype))
+        x = x + a.astype(x.dtype)
+        m, _ = _mlp_or_moe(cfg, p_l, x, dtype)
+        return constrain(x + m.astype(x.dtype), "hidden"), (k, v)
+
+    x, (k_steps, v_steps) = jax.lax.scan(
+        body, x, (params["blocks"], pool["k_pages"], pool["v_pages"]))
+    new_pool = {
+        "k_pages": cache_insert_paged(pool["k_pages"], k_steps, page_table,
+                                      pos),
+        "v_pages": cache_insert_paged(pool["v_pages"], v_steps, page_table,
+                                      pos),
+    }
+    hidden = norm(x, params["final_norm"], cfg.norm)
+    return logits_fn(cfg, params, hidden), new_pool
+
+
+def prefill_chunk(cfg: ArchConfig, params, pool, page_row, tokens, offset):
+    """One chunk of a chunked prefill for a single sequence.
+
+    tokens [1,C] (positions ``offset .. offset+C-1``); page_row [P] int32 —
+    the sequence's page-table row, whose already-written pages hold the
+    previous chunks' K/V. Returns (last-position logits [1,1,V],
+    (k_chunk, v_chunk) [L,1,C,KV,hd]) — the caller scatters the chunk K/V
+    into its pages (``cache_write_pages``) before the next chunk runs.
+    """
+    _check_paged(cfg)
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B, C = tokens.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    offset = jnp.asarray(offset, jnp.int32)
+    positions = offset + jnp.arange(C)[None, :]
+    off_b = jnp.broadcast_to(offset[None], (B,))
+    x = constrain(embed_lookup(params["embed"], tokens, dtype), "hidden")
+
+    def body(x, xs_l):
+        p_l, k_pg, v_pg = xs_l
+        xr = norm(x, p_l["ln1"], cfg.norm).astype(dtype)
+        q = jnp.einsum("bsd,dh->bsh", xr, p_l["wq"].astype(dtype)) \
+            .reshape(B, C, H, hd)
+        k = jnp.einsum("bsd,dh->bsh", xr, p_l["wk"].astype(dtype)) \
+            .reshape(B, C, KV, hd)
+        v = jnp.einsum("bsd,dh->bsh", xr, p_l["wv"].astype(dtype)) \
+            .reshape(B, C, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_ctx = gather_kv_pages(k_pg, page_row[None, :])       # [1,P*PS,..]
+        v_ctx = gather_kv_pages(v_pg, page_row[None, :])
+        o = attention_prefill_chunk(q, k_ctx, v_ctx, k, v, off_b)
+        a = jnp.einsum("bsh,hd->bsd", o.reshape(B, C, H * hd).astype(dtype),
+                       p_l["wo"].astype(dtype))
+        x = x + a.astype(x.dtype)
+        m, _ = _mlp_or_moe(cfg, p_l, x, dtype)
+        return constrain(x + m.astype(x.dtype), "hidden"), (k, v)
+
+    x, (k_steps, v_steps) = jax.lax.scan(
+        body, x, (params["blocks"], pool["k_pages"], pool["v_pages"]))
+    hidden = norm(x, params["final_norm"], cfg.norm)
+    return logits_fn(cfg, params, hidden[:, -1:]), (k_steps, v_steps)

@@ -7,17 +7,30 @@ one token per step. When a sequence finishes, its slot is freed and refilled
 from the queue on the next step — the decode batch shape never changes, so
 slot recycling never re-jits.
 
-All compiled artifacts route through ``core.lower.PlanCache``:
+Two KV-cache layouts (``EngineConfig.kv_layout``):
 
-  * the optimized UPIR program + ``LoweredPlan`` for the decode shape, keyed
-    by the canonical ``program_fingerprint`` (a warm cache skips the whole
-    pass pipeline on repeat (config, shape, backend, mesh) requests);
-  * the jitted prefill (per prompt bucket), decode, and cache slot-insert
-    step functions.
+  * ``dense`` — one ``[slots, max_seq]`` block per layer; every admitted
+    request implicitly reserves the full horizon.
+  * ``paged`` — a ``[num_pages, page_size]`` physical pool per layer plus a
+    per-slot page table and a free-list allocator (``PagedKVAllocator``).
+    Sequences hold only the pages they have actually reached, so admission
+    **overcommits**: a request is admitted when its *prompt* pages are free,
+    not when its worst-case horizon is. If the pool truly runs dry mid-decode
+    the newest-admitted sequence is evicted (pages freed, request requeued at
+    the front; greedy decode is deterministic, so recomputation reproduces the
+    same stream). Decode gathers K/V through the page table — host XLA gather
+    or the Pallas kernel (``kernels/paged_attention``) per
+    ``EngineConfig.decode_kernel``.
 
-Prompts are right-padded to the nearest configured bucket so each bucket
-compiles exactly once; generation starts after the padded prompt (the
-sequential baseline below pads identically, so comparisons are exact).
+Paged mode also enables **chunked prefill** (``prefill_chunk > 0``): prompts
+prefill page-aligned chunk by chunk, one chunk per engine step, interleaved
+with decode — long prompts stop stalling the decode batch, which is what
+drops tail time-to-first-token at depth.
+
+All compiled artifacts route through ``core.lower.PlanCache``; the paged page
+geometry is part of the UPIR program (``paged_kv_alloc`` data attributes +
+``alloc_pages``/``free_pages`` MemOps), so it participates in the canonical
+``program_fingerprint`` and therefore the cache key.
 
 Engine events and stats flow through the same trace machinery the pass
 pipeline uses: a list of dicts, one per event, interleaved with the per-pass
@@ -37,6 +50,7 @@ import numpy as np
 from ..configs.base import ArchConfig, ShapeCfg
 from ..core.lower import PlanCache, default_plan_cache
 from ..models import api
+from ..models.layers import cache_write_pages
 
 # ----------------------------------------------------------------- requests
 
@@ -48,16 +62,19 @@ class Request:
     rid: int
     prompt: Sequence[int]
     max_new_tokens: int
-    state: str = "new"             # new | queued | active | done | rejected
+    state: str = "new"             # new | queued | prefilling | active | done | rejected
     reason: str = ""               # rejection reason
     bucket: int = 0                # padded prompt length
     slot: int = -1                 # decode slot while active
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
+    t_first: float = 0.0           # first token produced (TTFT = t_first - t_submit)
     t_done: float = 0.0
     # engine-internal countdown of decode steps remaining
     _remaining: int = 0
     _first_tok: Any = None
+    _admit_seq: int = 0            # monotonic admission order (eviction policy)
+    _chunk_cursor: int = 0         # chunked prefill progress
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,10 +82,57 @@ class EngineConfig:
     slots: int = 4                     # fixed decode batch width
     max_queue: int = 64                # admission-control queue bound
     prompt_buckets: Tuple[int, ...] = (16, 32, 64)
-    max_seq: int = 128                 # KV-cache horizon per slot
+    max_seq: int = 128                 # per-sequence horizon
     backend: str = "jit"               # single-process jax.jit serving
     keep_results: int = 4096           # unfinalized request outputs retained
     max_trace_events: int = 10000      # trace ring bound (long-lived process)
+    # ---- paged KV cache (explicit memory management)
+    kv_layout: str = "dense"           # dense | paged
+    page_size: int = 16                # tokens per physical KV page
+    num_pages: int = 0                 # allocatable pages; 0 = slots*ceil(max_seq/page_size)
+    prefill_chunk: int = 0             # 0 = one-shot prefill; else chunk length
+    decode_kernel: str = "xla"         # xla (gather) | pallas (paged-attention kernel)
+
+
+# --------------------------------------------------------- free-list allocator
+
+
+class PagedKVAllocator:
+    """Host-side free list over the physical KV pages ``1..num_pages``.
+
+    Page 0 is the reserved null page (``models.layers.NULL_PAGE``) — never
+    handed out, so unmapped page-table entries always point somewhere
+    harmless. Double-free and foreign-page frees raise: a page accounting bug
+    silently corrupts another sequence's KV, so it must be loud.
+    """
+
+    def __init__(self, num_pages: int):
+        self.total = num_pages
+        self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> low ids
+        self._in_use: set = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """``n`` pages, or None (all-or-nothing) when the pool can't cover it."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._in_use.update(pages)
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p not in self._in_use:
+                raise ValueError(f"free of page {p} not in use (double free?)")
+            self._in_use.remove(p)
+            self._free.append(p)
 
 
 # ------------------------------------------------------------------- engine
@@ -86,50 +150,90 @@ class Engine:
                 "(ROADMAP: multi-modal engine)")
         self.cfg = cfg
         self.ecfg = ecfg
+        self.paged = ecfg.kv_layout == "paged"
+        if self.paged:
+            if not api.supports_paged_kv(cfg):
+                raise NotImplementedError(
+                    f"paged KV cache: family '{cfg.family}' has no pageable "
+                    f"dense K/V cache (ROADMAP)")
+            if ecfg.page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            if ecfg.prefill_chunk:
+                if ecfg.prefill_chunk % ecfg.page_size:
+                    raise ValueError("prefill_chunk must be a multiple of "
+                                     "page_size (chunks write whole pages)")
+                bad = [b for b in ecfg.prompt_buckets
+                       if b > ecfg.prefill_chunk and b % ecfg.prefill_chunk]
+                if bad:
+                    raise ValueError(f"prompt buckets {bad} not divisible by "
+                                     f"prefill_chunk {ecfg.prefill_chunk}")
         self.plan_cache = plan_cache if plan_cache is not None \
             else default_plan_cache()
         self.trace = trace if trace is not None else []
 
+        self.pages_per_slot = -(-ecfg.max_seq // ecfg.page_size)
+        self.num_pages = (ecfg.num_pages or ecfg.slots * self.pages_per_slot) \
+            if self.paged else 0
+        page_geom = (self.num_pages, ecfg.page_size, self.pages_per_slot) \
+            if self.paged else None
+
         # the decode plan: UPIR program -> pass pipeline -> LoweredPlan,
-        # cached by canonical fingerprint (warm engines skip re-lowering)
+        # cached by canonical fingerprint (warm engines skip re-lowering);
+        # the paged page geometry is fingerprinted with it
         from . import server
         self.shape = ShapeCfg(f"engine_b{ecfg.slots}", "decode",
                               ecfg.max_seq, ecfg.slots)
         self.plan = server.serving_plan(cfg, self.shape, backend=ecfg.backend,
                                         plan_cache=self.plan_cache,
-                                        trace=self.trace)
+                                        trace=self.trace,
+                                        page_geometry=page_geom)
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
 
         fkey = (self.plan.fingerprint, cfg, ecfg.backend, ecfg.slots,
-                ecfg.max_seq)
-        self._decode = self.plan_cache.get_or_build(
-            fkey + ("decode",), self._build_decode)
-        self._insert = self.plan_cache.get_or_build(
-            fkey + ("insert",), self._build_insert)
+                ecfg.max_seq, ecfg.kv_layout)
+        if self.paged:
+            fkey += (ecfg.decode_kernel,)
+            self._decode = self.plan_cache.get_or_build(
+                fkey + ("decode",), self._build_decode_paged)
+            self._page_insert = self.plan_cache.get_or_build(
+                fkey + ("page_insert",), self._build_page_insert)
+            if ecfg.prefill_chunk:
+                self._chunk_prefill = self.plan_cache.get_or_build(
+                    fkey + ("chunk_prefill", ecfg.prefill_chunk),
+                    self._build_chunk_prefill)
+        else:
+            self._decode = self.plan_cache.get_or_build(
+                fkey + ("decode",), self._build_decode)
+            self._insert = self.plan_cache.get_or_build(
+                fkey + ("insert",), self._build_insert)
         self._fkey = fkey
 
         # mutable serving state
-        self.cache = api.init_cache(cfg, ecfg.slots, ecfg.max_seq)
+        if self.paged:
+            self.pool = api.init_paged_cache(cfg, self.num_pages,
+                                             ecfg.page_size)
+            self.allocator = PagedKVAllocator(self.num_pages)
+            self.page_table_np = np.zeros(
+                (ecfg.slots, self.pages_per_slot), np.int32)
+            self._slot_pages: List[List[int]] = [[] for _ in range(ecfg.slots)]
+        else:
+            self.cache = api.init_cache(cfg, ecfg.slots, ecfg.max_seq)
         self.tokens = jnp.zeros((ecfg.slots, 1), jnp.int32)
         self.pos = np.zeros((ecfg.slots,), np.int32)
         self.queue: Deque[Request] = deque()
         self.slots_req: List[Optional[Request]] = [None] * ecfg.slots
+        self._prefilling: Dict[int, Request] = {}
         self._slot_used = [False] * ecfg.slots
         self._toklog: List[Tuple[Any, Tuple[int, ...]]] = []
         self._pending_tokens: Dict[int, List[int]] = {}
         self._rid = 0
+        self._admit_counter = 0
+        self._activated: List[Request] = []
+        self._sync_each_step = False
         # counters
-        self.decode_steps = 0
-        self.prefills = 0
-        self.recycles = 0
-        self.rejected = 0
-        self.submitted = 0
-        self.completed = 0
-        self.tokens_generated = 0
-        self._occupancy_sum = 0
-        self.elapsed_s = 0.0
+        self.reset_stats()
 
     # ------------------------------------------------------------ step fns
 
@@ -143,6 +247,41 @@ class Engine:
             return nxt.astype(jnp.int32), cache
 
         return jax.jit(step, donate_argnums=(1,))
+
+    def _build_decode_paged(self):
+        cfg, impl = self.cfg, self.ecfg.decode_kernel
+
+        def step(params, pool, page_table, tokens, pos):
+            logits, pool = api.decode_step_paged(
+                cfg, params, pool, page_table,
+                {"tokens": tokens, "pos": pos}, attn_impl=impl)
+            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            return nxt.astype(jnp.int32), pool
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    def _build_page_insert(self):
+        def ins(pool, k_chunk, v_chunk, page_ids):
+            return {"k_pages": cache_write_pages(pool["k_pages"], k_chunk,
+                                                 page_ids),
+                    "v_pages": cache_write_pages(pool["v_pages"], v_chunk,
+                                                 page_ids)}
+        return jax.jit(ins, donate_argnums=(0,))
+
+    def _build_chunk_prefill(self):
+        cfg = self.cfg
+
+        def chunk(params, pool, page_row, tokens, offset, page_ids):
+            logits, (k_c, v_c) = api.prefill_chunk(
+                cfg, params, pool, page_row, {"tokens": tokens}, offset)
+            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            pool = {"k_pages": cache_write_pages(pool["k_pages"], k_c,
+                                                 page_ids),
+                    "v_pages": cache_write_pages(pool["v_pages"], v_c,
+                                                 page_ids)}
+            return nxt.astype(jnp.int32), pool
+
+        return jax.jit(chunk, donate_argnums=(1,))
 
     def _cache_batch_dims(self):
         """Per-leaf batch dim of the cache pytree, found structurally: the dim
@@ -173,7 +312,11 @@ class Engine:
         return jax.jit(insert, donate_argnums=(0,))
 
     def _prefill_fn(self, bucket: int):
-        cfg, s_max = self.cfg, self.ecfg.max_seq
+        cfg = self.cfg
+        # paged one-shot prefill pads the cache only to the prompt's pages —
+        # the whole point: a short prompt no longer reserves the horizon
+        s_max = self._page_count(bucket) * self.ecfg.page_size if self.paged \
+            else self.ecfg.max_seq
 
         def build():
             def pre(params, tokens):
@@ -186,6 +329,9 @@ class Engine:
         return self.plan_cache.get_or_build(
             self._fkey + ("prefill", bucket), build)
 
+    def _page_count(self, tokens: int) -> int:
+        return -(-tokens // self.ecfg.page_size)
+
     # ------------------------------------------------------------ admission
 
     def make_request(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
@@ -194,7 +340,12 @@ class Engine:
                        max_new_tokens=max_new_tokens)
 
     def submit(self, req: Request) -> bool:
-        """Admission control: bounded queue + horizon check. False = rejected."""
+        """Admission control: bounded queue + horizon check. False = rejected.
+
+        Paged mode admits on the *prompt* footprint (overcommit) — the only
+        hard caps are the per-sequence horizon and the request alone fitting
+        the pool; transient exhaustion is handled later by eviction.
+        """
         req.t_submit = time.perf_counter()
         self.submitted += 1
         bucket = next((b for b in sorted(self.ecfg.prompt_buckets)
@@ -208,6 +359,11 @@ class Engine:
                                      f"{self.ecfg.max_seq}")
         if req.max_new_tokens < 1:
             return self._reject(req, "max_new_tokens must be >= 1")
+        if self.paged and \
+                self._page_count(bucket + req.max_new_tokens) > self.num_pages:
+            return self._reject(req, f"request needs "
+                                     f"{self._page_count(bucket + req.max_new_tokens)} "
+                                     f"pages; pool has {self.num_pages}")
         if len(self.queue) >= self.ecfg.max_queue:
             return self._reject(req, "queue full")
         req.bucket = bucket
@@ -225,79 +381,277 @@ class Engine:
 
     # ------------------------------------------------------------ serving
 
+    def _padded_prompt(self, req: Request) -> np.ndarray:
+        toks = np.zeros((req.bucket,), np.int32)
+        toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
+        return toks
+
+    def _mark_admitted(self, req: Request, i: int) -> None:
+        recycled = self._slot_used[i]
+        if recycled:
+            self.recycles += 1
+        self._slot_used[i] = True
+        self._admit_counter += 1
+        req._admit_seq = self._admit_counter
+        req.slot = i
+        self.trace.append({"event": "admit", "rid": req.rid, "slot": i,
+                           "recycled": recycled})
+
+    def _activate(self, req: Request, i: int, nxt0) -> None:
+        """Prefill finished: first token is in hand, slot joins the decode
+        batch (or the request completes outright for 1-token generations)."""
+        self.tokens = self.tokens.at[i, 0].set(nxt0[0])
+        self.pos[i] = req.bucket
+        self.prefills += 1
+        req.state = "active"
+        req._first_tok = nxt0
+        req._remaining = req.max_new_tokens - 1
+        if self._sync_each_step:
+            # latency mode: block on the first token so TTFT is stamped when
+            # it actually exists, not at step end (head-of-line prefill
+            # blocking inside a step stays visible)
+            jax.block_until_ready(nxt0)
+            req.t_first = time.perf_counter()
+        self._activated.append(req)
+        if req._remaining <= 0:
+            req.slot = i
+            self._finish(req)      # 1-token request: done at prefill
+        else:
+            self.slots_req[i] = req
+
     def _admit_into_free_slots(self) -> None:
+        if self.paged:
+            return self._admit_paged()
         for i in range(self.ecfg.slots):
             while self.slots_req[i] is None and self.queue:
                 req = self.queue.popleft()
-                toks = np.zeros((req.bucket,), np.int32)
-                toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
                 nxt0, one = self._prefill_fn(req.bucket)(
-                    self.params, jnp.asarray(toks)[None, :])
+                    self.params, jnp.asarray(self._padded_prompt(req))[None, :])
                 self.cache = self._insert(self.cache, one, i)
-                self.tokens = self.tokens.at[i, 0].set(nxt0[0])
-                self.pos[i] = req.bucket
-                self.prefills += 1
-                recycled = self._slot_used[i]
-                if recycled:
-                    self.recycles += 1
-                self._slot_used[i] = True
-                req.state, req.slot = "active", i
-                req._first_tok = nxt0
-                req._remaining = req.max_new_tokens - 1
-                self.trace.append({"event": "admit", "rid": req.rid,
-                                   "slot": i, "recycled": recycled})
-                if req._remaining <= 0:
-                    self._finish(req)      # 1-token request: done at prefill
-                else:
-                    self.slots_req[i] = req
+                self._mark_admitted(req, i)
+                self._activate(req, i, nxt0)
+
+    def _growth_reserve(self) -> int:
+        """Admission headroom: one free page per running sequence, so normal
+        decode growth rarely has to evict. This is the overcommit watermark —
+        worst-case demand may still exceed it, which eviction then absorbs."""
+        return sum(1 for r in self.slots_req if r is not None) \
+            + len(self._prefilling)
+
+    def _admit_paged(self) -> None:
+        while self.queue:
+            i = next((s for s in range(self.ecfg.slots)
+                      if self.slots_req[s] is None
+                      and s not in self._prefilling), None)
+            if i is None:
+                return
+            req = self.queue[0]
+            need = self._page_count(req.bucket)
+            if self.allocator.available < need + self._growth_reserve():
+                return                 # pool pressure: admit when pages free up
+            pages = self.allocator.alloc(need)
+            self.queue.popleft()
+            self._slot_pages[i] = pages
+            self.page_table_np[i, :] = 0
+            self.page_table_np[i, :len(pages)] = pages
+            self._mark_admitted(req, i)
+            # prompts longer than one chunk prefill incrementally; at or
+            # below a chunk, one-shot is strictly cheaper (one dispatch)
+            if self.ecfg.prefill_chunk and \
+                    req.bucket > self.ecfg.prefill_chunk:
+                req.state = "prefilling"
+                req._chunk_cursor = 0
+                self._prefilling[i] = req
+            else:
+                nxt0, one = self._prefill_fn(req.bucket)(
+                    self.params, jnp.asarray(self._padded_prompt(req))[None, :])
+                self.pool = self._page_insert(
+                    self.pool, one["k"], one["v"],
+                    jnp.asarray(pages, jnp.int32))
+                self._activate(req, i, nxt0)
+
+    def _prefill_tick(self) -> None:
+        """Advance chunked prefill: every prefilling slot moves one chunk per
+        step, shortest remaining prompt first — short requests reach their
+        first token before a long prompt's remaining chunks run, and no step
+        ever does more than ``slots * prefill_chunk`` tokens of prefill work
+        (that bound is what keeps decode latency flat under long prompts)."""
+        if not self._prefilling:
+            return
+        chunk = self.ecfg.prefill_chunk
+        order = sorted(self._prefilling.items(),
+                       key=lambda kv: (kv[1].bucket - kv[1]._chunk_cursor * chunk,
+                                       kv[1]._admit_seq))
+        for i, req in order:
+            off = req._chunk_cursor * chunk
+            toks = self._padded_prompt(req)[off:off + chunk]
+            ids = self._slot_pages[i][off // self.ecfg.page_size:
+                                      (off + chunk) // self.ecfg.page_size]
+            nxt, self.pool = self._chunk_prefill(
+                self.params, self.pool, jnp.asarray(self.page_table_np[i]),
+                jnp.asarray(toks)[None, :], jnp.int32(off),
+                jnp.asarray(ids, jnp.int32))
+            req._chunk_cursor += 1
+            self.prefill_chunks += 1
+            if off + chunk >= req.bucket:
+                del self._prefilling[i]
+                self._activate(req, i, nxt)
+
+    # ------------------------------------------------------ paged page flow
+
+    def _ensure_pages(self) -> None:
+        """Before decode, every active slot about to write position ``pos``
+        must own the page covering it. Allocation failures trigger eviction
+        of the newest-admitted active request (recompute-on-readmit), oldest
+        requests always make progress — liveness under overcommit."""
+        order = sorted((i for i in range(self.ecfg.slots)
+                        if self.slots_req[i] is not None),
+                       key=lambda i: self.slots_req[i]._admit_seq)
+        for i in order:
+            req = self.slots_req[i]
+            if req is None:
+                continue               # evicted while growing an older slot
+            while self.pos[i] // self.ecfg.page_size >= len(self._slot_pages[i]):
+                got = self.allocator.alloc(1)
+                if got is None:
+                    if not self._evict_newest():
+                        raise RuntimeError(
+                            "paged KV pool exhausted with no evictable "
+                            "sequence")  # unreachable: admission caps size
+                    if self.slots_req[i] is not req:
+                        break          # this slot itself was the victim
+                    continue
+                self._slot_pages[i].append(got[0])
+                self.page_table_np[i, len(self._slot_pages[i]) - 1] = got[0]
+
+    def _evict_newest(self) -> bool:
+        victims = [r for r in self.slots_req if r is not None]
+        if not victims:
+            return False
+        req = max(victims, key=lambda r: r._admit_seq)
+        i = req.slot
+        # flush the device token log so the victim's partial stream can be
+        # dropped (it will be recomputed identically on re-admission)
+        self._collect_tokens()
+        self._pending_tokens.pop(req.rid, None)
+        self.allocator.free(self._slot_pages[i])
+        self._slot_pages[i] = []
+        self.page_table_np[i, :] = 0
+        self.slots_req[i] = None
+        self.pos[i] = 0
+        req.state, req.slot = "queued", -1
+        req._first_tok = None
+        req._remaining = 0
+        req._chunk_cursor = 0
+        req.tokens_out = []
+        self.queue.appendleft(req)
+        self.evictions += 1
+        self.trace.append({"event": "evict", "rid": req.rid, "slot": i})
+        return True
+
+    def _release_pages(self, req: Request) -> None:
+        i = req.slot
+        if i < 0 or not self._slot_pages[i]:
+            return
+        self.allocator.free(self._slot_pages[i])
+        self._slot_pages[i] = []
+        self.page_table_np[i, :] = 0
+        self.pos[i] = 0
+
+    def _device_page_table(self):
+        """Decode sees real rows only for active slots; prefilling/free slots
+        are masked to the null page so their scatters and gathers are inert."""
+        mask = np.fromiter((self.slots_req[i] is not None
+                            for i in range(self.ecfg.slots)), bool,
+                           self.ecfg.slots)
+        return jnp.asarray(np.where(mask[:, None], self.page_table_np, 0))
+
+    # -------------------------------------------------------------- stepping
 
     def _finish(self, req: Request) -> None:
         req.state = "done"
         req.t_done = time.perf_counter()
         self.completed += 1
-        self.tokens_generated += req.max_new_tokens
+        # the first token comes from prefill logits; only the decode loop's
+        # tokens count toward decode throughput
+        self.prefill_tokens += 1
+        self.tokens_generated += req.max_new_tokens - 1
+        if self.paged:
+            self._release_pages(req)
         if req.slot >= 0 and self.slots_req[req.slot] is req:
             self.slots_req[req.slot] = None
         self.trace.append({"event": "finish", "rid": req.rid,
                            "slot": req.slot})
 
     def step(self) -> int:
-        """One engine iteration: refill free slots, then one decode step for
-        the whole batch. Returns the number of active slots decoded."""
+        """One engine iteration: refill free slots (and, in chunked mode,
+        advance one prefill chunk), then one decode step for the whole batch.
+        Returns the number of active slots decoded."""
+        self._activated = []
         self._admit_into_free_slots()
+        if self.paged:
+            self._prefill_tick()
+            # cold start / post-drain: nothing to decode yet, so spend the
+            # step activating the shortest prompt instead of idling
+            while self._prefilling and \
+                    not any(r is not None for r in self.slots_req):
+                self._prefill_tick()
+            self._ensure_pages()
         active = [i for i in range(self.ecfg.slots)
                   if self.slots_req[i] is not None]
-        if not active:
-            return 0
-        nxt, self.cache = self._decode(self.params, self.cache, self.tokens,
-                                       jnp.asarray(self.pos))
-        self.tokens = nxt[:, None]
-        rids = tuple(self.slots_req[i].rid if self.slots_req[i] is not None
-                     else -1 for i in range(self.ecfg.slots))
-        self._toklog.append((nxt, rids))
-        self.decode_steps += 1
-        self._occupancy_sum += len(active)
-        for i in active:
-            req = self.slots_req[i]
-            self.pos[i] += 1
-            req._remaining -= 1
-            if req._remaining <= 0:
-                self._finish(req)
+        if active:
+            if self.paged:
+                nxt, self.pool = self._decode(
+                    self.params, self.pool, self._device_page_table(),
+                    self.tokens, jnp.asarray(self.pos))
+            else:
+                nxt, self.cache = self._decode(
+                    self.params, self.cache, self.tokens,
+                    jnp.asarray(self.pos))
+            self.tokens = nxt[:, None]
+            rids = tuple(self.slots_req[i].rid if self.slots_req[i] is not None
+                         else -1 for i in range(self.ecfg.slots))
+            self._toklog.append((nxt, rids))
+            self.decode_steps += 1
+            self._occupancy_sum += len(active)
+            for i in active:
+                req = self.slots_req[i]
+                self.pos[i] += 1
+                req._remaining -= 1
+                if req._remaining <= 0:
+                    self._finish(req)
+        if self._sync_each_step:
+            jax.block_until_ready(self.tokens)
+        if self._activated and not self._sync_each_step:
+            now = time.perf_counter()
+            for r in self._activated:
+                r.t_first = now
+        self.peak_concurrent = max(self.peak_concurrent, len(active))
+        if self.paged:
+            self.peak_pages = max(self.peak_pages, self.allocator.in_use)
         return len(active)
 
     def run(self, requests: Sequence[Request] = (), *,
-            max_steps: int = 1_000_000) -> List[Request]:
-        """Submit ``requests`` and drive the engine until drained."""
+            max_steps: int = 1_000_000,
+            sync_per_step: bool = False) -> List[Request]:
+        """Submit ``requests`` and drive the engine until drained.
+
+        ``sync_per_step`` blocks on the device each step so per-request
+        timestamps (TTFT) are wall-clock-accurate — benchmark latency mode;
+        throughput runs leave it off (the hot loop never syncs)."""
         for r in requests:
             self.submit(r)
+        self._sync_each_step = sync_per_step
         t0 = time.perf_counter()
         steps = 0
-        while (self.queue or any(r is not None for r in self.slots_req)) \
+        while (self.queue or self._prefilling
+                or any(r is not None for r in self.slots_req)) \
                 and steps < max_steps:
             self.step()
             steps += 1
         jax.block_until_ready(self.tokens)
         self.elapsed_s += time.perf_counter() - t0
+        self._sync_each_step = False
         self._collect_tokens()
         self.trace.append({"event": "stats", **self.stats()})
         self._bound_state()
@@ -343,21 +697,27 @@ class Engine:
         throughput numbers exclude jit compilation."""
         self.decode_steps = 0
         self.prefills = 0
+        self.prefill_chunks = 0
         self.recycles = 0
         self.rejected = 0
         self.submitted = 0
         self.completed = 0
+        self.evictions = 0
         self.tokens_generated = 0
+        self.prefill_tokens = 0
+        self.peak_concurrent = 0
+        self.peak_pages = 0
         self._occupancy_sum = 0
         self.elapsed_s = 0.0
 
     def stats(self) -> Dict[str, Any]:
         occ = (self._occupancy_sum / self.decode_steps / self.ecfg.slots
                if self.decode_steps else 0.0)
-        return {
+        out = {
             "queue_depth": len(self.queue),
             "active_slots": sum(1 for r in self.slots_req if r is not None),
             "slots": self.ecfg.slots,
+            "kv_layout": self.ecfg.kv_layout,
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "recycles": self.recycles,
@@ -365,12 +725,24 @@ class Engine:
             "completed": self.completed,
             "rejected": self.rejected,
             "batch_occupancy": occ,
+            "peak_concurrent": self.peak_concurrent,
             "tokens_generated": self.tokens_generated,
+            "prefill_tokens": self.prefill_tokens,
             "elapsed_s": self.elapsed_s,
             "tokens_per_s": (self.tokens_generated / self.elapsed_s
                              if self.elapsed_s else 0.0),
             "plan_cache": self.plan_cache.stats(),
         }
+        if self.paged:
+            out.update({
+                "page_size": self.ecfg.page_size,
+                "num_pages": self.num_pages,
+                "pages_in_use": self.allocator.in_use,
+                "peak_pages": self.peak_pages,
+                "evictions": self.evictions,
+                "prefill_chunks": self.prefill_chunks,
+            })
+        return out
 
 
 # ------------------------------------------------------- sequential baseline
@@ -382,6 +754,11 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
     """The pre-engine path: one request at a time, B=1 prefill + B=1 decode
     loop. Pads prompts to the same buckets as the engine so token streams are
     comparable; ``warmup`` compiles both steps before the timed region.
+
+    Mirrors engine accounting: over-horizon requests are marked rejected and
+    excluded from throughput (not silently served as empty), and
+    ``tokens_per_s`` counts decode-loop tokens only (the first token of each
+    request comes from prefill logits and is tallied in ``prefill_tokens``).
     Returns per-request tokens + aggregate throughput."""
     def pre(params, tokens):
         logits, cache = api.prefill(cfg, params, {"tokens": tokens},
@@ -410,12 +787,22 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
 
     outputs: Dict[int, List[int]] = {}
     total = 0
+    prefill_tokens = 0
+    rejected = 0
     t0 = time.perf_counter()
     for req in requests:
         bucket = next((b for b in sorted(prompt_buckets)
                        if b >= len(req.prompt)), None)
-        if bucket is None or bucket + req.max_new_tokens > max_seq:
-            outputs[req.rid] = []
+        if bucket is None:
+            req.state, req.reason = "rejected", \
+                f"prompt len {len(req.prompt)} exceeds largest bucket"
+            rejected += 1
+            continue
+        if bucket + req.max_new_tokens > max_seq:
+            req.state, req.reason = "rejected", \
+                f"bucket {bucket} + {req.max_new_tokens} new tokens exceeds " \
+                f"max_seq {max_seq}"
+            rejected += 1
             continue
         toks = np.zeros((bucket,), np.int32)
         toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
@@ -427,8 +814,12 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             gen.append(nxt)
         jax.block_until_ready(gen[-1])
         outputs[req.rid] = [int(np.asarray(g)[0]) for g in gen]
-        total += req.max_new_tokens
+        req.state = "done"
+        prefill_tokens += 1
+        total += req.max_new_tokens - 1
     elapsed = time.perf_counter() - t0
     return {"tokens": outputs, "tokens_generated": total,
+            "prefill_tokens": prefill_tokens,
+            "served": len(outputs), "rejected": rejected,
             "elapsed_s": elapsed,
             "tokens_per_s": total / elapsed if elapsed else 0.0}

@@ -27,17 +27,23 @@ from ..models import api
 
 def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  mesh=None, plan_cache: Optional[PlanCache] = None,
-                 trace: Optional[list] = None) -> LoweredPlan:
-    """(config, shape, backend, mesh) -> LoweredPlan, via the PlanCache.
+                 trace: Optional[list] = None,
+                 page_geometry: Optional[Tuple[int, int, int]] = None
+                 ) -> LoweredPlan:
+    """(config, shape, backend, mesh[, page geometry]) -> LoweredPlan, via the
+    PlanCache.
 
     Builds the UPIR program for the serving step and asks the cache for its
     optimized/lowered form; a warm cache skips the pass pipeline entirely
-    (the hit is visible in ``plan_cache.stats()``).
+    (the hit is visible in ``plan_cache.stats()``). ``page_geometry``
+    switches the decode program to the paged-KV layout — the geometry is
+    fingerprinted, so paged and dense plans (and different page sizes) never
+    collide in the cache.
     """
     from ..core.plans import build_program
     cache = plan_cache if plan_cache is not None else default_plan_cache()
     mesh_shape = tuple(mesh.shape.items()) if mesh is not None else None
-    prog = build_program(cfg, shape)
+    prog = build_program(cfg, shape, page_geometry=page_geometry)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)
 

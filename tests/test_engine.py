@@ -2,6 +2,7 @@
 accounting, slot recycling under mixed-length decode, and engine-vs-sequential
 token equality."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -116,7 +117,12 @@ def test_engine_matches_sequential_tokens(params):
     st = engine.stats()
     assert st["completed"] == 4
     assert st["recycles"] >= 2          # 4 requests through 2 slots
-    assert st["tokens_generated"] == 4 * TOKENS
+    # first tokens come from prefill logits and are tallied separately;
+    # tokens_generated counts the decode loop only
+    assert st["tokens_generated"] == 4 * (TOKENS - 1)
+    assert st["prefill_tokens"] == 4
+    assert seq["tokens_generated"] == 4 * (TOKENS - 1)
+    assert seq["prefill_tokens"] == 4
 
 
 def test_engine_slot_recycling_mixed_lengths(params):
@@ -176,3 +182,247 @@ def test_engine_trace_has_lifecycle_events(params):
     assert passes, "pass-pipeline trace entries flow through the same list"
     for ev in ("submit", "admit", "finish", "stats"):
         assert ev in events
+
+
+# ---------------------------------------------------------------- paged KV
+
+from _hyp import given, settings, st  # noqa: E402  (hypothesis or fallback)
+
+from repro.models.layers import (NULL_PAGE, attention_decode,  # noqa: E402
+                                 attention_decode_paged)
+from repro.runtime.engine import PagedKVAllocator  # noqa: E402
+
+PAGE = 4  # page size for engine tests (MAX_SEQ=16 -> 4 pages per slot)
+
+
+def mk_paged(params, cfg=CFG, slots=2, num_pages=0, prefill_chunk=0,
+             decode_kernel="xla"):
+    return Engine(cfg, EngineConfig(slots=slots, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ, kv_layout="paged",
+                                    page_size=PAGE, num_pages=num_pages,
+                                    prefill_chunk=prefill_chunk,
+                                    decode_kernel=decode_kernel),
+                  params=params, plan_cache=PlanCache())
+
+
+def run_streams(engine, workload):
+    reqs = [engine.make_request(p, n) for p, n in workload]
+    engine.run(reqs)
+    return [engine.finalize_request(r) for r in reqs], reqs
+
+
+def mixed_workload(n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, CFG.vocab, size=int(rng.integers(1, BUCKET + 1))
+                          ).tolist(), int(rng.integers(1, TOKENS + 1)))
+            for _ in range(n)]
+
+
+def test_paged_engine_matches_dense_tokens(params):
+    work = mixed_workload()
+    dense, dreqs = run_streams(mk_engine(params, slots=2), work)
+    paged, preqs = run_streams(mk_paged(params, slots=2), work)
+    assert dense == paged
+    assert all(r.state == "done" for r in preqs)
+    st_ = [e for e in (mk_paged(params, slots=2),)][0]  # fresh engine stats keys
+    assert st_.stats()["kv_layout"] == "paged"
+
+
+def test_paged_engine_mha_matches_dense(params):
+    """Non-GQA (KV == H) config through both layouts."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, n_kv_heads=CFG.n_heads)
+    p = api.init_params(cfg, jax.random.key(2))
+    work = mixed_workload(4, seed=5)
+    dense, _ = run_streams(Engine(cfg, EngineConfig(
+        slots=2, prompt_buckets=(BUCKET,), max_seq=MAX_SEQ),
+        params=p, plan_cache=PlanCache()), work)
+    paged, _ = run_streams(mk_paged(p, cfg=cfg), work)
+    assert dense == paged
+
+
+def test_paged_engine_pallas_kernel_matches(params):
+    work = mixed_workload(3, seed=7)
+    dense, _ = run_streams(mk_engine(params, slots=2), work)
+    paged, _ = run_streams(mk_paged(params, decode_kernel="pallas"), work)
+    assert dense == paged
+
+
+def test_chunked_prefill_matches_dense(params):
+    work = mixed_workload(5, seed=9)
+    dense, _ = run_streams(mk_engine(params, slots=2), work)
+    chunked, reqs = run_streams(mk_paged(params, prefill_chunk=PAGE), work)
+    assert dense == chunked
+    # prompts longer than one chunk actually went through the chunked path
+    engine = mk_paged(params, prefill_chunk=PAGE)
+    _, reqs = run_streams(engine, [([1] * BUCKET, 3)])
+    assert engine.stats()["prefill_chunks"] == BUCKET // PAGE
+
+
+def test_paged_overcommit_eviction_recovers(params):
+    """Pool smaller than worst-case demand: admission overcommits, decode
+    growth evicts, every request still completes with the dense stream."""
+    work = [(p, TOKENS) for p in prompts(6)]
+    dense, _ = run_streams(mk_engine(params, slots=2), work)
+    engine = mk_paged(params, slots=4, num_pages=10)
+    paged, reqs = run_streams(engine, work)
+    st_ = engine.stats()
+    assert st_["evictions"] > 0
+    assert all(r.state == "done" for r in reqs)
+    assert paged == dense
+    # drained engine: every page returned to the free list
+    assert st_["pages_in_use"] == 0
+    assert engine.allocator.available == engine.num_pages
+    assert st_["peak_pages"] <= engine.num_pages
+
+
+def test_paged_engine_rejects_oversized_and_unpageable(params):
+    engine = mk_paged(params, slots=2, num_pages=2)
+    req = engine.make_request([1] * BUCKET, TOKENS)  # needs 4 pages > 2
+    assert not engine.submit(req)
+    assert "pages" in req.reason
+    from repro.configs import smoke_config
+    with pytest.raises(NotImplementedError):
+        Engine(smoke_config("xlstm-350m"),
+               EngineConfig(kv_layout="paged"), plan_cache=PlanCache())
+
+
+def test_paged_windowed_attention_matches_rolling():
+    """Layer-level: the paged logical-order window mask reproduces the dense
+    rolling-cache window attention over the same logical keys."""
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd, W, ps = 2, 16, 4, 2, 8, 6, 4
+    pos = np.asarray([7, 15], np.int32)
+    kl = rng.normal(size=(B, S, KV, hd)).astype(np.float32)
+    vl = rng.normal(size=(B, S, KV, hd)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, hd)).astype(np.float32))
+    new = (jnp.asarray(rng.normal(size=(B, 1, KV, hd)).astype(np.float32)),
+           jnp.asarray(rng.normal(size=(B, 1, KV, hd)).astype(np.float32)))
+    # dense rolling layout: slot p % W holds logical position p
+    k_roll = np.zeros((B, W, KV, hd), np.float32)
+    v_roll = np.zeros((B, W, KV, hd), np.float32)
+    for b in range(B):
+        for p in range(max(0, pos[b] - W), pos[b]):
+            k_roll[b, p % W] = kl[b, p]
+            v_roll[b, p % W] = vl[b, p]
+    # paged logical layout
+    P = S // ps
+    pool_k = np.zeros((B * P + 1, ps, KV, hd), np.float32)
+    pool_v = np.zeros((B * P + 1, ps, KV, hd), np.float32)
+    pt = np.zeros((B, P), np.int32)
+    for b in range(B):
+        for i in range(P):
+            phys = 1 + b * P + i
+            pt[b, i] = phys
+            pool_k[phys] = kl[b, i * ps:(i + 1) * ps]
+            pool_v[phys] = vl[b, i * ps:(i + 1) * ps]
+    want = attention_decode(q, jnp.asarray(k_roll), jnp.asarray(v_roll),
+                            jnp.asarray(pos), window=W, new_kv=new)
+    got = attention_decode_paged(q, jnp.asarray(pool_k), jnp.asarray(pool_v),
+                                 jnp.asarray(pt), jnp.asarray(pos),
+                                 window=W, new_kv=new)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_program_fingerprint_and_plan():
+    from repro.core.lower import plan_from_program
+    from repro.core.printer import to_mlir
+    shape = decode_shape()
+    fp_dense = program_fingerprint(build_program(CFG, shape))
+    prog = build_program(CFG, shape, page_geometry=(15, PAGE, 4))
+    fp_paged = program_fingerprint(prog)
+    fp_other = program_fingerprint(
+        build_program(CFG, shape, page_geometry=(15, 2 * PAGE, 2)))
+    assert len({fp_dense, fp_paged, fp_other}) == 3
+    text = to_mlir(prog)
+    assert "allocator(paged_kv_alloc)" in text
+    assert "upir.memory_alloc" in text and "upir.memory_dealloc" in text
+    assert "mm(page_size(4) num_pages(15) pages_per_slot(4))" in text
+    assert "mm(page_map)" in text
+    plan = plan_from_program(run_pipeline(prog))
+    assert plan.page_geometry == (15, PAGE, 4)
+    assert plan_from_program(run_pipeline(build_program(CFG, shape))) \
+        .page_geometry is None
+
+
+def test_paged_plan_cache_warm_across_engines(params):
+    cache = PlanCache()
+    ecfg = EngineConfig(slots=2, prompt_buckets=(BUCKET,), max_seq=MAX_SEQ,
+                        kv_layout="paged", page_size=PAGE)
+    e1 = Engine(CFG, ecfg, params=params, plan_cache=cache)
+    e1.run([e1.make_request(p, 2) for p in prompts(2)])
+    misses = cache.misses
+    e2 = Engine(CFG, ecfg, params=params, plan_cache=cache)
+    e2.run([e2.make_request(p, 2) for p in prompts(2)])
+    assert cache.misses == misses      # warm: plan, decode, inserts, prefill
+    # a dense engine on the same cache must NOT collide with the paged plans
+    e3 = Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                  max_seq=MAX_SEQ),
+                params=params, plan_cache=cache)
+    assert cache.misses > misses
+
+
+@given(st.lists(st.integers(min_value=-4, max_value=4), min_size=1,
+                max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_paged_allocator_properties(ops):
+    """No page leaked, none double-allocated, double-free raises."""
+    total = 12
+    alloc = PagedKVAllocator(total)
+    live: list = []
+    for op in ops:
+        if op > 0:
+            got = alloc.alloc(op)
+            if got is None:
+                assert alloc.available < op   # all-or-nothing
+            else:
+                assert len(set(got)) == op
+                assert all(NULL_PAGE < p <= total for p in got)
+                for g in live:
+                    assert not set(got) & set(g)
+                live.append(got)
+        elif op < 0 and live:
+            grp = live.pop(-op % len(live))
+            alloc.free(grp)
+            with pytest.raises(ValueError):
+                alloc.free(grp)
+        assert alloc.available + alloc.in_use == total
+        assert alloc.in_use == sum(len(g) for g in live)
+    for g in live:
+        alloc.free(g)
+    assert alloc.available == total
+
+
+# ---------------------------------------------- accounting (decode-only)
+
+
+def test_sequential_rejects_over_horizon(params):
+    """Over-horizon requests are marked rejected and excluded from the
+    throughput denominator (previously: silent [] + counted)."""
+    e = mk_engine(params, slots=1)
+    good = e.make_request(prompts(1)[0], 2)
+    too_long = e.make_request(prompts(1)[0], TOKENS + 99)
+    huge = e.make_request(list(range(BUCKET + 5)), 2)
+    out = serve_sequential(CFG, params, [good, too_long, huge],
+                           max_seq=MAX_SEQ, prompt_buckets=(BUCKET,),
+                           warmup=False)
+    assert out["rejected"] == 2 and out["served"] == 1
+    assert too_long.state == "rejected" and "exceeds" in too_long.reason
+    assert huge.state == "rejected"
+    assert good.rid in out["tokens"] and too_long.rid not in out["tokens"]
+    assert out["tokens_generated"] == 1     # max_new=2 -> 1 decode token
+    assert out["prefill_tokens"] == 1
+
+
+def test_prefill_first_token_accounted_separately(params):
+    """1-token requests complete at prefill: decode throughput must be 0."""
+    engine = mk_engine(params, slots=2)
+    reqs = [engine.make_request(p, 1) for p in prompts(3)]
+    engine.run(reqs)
+    st_ = engine.stats()
+    assert st_["completed"] == 3
+    assert st_["tokens_generated"] == 0
+    assert st_["prefill_tokens"] == 3
+    assert st_["decode_steps"] == 0
+    assert all(len(engine.finalize_request(r)) == 1 for r in reqs)

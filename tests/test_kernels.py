@@ -115,3 +115,38 @@ def test_matmul_shape_sweep(m, k, n):
     a, b = rnd((m, k), scale=0.3, seed=22), rnd((k, n), scale=0.3, seed=23)
     out = ops.matmul(a, b, bm=128, bn=128, bk=128)
     np.testing.assert_allclose(out, ref.matmul(a, b), rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------ paged-attention decode
+
+
+def _paged_pool(B, S, KV, hd, page_size, seed=30):
+    """Random pool + a shuffled page table covering S logical positions."""
+    P = S // page_size
+    NP = B * P + 1                       # + reserved null page 0
+    k = rnd((NP, page_size, KV, hd), seed=seed)
+    v = rnd((NP, page_size, KV, hd), seed=seed + 1)
+    perm = np.random.default_rng(seed).permutation(np.arange(1, NP))
+    pt = jnp.asarray(perm[:B * P].reshape(B, P).astype(np.int32))
+    return k, v, pt
+
+
+@pytest.mark.parametrize("KV,window", [(4, 0), (2, 0), (2, 10)])
+def test_paged_attention_kernel_vs_xla(KV, window):
+    from repro.kernels.paged_attention import paged_attention_decode
+    from repro.models.layers import attention_decode_paged
+
+    B, S, H, hd, ps = 3, 32, 4, 16, 8
+    q = rnd((B, 1, H, hd), seed=40)
+    k_pages, v_pages, pt = _paged_pool(B, S, KV, hd, ps, seed=41)
+    pos = jnp.asarray([0, 13, 31], jnp.int32)
+    new_kv = (rnd((B, 1, KV, hd), seed=42), rnd((B, 1, KV, hd), seed=43))
+    for nkv in (None, new_kv):
+        want = attention_decode_paged(q, k_pages, v_pages, pt, pos,
+                                      window=window, new_kv=nkv)
+        got = paged_attention_decode(q, k_pages, v_pages, pt, pos,
+                                     window=window, new_kv=nkv,
+                                     interpret=True)
+        assert not bool(jnp.isnan(got).any())
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
