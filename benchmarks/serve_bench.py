@@ -32,6 +32,20 @@ asserted identical across all three. ``--json`` writes the section-2 metrics
 (tokens/s, p99 TTFT, peak pages in use, ...) for perf tracking — CI emits
 ``BENCH_2.json``.
 
+Section 3 — the unified decode API smoke (ModelFamily protocol +
+sampling/EOS), two comparisons through the same engine loop:
+
+  * greedy vs sampled on a dense config: greedy engine streams must equal
+    the sequential reference bitwise (CI gate — the sampling machinery must
+    not perturb the greedy path), sampled streams with a fixed seed must
+    replay identically, and sampled-with-EOS must terminate early;
+  * dense vs encdec: a whisper config serves end-to-end through the engine
+    (per-slot encoder memory filled at admission) and its greedy streams
+    must equal the sequential encdec reference (CI gate).
+
+``--json3`` writes the section-3 metrics — CI emits ``BENCH_3.json`` and
+fails on any greedy stream divergence, same gate as section 2.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -266,14 +280,137 @@ def bench_paged(json_path=None):
     return results
 
 
+# ----------------------------------- unified decode API (sampling + encdec)
+
+UNIFIED_ARCH = "tinyllama-1.1b"
+ENCDEC_ARCH = "whisper-large-v3"
+U_BUCKET = 16
+U_TOKENS = 16
+U_REQUESTS = 12
+U_SLOTS = 4
+
+
+def _engine_for(cfg, params, **kw):
+    from repro.runtime.engine import Engine, EngineConfig
+    ecfg = EngineConfig(slots=U_SLOTS, prompt_buckets=(U_BUCKET,),
+                        max_seq=U_BUCKET + U_TOKENS, **kw)
+    return Engine(cfg, ecfg, params=params)
+
+
+def _serve(cfg, params, workload, *, sampling=None, eos_id=None, **kw):
+    engine = _engine_for(cfg, params, **kw)
+
+    def mk():
+        return [engine.make_request(p, n, sampling=sampling, eos_id=eos_id,
+                                    encoder_input=f) for p, n, f in workload]
+
+    engine.run(mk())              # warm (jit compile)
+    engine.reset_stats()
+    reqs = mk()
+    engine.run(reqs)
+    streams = [engine.finalize_request(r) for r in reqs]
+    return streams, engine.stats(), reqs
+
+
+def bench_unified(json_path=None):
+    """Greedy-vs-sampled and dense-vs-encdec smokes through one engine loop
+    (section 3). Greedy streams are a CI gate, not just a metric."""
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import serve_sequential
+    from repro.runtime.sampling import SamplingParams
+
+    rows = {}
+    diverged = []
+    for name, arch in (("dense", UNIFIED_ARCH), ("encdec", ENCDEC_ARCH)):
+        cfg = smoke_config(arch)
+        spec = api.family_spec(cfg)
+        params = api.init_params(cfg, jax.random.key(0))
+        rng = np.random.default_rng(17)
+
+        def frames():
+            if not spec.needs_encoder_memory:
+                return None
+            return (rng.normal(size=(cfg.encdec.enc_seq, cfg.d_model))
+                    * 0.02).astype(np.float32)
+
+        workload = [(rng.integers(0, cfg.vocab, size=U_BUCKET).tolist(),
+                     int(rng.integers(U_TOKENS // 2, U_TOKENS + 1)), frames())
+                    for _ in range(U_REQUESTS)]
+
+        greedy, gst, greqs = _serve(cfg, params, workload)
+        seq = serve_sequential(cfg, params, greqs,
+                               max_seq=U_BUCKET + U_TOKENS,
+                               prompt_buckets=(U_BUCKET,), warmup=False)
+        greedy_match = greedy == [seq["tokens"][r.rid] for r in greqs]
+        if not greedy_match:
+            diverged.append(name)
+
+        sp = SamplingParams(temperature=0.9, top_k=32, seed=123)
+        s1, sst, _ = _serve(cfg, params, workload, sampling=sp)
+        s2, _, _ = _serve(cfg, params, workload, sampling=sp)
+        replay_match = s1 == s2
+        if not replay_match:
+            diverged.append(f"{name}-sampled-replay")
+
+        # EOS smoke: stop on a token the greedy stream actually emits
+        eos_id = greedy[0][0]
+        _, est, ereqs = _serve(cfg, params, workload, eos_id=eos_id,
+                               eos_poll_every=1)
+        rows[name] = {
+            "arch": cfg.name,
+            "capabilities": list(spec.capabilities),
+            "greedy_tok_s": gst["tokens_per_s"],
+            "sampled_tok_s": sst["tokens_per_s"],
+            "greedy_matches_sequential": greedy_match,
+            "sampled_replay_identical": replay_match,
+            "sampled_differs_from_greedy": s1 != greedy,
+            "eos_finished": est["eos_finished"],
+            "eos_decode_tokens": est["tokens_generated"],
+            "budget_decode_tokens": gst["tokens_generated"],
+        }
+
+    print("# serve_bench_unified: family,arch,caps,greedy_tok_s,"
+          "sampled_tok_s,greedy_match,sampled_replay,eos_finished")
+    for name, r in rows.items():
+        print(f"{name},{r['arch']},{'+'.join(r['capabilities'])},"
+              f"{r['greedy_tok_s']:.1f},{r['sampled_tok_s']:.1f},"
+              f"{r['greedy_matches_sequential']},"
+              f"{r['sampled_replay_identical']},{r['eos_finished']}")
+    print(f"# unified decode API: encdec serves the same loop as dense; "
+          f"greedy streams gated; EOS saved "
+          f"{rows['dense']['budget_decode_tokens'] - rows['dense']['eos_decode_tokens']}"
+          f" decode tokens on the dense smoke")
+
+    if json_path:
+        payload = {"bench": "unified_decode_api",
+                   "requests": U_REQUESTS, "slots": U_SLOTS,
+                   "families": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    if diverged:
+        # CI gate: the sampling/EOS/encdec redesign must not move greedy
+        # streams, and fixed-seed sampling must replay deterministically
+        raise SystemExit(f"serve_bench_unified: stream divergence in "
+                         f"{diverged}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None,
                     help="write paged-benchmark metrics to this JSON file")
+    ap.add_argument("--json3", default=None,
+                    help="write unified-decode-API metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
+    bench_unified(json_path=args.json3)
 
 
 if __name__ == "__main__":

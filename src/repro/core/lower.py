@@ -80,6 +80,9 @@ class LoweredPlan:
     # paged-KV geometry (num_pages, page_size, pages_per_slot) when the
     # program manages the decode cache through paged_kv_alloc, else None
     page_geometry: Optional[Tuple[int, int, int]] = None
+    # ModelFamily capability flags carried by the decode cache's data attr
+    # (models.api.FamilySpec -> core.plans -> printer caps(...) rendering)
+    capabilities: Tuple[str, ...] = ()
 
     # ------------------------------------------------------------------ meshes
 
@@ -174,6 +177,14 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
                              ir.ext_get(attr.extensions, "pages_per_slot", 0))
             break
 
+    from .printer import CAP_EXT_KEYS
+    capabilities: Tuple[str, ...] = ()
+    for attr in ir.find_all(prog, ir.DataAttr):
+        if attr.symbol == "cache":
+            capabilities = tuple(k for k in CAP_EXT_KEYS
+                                 if ir.ext_get(attr.extensions, k) is True)
+            break
+
     batch_axes: list = []
     seq_axis = None
     microbatches = 1
@@ -211,7 +222,8 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         microbatches=microbatches,
         remat=ir.ext_get(prog.extensions, "remat", "none"),
         grad_reduce=grad_reduce, zero=zero, compression=compression,
-        collectives=syncs, page_geometry=page_geometry)
+        collectives=syncs, page_geometry=page_geometry,
+        capabilities=capabilities)
 
 
 # ----------------------------------------------------- explicit sync lowering

@@ -233,11 +233,17 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
         b.data("grads", sharing="private", access="read-write", fsdp=fsdp)
     else:
         b.data("params", mapping="to", access="read-only")
+        # ModelFamily capability flags (api.FamilySpec) become data-attribute
+        # extensions on the decode cache: the printer renders them as
+        # caps(...), so capability-driven dispatch participates in the
+        # canonical fingerprint — and therefore the PlanCache key — exactly
+        # like shapes and page geometry do.
+        caps = {f: True for f in api.family_spec(cfg).capabilities}
         if shape.kind == "decode" and paged:
             npages, ps, pps = page_geometry
             b.data("cache", mapping="tofrom", access="read-write",
                    allocator="paged_kv_alloc", page_size=ps,
-                   num_pages=npages, pages_per_slot=pps)
+                   num_pages=npages, pages_per_slot=pps, **caps)
             # the page table IS the explicit data-movement plan: logical
             # position -> physical page, shipped to the device every step
             b.data("cache/page_table", mapping="to", access="read-only",
@@ -250,7 +256,12 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
             b.dealloc("cache/k_pages", allocator="paged_kv_alloc")
             b.dealloc("cache/v_pages", allocator="paged_kv_alloc")
         elif shape.kind == "decode":
-            b.data("cache", mapping="tofrom", access="read-write")
+            b.data("cache", mapping="tofrom", access="read-write", **caps)
+            if caps.get("needs_encoder_memory"):
+                # the per-slot encoder-memory buffer is an explicit decode
+                # input: filled once at admission, read-only every step
+                b.data("in/encoder_memory", mapping="to",
+                       access="read-only", encoder_memory=True)
 
     b.extension(
         dist_rules=dist_rules(cfg, shape, multi_pod, fsdp=fsdp),

@@ -86,6 +86,9 @@ class _Printer:
         mm = _mm_fields(a.extensions)
         if mm:
             fields.append(mm)
+        caps = _cap_fields(a.extensions)
+        if caps:
+            fields.append(caps)
         self.lines.append(
             f"  {name} = upir.parallel_data_info({', '.join(fields)})")
 
@@ -205,6 +208,21 @@ def _mm_fields(extensions) -> str:
             continue
         parts.append(key if v is True else f"{key}({v})")
     return f"mm({' '.join(parts)})" if parts else ""
+
+
+# ModelFamily capability flags (models.api.FamilySpec) rendered into the
+# canonical text: capability-driven dispatch is part of the serving contract,
+# so two plans that differ only in family capabilities (e.g. a pageable dense
+# cache vs an encoder-memory cache of the same shapes) must never share a
+# fingerprint — or a PlanCache entry.
+CAP_EXT_KEYS = ("pageable", "needs_encoder_memory", "stateful_cache",
+                "encoder_memory")
+
+
+def _cap_fields(extensions) -> str:
+    parts = [key for key in CAP_EXT_KEYS
+             if ir.ext_get(extensions, key) is True]
+    return f"caps({' '.join(parts)})" if parts else ""
 
 
 def _sanitize(s: str) -> str:

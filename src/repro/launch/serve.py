@@ -5,8 +5,14 @@
 
 Requests enter the engine's admission queue; prefill fills free decode slots
 and a fixed-width decode batch advances every active sequence one token per
-step, recycling slots as sequences finish (see ``runtime.engine``). All
-lowering + jit artifacts come from the process-wide PlanCache, so repeated
+step, recycling slots as sequences finish (see ``runtime.engine``). Dispatch
+is capability-driven through the ModelFamily protocol (``models.api``), so
+encoder-decoder configs (whisper) serve through the same loop — the launcher
+synthesizes stub encoder frames per request. ``--temperature`` / ``--top-k``
+/ ``--seed`` turn on device-side sampling; ``--eos-id`` finishes requests on
+an EOS token via the engine's device-side finished mask.
+
+All lowering + jit artifacts come from the process-wide PlanCache, so repeated
 launches in one process never re-run the pass pipeline.
 
 ``--sequential`` also runs the old one-request-at-a-time path for comparison.
@@ -25,6 +31,14 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=0,
                     help="KV horizon (default: prompt bucket + tokens)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples on-device")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="0 = full vocab; else sample the k largest logits")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling PRNG seed (per-request keys fold in rid)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="finish requests on this token (-1 = run to budget)")
     ap.add_argument("--sequential", action="store_true",
                     help="also time the pre-engine one-at-a-time path")
     args = ap.parse_args()
@@ -36,10 +50,19 @@ def main():
     from ..configs import config, smoke_config
     from ..models import api
     from ..runtime.engine import Engine, EngineConfig, serve_sequential
+    from ..runtime.sampling import SamplingParams
 
     cfg = smoke_config(args.arch) if args.smoke else config(args.arch)
+    spec = api.family_spec(cfg)
     bucket = 1 << max(args.prompt_len - 1, 1).bit_length()
     max_seq = args.max_seq or bucket + args.tokens
+    if args.temperature <= 0 and (args.top_k or args.seed):
+        ap.error("--top-k/--seed only apply to sampled decode: "
+                 "set --temperature > 0 (temperature 0 is greedy)")
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, seed=args.seed) \
+        if args.temperature > 0 else None
+    eos_id = args.eos_id if args.eos_id >= 0 else None
 
     params = api.init_params(cfg, jax.random.key(0))
     engine = Engine(cfg, EngineConfig(slots=args.slots,
@@ -48,23 +71,36 @@ def main():
                     params=params)
 
     rng = np.random.default_rng(0)
+
+    def frames():
+        if not spec.needs_encoder_memory:
+            return None
+        return (rng.normal(size=(cfg.encdec.enc_seq, cfg.d_model))
+                * 0.02).astype(np.float32)
+
+    def mk(prompt, tokens):
+        return engine.make_request(prompt, tokens, sampling=sampling,
+                                   eos_id=eos_id, encoder_input=frames())
+
     requests = [
-        engine.make_request(
-            rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
-            args.tokens)
+        mk(rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
+           args.tokens)
         for _ in range(args.requests)]
 
     # warm up (jit compile) outside the measured run
-    engine.run([engine.make_request([0] * args.prompt_len, 2)
-                for _ in range(args.slots)])
+    engine.run([mk([1] * args.prompt_len, 2) for _ in range(args.slots)])
     engine.reset_stats()
 
     engine.run(requests)
     st = engine.stats()
-    print(f"engine: arch={cfg.name} requests={args.requests} "
-          f"slots={args.slots} prompt={args.prompt_len} tokens={args.tokens}")
-    print(f"  completed={st['completed']} rejected={st['rejected']} "
-          f"decode_steps={st['decode_steps']} recycles={st['recycles']}")
+    mode = f"sampled(T={args.temperature},k={args.top_k})" if sampling \
+        else "greedy"
+    print(f"engine: arch={cfg.name} caps={','.join(st['capabilities']) or '-'} "
+          f"requests={args.requests} slots={args.slots} "
+          f"prompt={args.prompt_len} tokens={args.tokens} mode={mode}")
+    print(f"  completed={st['completed']} eos_finished={st['eos_finished']} "
+          f"rejected={st['rejected']} decode_steps={st['decode_steps']} "
+          f"recycles={st['recycles']}")
     print(f"  occupancy={st['batch_occupancy']:.2f} "
           f"throughput={st['tokens_per_s']:.1f} tok/s "
           f"plan_cache_hit_rate={st['plan_cache']['hit_rate']:.2f}")

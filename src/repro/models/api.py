@@ -1,30 +1,206 @@
-"""Uniform model API over all families (decoder-only and encoder-decoder).
+"""Uniform model API over all families, via the **ModelFamily protocol**.
+
+Every family registers one declarative :class:`FamilySpec`: capability flags
+(``pageable`` / ``needs_encoder_memory`` / ``stateful_cache``) plus uniform
+entry points (``param_shapes`` / ``init_params`` / ``loss`` / ``prefill`` /
+``decode_step`` / the paged variants / ``encode``). The module-level functions
+below dispatch through the spec — there are no per-family ``if`` branches
+anywhere in the serving stack; a family that lacks a capability raises a
+uniform :class:`CapabilityError` naming it. The same flags are rendered into
+the UPIR program text (``core.plans`` / ``core.printer``), so capabilities
+participate in the canonical program fingerprint and the PlanCache key.
 
 Batches are dicts matching ``configs.input_specs``:
   train:   {tokens, targets, [vision_embeds | audio_embeds]}
-  prefill: {tokens, [vision_embeds | audio_embeds]}
+  prefill: {tokens, [vision_embeds | audio_embeds | encoder_memory]}
   decode:  {tokens, pos, [encoder_memory]}
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from . import encdec, transformer
-from .transformer import is_shape
+from .transformer import KernelSpec, is_shape  # noqa: F401  (re-export)
+
+CAPABILITY_FLAGS = ("pageable", "needs_encoder_memory", "stateful_cache")
 
 
-def _is_encdec(cfg: ArchConfig) -> bool:
-    return cfg.encdec is not None
+class CapabilityError(NotImplementedError):
+    """A family was asked for an entry point its FamilySpec does not declare."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """Declarative per-family serving contract.
+
+    Capability flags drive dispatch everywhere (engine admission, paged-KV
+    layout, encoder-memory buffers, UPIR data attributes); entry points are
+    uniform callables over batch dicts. ``None`` entry points mean the family
+    lacks that capability — accessing one raises :class:`CapabilityError`.
+    """
+
+    key: str                            # registry key (== dispatch family)
+    # ---- capability flags
+    pageable: bool = False              # dense per-layer KV -> paged pool ok
+    needs_encoder_memory: bool = False  # per-slot encoder memory at admission
+    stateful_cache: bool = False        # recurrent/rolling state, not seq KV
+    # ---- uniform entry points
+    param_shapes: Callable = None
+    init_params: Callable = None
+    loss: Callable = None
+    cache_specs: Callable = None
+    init_cache: Callable = None
+    prefill: Callable = None
+    decode_step: Callable = None
+    # ---- capability-gated entry points
+    encode: Optional[Callable] = None               # needs_encoder_memory
+    paged_cache_specs: Optional[Callable] = None    # pageable
+    init_paged_cache: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
+
+    @property
+    def capabilities(self) -> Tuple[str, ...]:
+        return tuple(f for f in CAPABILITY_FLAGS if getattr(self, f))
+
+    def require(self, entry: str, capability: str) -> Callable:
+        fn = getattr(self, entry)
+        if fn is None:
+            raise CapabilityError(
+                f"family '{self.key}' does not declare capability "
+                f"'{capability}' (FamilySpec.{entry} is unset)")
+        return fn
+
+
+# ------------------------------------------------------- transformer adapters
+
+
+def _extra_embeds(cfg: ArchConfig, batch: Dict[str, Any]):
+    if cfg.frontend is None:
+        return None
+    return batch.get(f"{cfg.frontend.kind}_embeds")
+
+
+def _tf_loss(cfg, params, batch, *, remat="none"):
+    return transformer.loss_fn(cfg, params, batch["tokens"], batch["targets"],
+                               extra_embeds=_extra_embeds(cfg, batch),
+                               remat=remat)
+
+
+def _tf_prefill(cfg, params, batch, *, s_max=None):
+    return transformer.prefill(cfg, params, batch["tokens"],
+                               extra_embeds=_extra_embeds(cfg, batch),
+                               s_max=s_max)
+
+
+def _tf_decode(cfg, params, cache, batch):
+    return transformer.decode_step(cfg, params, cache, batch["tokens"],
+                                   batch["pos"])
+
+
+def _tf_decode_paged(cfg, params, pool, page_table, batch, *, kernel=None):
+    return transformer.decode_step_paged(cfg, params, pool, page_table,
+                                         batch["tokens"], batch["pos"],
+                                         kernel=kernel)
+
+
+def _tf_prefill_chunk(cfg, params, pool, page_row, batch, offset):
+    return transformer.prefill_chunk(cfg, params, pool, page_row,
+                                     batch["tokens"], offset)
+
+
+# ----------------------------------------------------------- encdec adapters
+
+
+def _ed_loss(cfg, params, batch, *, remat="none"):
+    return encdec.loss_fn(cfg, params, batch["audio_embeds"],
+                          batch["tokens"], batch["targets"], remat=remat)
+
+
+def _ed_encode(cfg, params, batch):
+    return encdec.encode(cfg, params, batch["audio_embeds"])
+
+
+def _ed_prefill(cfg, params, batch, *, s_max=None):
+    return encdec.prefill(cfg, params, batch["tokens"],
+                          batch.get("audio_embeds"),
+                          encoder_memory=batch.get("encoder_memory"),
+                          s_max=s_max)
+
+
+def _ed_decode(cfg, params, cache, batch):
+    return encdec.decode_step(cfg, params, cache, batch["tokens"],
+                              batch["pos"],
+                              encoder_memory=batch.get("encoder_memory"))
+
+
+# ----------------------------------------------------------------- registry
+
+
+def _transformer_spec(key: str, **caps) -> FamilySpec:
+    paged = caps.get("pageable", False)
+    return FamilySpec(
+        key=key,
+        param_shapes=transformer.param_shapes,
+        init_params=transformer.init_params,
+        loss=_tf_loss,
+        cache_specs=transformer.cache_specs,
+        init_cache=transformer.init_cache,
+        prefill=_tf_prefill,
+        decode_step=_tf_decode,
+        paged_cache_specs=transformer.paged_cache_specs if paged else None,
+        init_paged_cache=transformer.init_paged_cache if paged else None,
+        decode_step_paged=_tf_decode_paged if paged else None,
+        prefill_chunk=_tf_prefill_chunk if paged else None,
+        **caps)
+
+
+FAMILY_SPECS: Dict[str, FamilySpec] = {
+    # transformer-backbone families with a dense per-layer KV cache: pageable
+    "dense": _transformer_spec("dense", pageable=True),
+    "moe": _transformer_spec("moe", pageable=True),
+    "vlm": _transformer_spec("vlm", pageable=True),
+    # state-carrying families: recurrent/rolling caches, not pageable
+    "hybrid": _transformer_spec("hybrid", stateful_cache=True),
+    "ssm": _transformer_spec("ssm", stateful_cache=True),
+    # encoder-decoder: cross-attention memory per slot, filled at admission
+    "encdec": FamilySpec(
+        key="encdec", needs_encoder_memory=True,
+        param_shapes=encdec.encdec_param_shapes,
+        init_params=encdec.init_params,
+        loss=_ed_loss,
+        cache_specs=encdec.cache_specs,
+        init_cache=encdec.init_cache,
+        prefill=_ed_prefill,
+        decode_step=_ed_decode,
+        encode=_ed_encode),
+}
+
+
+def family_key(cfg: ArchConfig) -> str:
+    """Registry key for a config: encoder-decoder wins over the nominal
+    family tag (whisper is ``family='audio'`` but serves as encdec)."""
+    return "encdec" if cfg.encdec is not None else cfg.family
+
+
+def family_spec(cfg: ArchConfig) -> FamilySpec:
+    key = family_key(cfg)
+    if key not in FAMILY_SPECS:
+        raise KeyError(f"no FamilySpec registered for family '{key}' "
+                       f"(known: {tuple(sorted(FAMILY_SPECS))})")
+    return FAMILY_SPECS[key]
+
+
+# ------------------------------------------------------- uniform entry points
 
 
 def param_shapes(cfg: ArchConfig):
-    if _is_encdec(cfg):
-        return encdec.encdec_param_shapes(cfg)
-    return transformer.param_shapes(cfg)
+    return family_spec(cfg).param_shapes(cfg)
 
 
 def param_specs(cfg: ArchConfig):
@@ -34,107 +210,68 @@ def param_specs(cfg: ArchConfig):
 
 
 def init_params(cfg: ArchConfig, key):
-    if _is_encdec(cfg):
-        shapes = encdec.encdec_param_shapes(cfg)
-        flat, treedef = jax.tree_util.tree_flatten_with_path(
-            shapes, is_leaf=is_shape)
-        keys = jax.random.split(key, len(flat))
-        dt = jnp.dtype(cfg.param_dtype)
-        leaves = []
-        for (path, shape), k in zip(flat, keys):
-            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                            for p in path)
-            leaves.append(transformer._init_one(name, shape, k, dt, cfg))
-        return jax.tree_util.tree_unflatten(treedef, leaves)
-    return transformer.init_params(cfg, key)
-
-
-def _extra_embeds(cfg: ArchConfig, batch: Dict[str, Any]):
-    if cfg.frontend is None or _is_encdec(cfg):
-        return None
-    return batch.get(f"{cfg.frontend.kind}_embeds")
+    return family_spec(cfg).init_params(cfg, key)
 
 
 def loss_fn(cfg: ArchConfig, params, batch: Dict[str, Any], *,
             remat: str = "none"):
-    if _is_encdec(cfg):
-        return encdec.loss_fn(cfg, params, batch["audio_embeds"],
-                              batch["tokens"], batch["targets"], remat=remat)
-    return transformer.loss_fn(cfg, params, batch["tokens"], batch["targets"],
-                               extra_embeds=_extra_embeds(cfg, batch),
-                               remat=remat)
+    return family_spec(cfg).loss(cfg, params, batch, remat=remat)
 
 
 def cache_specs(cfg: ArchConfig, B: int, S_max: int):
-    if _is_encdec(cfg):
-        return encdec.cache_specs(cfg, B, S_max)
-    return transformer.cache_specs(cfg, B, S_max)
+    return family_spec(cfg).cache_specs(cfg, B, S_max)
 
 
 def init_cache(cfg: ArchConfig, B: int, S_max: int):
-    if _is_encdec(cfg):
-        return encdec.init_cache(cfg, B, S_max)
-    return transformer.init_cache(cfg, B, S_max)
+    return family_spec(cfg).init_cache(cfg, B, S_max)
 
 
 def prefill(cfg: ArchConfig, params, batch: Dict[str, Any], *, s_max=None):
-    if _is_encdec(cfg):
-        return encdec.prefill(cfg, params, batch["tokens"],
-                              batch["audio_embeds"], s_max=s_max)
-    return transformer.prefill(cfg, params, batch["tokens"],
-                               extra_embeds=_extra_embeds(cfg, batch),
-                               s_max=s_max)
+    return family_spec(cfg).prefill(cfg, params, batch, s_max=s_max)
 
 
 def decode_step(cfg: ArchConfig, params, cache, batch: Dict[str, Any]):
-    if _is_encdec(cfg):
-        return encdec.decode_step(cfg, params, cache, batch["tokens"],
-                                  batch["pos"],
-                                  encoder_memory=batch.get("encoder_memory"))
-    return transformer.decode_step(cfg, params, cache, batch["tokens"],
-                                   batch["pos"])
+    return family_spec(cfg).decode_step(cfg, params, cache, batch)
+
+
+def encode(cfg: ArchConfig, params, batch: Dict[str, Any]):
+    """Encoder memory for a needs_encoder_memory family ([B, enc_seq, D])."""
+    spec = family_spec(cfg)
+    return spec.require("encode", "needs_encoder_memory")(cfg, params, batch)
 
 
 # ------------------------------------------------------------------ paged KV
 # Explicit memory management for serving: a [num_pages, page_size] physical
-# KV pool + per-slot page tables (dense/moe/vlm families only — state-space
-# and encoder-decoder caches are not pageable; the dispatchers raise).
+# KV pool + per-slot page tables. Available exactly where the FamilySpec
+# declares ``pageable`` — state-space and encoder-decoder caches are not.
 
 
 def supports_paged_kv(cfg: ArchConfig) -> bool:
-    return cfg.encdec is None and cfg.family in transformer.PAGED_FAMILIES
+    return family_spec(cfg).pageable
 
 
 def paged_cache_specs(cfg: ArchConfig, num_pages: int, page_size: int):
-    if _is_encdec(cfg):
-        raise NotImplementedError("paged KV: encoder-decoder caches are not "
-                                  "pageable (per-slot encoder memory)")
-    return transformer.paged_cache_specs(cfg, num_pages, page_size)
+    spec = family_spec(cfg)
+    return spec.require("paged_cache_specs", "pageable")(
+        cfg, num_pages, page_size)
 
 
 def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
-    if _is_encdec(cfg):
-        raise NotImplementedError("paged KV: encoder-decoder caches are not "
-                                  "pageable (per-slot encoder memory)")
-    return transformer.init_paged_cache(cfg, num_pages, page_size)
+    spec = family_spec(cfg)
+    return spec.require("init_paged_cache", "pageable")(
+        cfg, num_pages, page_size)
 
 
 def decode_step_paged(cfg: ArchConfig, params, pool, page_table,
-                      batch: Dict[str, Any], *, attn_impl: str = "xla",
-                      interpret: bool = True):
-    if _is_encdec(cfg):
-        raise NotImplementedError("paged KV: encoder-decoder caches are not "
-                                  "pageable (per-slot encoder memory)")
-    return transformer.decode_step_paged(cfg, params, pool, page_table,
-                                         batch["tokens"], batch["pos"],
-                                         attn_impl=attn_impl,
-                                         interpret=interpret)
+                      batch: Dict[str, Any], *,
+                      kernel: Optional[KernelSpec] = None):
+    spec = family_spec(cfg)
+    return spec.require("decode_step_paged", "pageable")(
+        cfg, params, pool, page_table, batch, kernel=kernel)
 
 
 def prefill_chunk(cfg: ArchConfig, params, pool, page_row,
                   batch: Dict[str, Any], offset):
-    if _is_encdec(cfg):
-        raise NotImplementedError("paged KV: encoder-decoder caches are not "
-                                  "pageable (per-slot encoder memory)")
-    return transformer.prefill_chunk(cfg, params, pool, page_row,
-                                     batch["tokens"], offset)
+    spec = family_spec(cfg)
+    return spec.require("prefill_chunk", "pageable")(
+        cfg, params, pool, page_row, batch, offset)

@@ -20,8 +20,8 @@ from ..core.act_sharding import anchor_block_grads, constrain
 from .layers import (apply_rope, attention_chunked, attention_decode,
                      attention_full, cache_insert, embed_lookup, mlp_apply,
                      norm)
-from .transformer import (CHUNKED_ATTN_THRESHOLD, _mlp_shapes, _remat,
-                          is_shape, logits_fn)
+from .transformer import (CHUNKED_ATTN_THRESHOLD, _init_one, _mlp_shapes,
+                          _remat, is_shape, logits_fn)
 
 
 def encdec_param_shapes(cfg: ArchConfig) -> Dict[str, Any]:
@@ -161,10 +161,34 @@ def init_cache(cfg: ArchConfig, B: int, S_max: int):
                         cache_specs(cfg, B, S_max))
 
 
-def prefill(cfg: ArchConfig, params, tokens, frames, *, s_max=None):
-    """Run encoder + teacher-forced decoder, build decode caches."""
+def init_params(cfg: ArchConfig, key):
+    """Init the full encoder-decoder tree (same per-leaf rules as the
+    decoder-only families — ``transformer._init_one``)."""
+    shapes = encdec_param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes,
+                                                         is_leaf=is_shape)
+    keys = jax.random.split(key, len(flat))
+    dt = jnp.dtype(cfg.param_dtype)
+    leaves = []
+    for (path, shape), k in zip(flat, keys):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        leaves.append(_init_one(name, shape, k, dt, cfg))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def prefill(cfg: ArchConfig, params, tokens, frames=None, *,
+            encoder_memory=None, s_max=None):
+    """Teacher-forced decoder prefill; builds self- and cross-attention decode
+    caches. The encoder memory comes precomputed (``encoder_memory`` — the
+    serving engine fills a per-slot buffer at admission via ``encode``) or is
+    computed here from stub ``frames``."""
     dtype = jnp.dtype(cfg.compute_dtype)
-    memory = encode(cfg, params, frames)
+    if encoder_memory is None:
+        if frames is None:
+            raise ValueError("encdec prefill needs frames or encoder_memory")
+        encoder_memory = encode(cfg, params, frames)
+    memory = encoder_memory
     B, S = tokens.shape
     s_max = s_max or S
     x = embed_lookup(params["embed"], tokens, dtype)

@@ -15,6 +15,7 @@ Conventions:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -570,6 +571,20 @@ def prefill(cfg: ArchConfig, params, tokens, *, extra_embeds=None, s_max=None):
 PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Decode-kernel knobs, validated once (at engine construction) instead of
+    leaking through every ``decode_step_paged`` call signature."""
+
+    attn_impl: str = "xla"         # xla (gather) | pallas (paged-attention)
+    interpret: bool = True         # Pallas interpreter mode (CPU containers)
+
+    def __post_init__(self):
+        if self.attn_impl not in ("xla", "pallas"):
+            raise ValueError(f"attn_impl must be 'xla' or 'pallas', "
+                             f"got {self.attn_impl!r}")
+
+
 def _check_paged(cfg: ArchConfig) -> None:
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
@@ -600,18 +615,19 @@ def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int):
 
 
 def decode_step_paged(cfg: ArchConfig, params, pool, page_table, tokens, pos,
-                      *, attn_impl: str = "xla", interpret: bool = True):
+                      *, kernel: Optional[KernelSpec] = None):
     """One decode step against the paged pool. tokens [B,1], pos [B],
     page_table [B,P] int32 (logical page -> physical page; null rows for
     inactive slots). Returns (logits [B,1,V], pool).
 
     Structure mirrors the dense ``decode_step``: the pool is scanned
     READ-ONLY per layer, attention gathers K/V through the page table
-    (``attn_impl='pallas'`` streams physical pages in the Pallas kernel
-    instead), and the new token's K/V is scattered into its page once,
-    post-scan.
+    (``kernel.attn_impl='pallas'`` streams physical pages in the Pallas
+    kernel instead), and the new token's K/V is scattered into its page
+    once, post-scan.
     """
     _check_paged(cfg)
+    kernel = kernel or KernelSpec()
     dtype = jnp.dtype(cfg.compute_dtype)
     B = tokens.shape[0]
     x = constrain(embed_lookup(params["embed"], tokens, dtype), "hidden")
@@ -628,10 +644,11 @@ def decode_step_paged(cfg: ArchConfig, params, pool, page_table, tokens, pos,
             .reshape(B, 1, KV, hd)
         q = apply_rope(q, pos[:, None], cfg.rope_theta)
         k = apply_rope(k, pos[:, None], cfg.rope_theta)
-        if attn_impl == "pallas":
+        if kernel.attn_impl == "pallas":
             from ..kernels.paged_attention import paged_attention_decode
             o = paged_attention_decode(q, k_pg, v_pg, page_table, pos,
-                                       new_kv=(k, v), interpret=interpret)
+                                       new_kv=(k, v),
+                                       interpret=kernel.interpret)
         else:
             o = attention_decode_paged(q, k_pg, v_pg, page_table, pos,
                                        new_kv=(k, v))

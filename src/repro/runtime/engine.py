@@ -7,6 +7,18 @@ one token per step. When a sequence finishes, its slot is freed and refilled
 from the queue on the next step — the decode batch shape never changes, so
 slot recycling never re-jits.
 
+Model dispatch goes through the **ModelFamily protocol** (``api.FamilySpec``):
+capability flags decide what each family gets — ``pageable`` families may use
+the paged KV layout below, ``needs_encoder_memory`` families (whisper) get a
+per-slot encoder-memory buffer filled at admission and then serve through the
+same slot loop as everyone else, ``stateful_cache`` families ride the dense
+layout. Per-request decode policy is ``SamplingParams`` + ``eos_id``
+(``runtime.sampling``): sampling runs on-device with per-slot PRNG keys
+snapshotted at admission (so eviction-by-recompute replays sampled streams
+exactly), and EOS completion is a device-side finished mask — the hot loop
+still never syncs (the host polls the mask every ``eos_poll_every`` steps,
+only while an EOS-carrying request is active).
+
 Two KV-cache layouts (``EngineConfig.kv_layout``):
 
   * ``dense`` — one ``[slots, max_seq]`` block per layer; every admitted
@@ -17,8 +29,10 @@ Two KV-cache layouts (``EngineConfig.kv_layout``):
     **overcommits**: a request is admitted when its *prompt* pages are free,
     not when its worst-case horizon is. If the pool truly runs dry mid-decode
     the newest-admitted sequence is evicted (pages freed, request requeued at
-    the front; greedy decode is deterministic, so recomputation reproduces the
-    same stream). Decode gathers K/V through the page table — host XLA gather
+    the front; decode — greedy or sampled — is a deterministic function of
+    the request's snapshotted PRNG key and position, so recomputation
+    reproduces the same stream). Decode gathers K/V through the page table —
+    host XLA gather
     or the Pallas kernel (``kernels/paged_attention``) per
     ``EngineConfig.decode_kernel``.
 
@@ -50,7 +64,10 @@ import numpy as np
 from ..configs.base import ArchConfig, ShapeCfg
 from ..core.lower import PlanCache, default_plan_cache
 from ..models import api
+from ..models.api import KernelSpec
 from ..models.layers import cache_write_pages
+from .sampling import (GREEDY, SamplingParams, decode_select, request_key,
+                       sample_tokens)
 
 # ----------------------------------------------------------------- requests
 
@@ -62,8 +79,11 @@ class Request:
     rid: int
     prompt: Sequence[int]
     max_new_tokens: int
+    sampling: Optional[SamplingParams] = None   # None = greedy
+    eos_id: Optional[int] = None   # stop (device-side) on this token
+    encoder_input: Any = None      # [enc_seq, D] frames (needs_encoder_memory)
     state: str = "new"             # new | queued | prefilling | active | done | rejected
-    reason: str = ""               # rejection reason
+    reason: str = ""               # rejection reason / "eos" completion
     bucket: int = 0                # padded prompt length
     slot: int = -1                 # decode slot while active
     tokens_out: List[int] = dataclasses.field(default_factory=list)
@@ -75,6 +95,9 @@ class Request:
     _first_tok: Any = None
     _admit_seq: int = 0            # monotonic admission order (eviction policy)
     _chunk_cursor: int = 0         # chunked prefill progress
+    # PRNG key snapshot (uint32[2]): taken at make_request and never reset, so
+    # eviction-by-recompute replays a sampled stream identically
+    _key: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,12 +109,17 @@ class EngineConfig:
     backend: str = "jit"               # single-process jax.jit serving
     keep_results: int = 4096           # unfinalized request outputs retained
     max_trace_events: int = 10000      # trace ring bound (long-lived process)
+    # ---- decode completion (EOS)
+    eos_poll_every: int = 16           # decode steps between finished-mask host
+    #                                    polls (0 = only truncate at finalize);
+    #                                    workloads with no eos_id never sync
     # ---- paged KV cache (explicit memory management)
     kv_layout: str = "dense"           # dense | paged
     page_size: int = 16                # tokens per physical KV page
     num_pages: int = 0                 # allocatable pages; 0 = slots*ceil(max_seq/page_size)
     prefill_chunk: int = 0             # 0 = one-shot prefill; else chunk length
     decode_kernel: str = "xla"         # xla (gather) | pallas (paged-attention kernel)
+    interpret: bool = True             # Pallas interpreter mode (CPU containers)
 
 
 # --------------------------------------------------------- free-list allocator
@@ -139,23 +167,37 @@ class PagedKVAllocator:
 
 
 class Engine:
-    """Slot-based continuous-batching engine for decoder-only families."""
+    """Slot-based continuous-batching engine over the ModelFamily protocol.
+
+    Dispatch is capability-driven (``api.FamilySpec``): pageable families may
+    use the paged KV layout, ``needs_encoder_memory`` families get a per-slot
+    encoder-memory buffer filled at admission, and stateful families serve
+    through the dense layout. All knobs — including the paged decode kernel
+    choice — are validated here, once, at construction.
+    """
 
     def __init__(self, cfg: ArchConfig, ecfg: EngineConfig = EngineConfig(), *,
                  params=None, key=None, plan_cache: Optional[PlanCache] = None,
                  trace: Optional[list] = None):
-        if cfg.encdec is not None:
-            raise NotImplementedError(
-                "encoder-decoder serving needs per-slot encoder memory "
-                "(ROADMAP: multi-modal engine)")
         self.cfg = cfg
         self.ecfg = ecfg
+        self.spec = api.family_spec(cfg)
+        if ecfg.kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {ecfg.kv_layout!r}")
+        if ecfg.eos_poll_every < 0:
+            raise ValueError("eos_poll_every must be >= 0")
         self.paged = ecfg.kv_layout == "paged"
+        # decode-kernel knobs live in EngineConfig and are validated once —
+        # they no longer leak through every decode_step_paged call
+        self._kernel = KernelSpec(attn_impl=ecfg.decode_kernel,
+                                  interpret=ecfg.interpret)
         if self.paged:
-            if not api.supports_paged_kv(cfg):
-                raise NotImplementedError(
-                    f"paged KV cache: family '{cfg.family}' has no pageable "
-                    f"dense K/V cache (ROADMAP)")
+            if not self.spec.pageable:
+                raise api.CapabilityError(
+                    f"paged KV cache: family '{self.spec.key}' does not "
+                    f"declare the 'pageable' capability (no dense per-layer "
+                    f"K/V cache)")
             if ecfg.page_size < 1:
                 raise ValueError("page_size must be >= 1")
             if ecfg.prefill_chunk:
@@ -194,7 +236,7 @@ class Engine:
         fkey = (self.plan.fingerprint, cfg, ecfg.backend, ecfg.slots,
                 ecfg.max_seq, ecfg.kv_layout)
         if self.paged:
-            fkey += (ecfg.decode_kernel,)
+            fkey += (self._kernel,)
             self._decode = self.plan_cache.get_or_build(
                 fkey + ("decode",), self._build_decode_paged)
             self._page_insert = self.plan_cache.get_or_build(
@@ -220,8 +262,24 @@ class Engine:
             self._slot_pages: List[List[int]] = [[] for _ in range(ecfg.slots)]
         else:
             self.cache = api.init_cache(cfg, ecfg.slots, ecfg.max_seq)
+        # per-slot encoder memory (needs_encoder_memory capability): filled
+        # once at admission from the request's frames, read by prefill
+        if self.spec.needs_encoder_memory:
+            self.enc_memory = jnp.zeros(
+                (ecfg.slots, cfg.encdec.enc_seq, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+            self._encode = self.plan_cache.get_or_build(
+                fkey + ("encode",), self._build_encode)
         self.tokens = jnp.zeros((ecfg.slots, 1), jnp.int32)
         self.pos = np.zeros((ecfg.slots,), np.int32)
+        # per-slot decode policy, shipped to the device each step (tiny);
+        # the finished mask is device-resident — EOS completion never syncs
+        self.finished = jnp.zeros((ecfg.slots,), bool)
+        self.keys_np = np.zeros((ecfg.slots, 2), np.uint32)
+        self.temps_np = np.zeros((ecfg.slots,), np.float32)
+        self.topks_np = np.zeros((ecfg.slots,), np.int32)
+        self.eos_np = np.full((ecfg.slots,), -1, np.int32)
+        self._policy_dev = None        # device copy, rebuilt only when dirty
         self.queue: Deque[Request] = deque()
         self.slots_req: List[Optional[Request]] = [None] * ecfg.slots
         self._prefilling: Dict[int, Request] = {}
@@ -240,25 +298,36 @@ class Engine:
     def _build_decode(self):
         cfg = self.cfg
 
-        def step(params, cache, tokens, pos):
+        def step(params, cache, tokens, pos, keys, temps, topks, eos, fin):
             logits, cache = api.decode_step(cfg, params, cache,
                                             {"tokens": tokens, "pos": pos})
-            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-            return nxt.astype(jnp.int32), cache
+            nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
+                                     eos, fin)
+            return nxt, fin, cache
 
         return jax.jit(step, donate_argnums=(1,))
 
     def _build_decode_paged(self):
-        cfg, impl = self.cfg, self.ecfg.decode_kernel
+        cfg, kernel = self.cfg, self._kernel
 
-        def step(params, pool, page_table, tokens, pos):
+        def step(params, pool, page_table, tokens, pos, keys, temps, topks,
+                 eos, fin):
             logits, pool = api.decode_step_paged(
                 cfg, params, pool, page_table,
-                {"tokens": tokens, "pos": pos}, attn_impl=impl)
-            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-            return nxt.astype(jnp.int32), pool
+                {"tokens": tokens, "pos": pos}, kernel=kernel)
+            nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
+                                     eos, fin)
+            return nxt, fin, pool
 
         return jax.jit(step, donate_argnums=(1,))
+
+    def _build_encode(self):
+        cfg = self.cfg
+
+        def enc(params, frames):
+            return api.encode(cfg, params, {"audio_embeds": frames})
+
+        return jax.jit(enc)
 
     def _build_page_insert(self):
         def ins(pool, k_chunk, v_chunk, page_ids):
@@ -271,15 +340,20 @@ class Engine:
     def _build_chunk_prefill(self):
         cfg = self.cfg
 
-        def chunk(params, pool, page_row, tokens, offset, page_ids):
+        def chunk(params, pool, page_row, tokens, offset, page_ids, key,
+                  temp, topk):
             logits, (k_c, v_c) = api.prefill_chunk(
                 cfg, params, pool, page_row, {"tokens": tokens}, offset)
-            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+            # only the final chunk's token is used; its sampling position is
+            # the last processed position — identical to one-shot prefill's
+            last = (offset + tokens.shape[1] - 1).astype(jnp.int32)
+            nxt = sample_tokens(logits[:, -1], key[None], last[None],
+                                temp[None], topk[None])
             pool = {"k_pages": cache_write_pages(pool["k_pages"], k_c,
                                                  page_ids),
                     "v_pages": cache_write_pages(pool["v_pages"], v_c,
                                                  page_ids)}
-            return nxt.astype(jnp.int32), pool
+            return nxt, pool
 
         return jax.jit(chunk, donate_argnums=(1,))
 
@@ -313,31 +387,84 @@ class Engine:
 
     def _prefill_fn(self, bucket: int):
         cfg = self.cfg
+        encdec = self.spec.needs_encoder_memory
         # paged one-shot prefill pads the cache only to the prompt's pages —
         # the whole point: a short prompt no longer reserves the horizon
         s_max = self._page_count(bucket) * self.ecfg.page_size if self.paged \
             else self.ecfg.max_seq
 
         def build():
-            def pre(params, tokens):
-                logits, cache = api.prefill(cfg, params, {"tokens": tokens},
-                                            s_max=s_max)
-                nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-                return nxt.astype(jnp.int32), cache
+            def pre(params, tokens, memory, key, temp, topk):
+                batch = {"tokens": tokens}
+                if encdec:
+                    batch["encoder_memory"] = memory
+                logits, cache = api.prefill(cfg, params, batch, s_max=s_max)
+                # first-token sampling position = last processed position
+                last = jnp.full((1,), tokens.shape[1] - 1, jnp.int32)
+                nxt = sample_tokens(logits[:, -1], key[None], last,
+                                    temp[None], topk[None])
+                return nxt, cache
             return jax.jit(pre)
-
         return self.plan_cache.get_or_build(
             self._fkey + ("prefill", bucket), build)
+
+    def _run_prefill(self, req: Request, i: int):
+        """One-shot prefill for ``req``: run the encoder into the slot's
+        encoder-memory buffer (capability path), then prefill *from that
+        buffer row* — the per-slot buffer is the source of cross-attention
+        memory, not a side copy. Returns (first token [1], cache-of-one)."""
+        toks = jnp.asarray(self._padded_prompt(req))[None, :]
+        memory = jnp.zeros((1, 0, 0), jnp.float32)   # unused placeholder
+        if self.spec.needs_encoder_memory:
+            mem = self._encode(self.params,
+                               jnp.asarray(req.encoder_input)[None])
+            self.enc_memory = self.enc_memory.at[i].set(mem[0])
+            memory = self.enc_memory[i][None]
+        s = req.sampling or GREEDY
+        return self._prefill_fn(req.bucket)(
+            self.params, toks, memory, jnp.asarray(req._key),
+            jnp.float32(s.temperature), jnp.int32(s.top_k))
 
     def _page_count(self, tokens: int) -> int:
         return -(-tokens // self.ecfg.page_size)
 
     # ------------------------------------------------------------ admission
 
-    def make_request(self, prompt: Sequence[int], max_new_tokens: int) -> Request:
+    def make_request(self, prompt: Sequence[int], max_new_tokens: int, *,
+                     sampling: Optional[SamplingParams] = None,
+                     eos_id: Optional[int] = None,
+                     encoder_input=None) -> Request:
+        """Build a validated request. Degenerate inputs raise ``ValueError``
+        here, loudly, instead of being admitted into the slot loop."""
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        if eos_id is not None and not 0 <= eos_id < self.cfg.vocab:
+            raise ValueError(f"eos_id {eos_id} outside vocab "
+                             f"[0, {self.cfg.vocab})")
+        if self.spec.needs_encoder_memory:
+            if encoder_input is None:
+                raise ValueError(
+                    f"family '{self.spec.key}' declares needs_encoder_memory:"
+                    f" requests must carry encoder_input frames "
+                    f"[{self.cfg.encdec.enc_seq}, {self.cfg.d_model}]")
+            encoder_input = np.asarray(encoder_input)
+            want = (self.cfg.encdec.enc_seq, self.cfg.d_model)
+            if encoder_input.shape != want:
+                raise ValueError(f"encoder_input shape "
+                                 f"{encoder_input.shape} != {want}")
+        elif encoder_input is not None:
+            raise ValueError(f"family '{self.spec.key}' does not take "
+                             f"encoder_input")
         self._rid += 1
-        return Request(rid=self._rid, prompt=list(prompt),
-                       max_new_tokens=max_new_tokens)
+        return Request(rid=self._rid, prompt=prompt,
+                       max_new_tokens=max_new_tokens, sampling=sampling,
+                       eos_id=eos_id, encoder_input=encoder_input,
+                       _key=request_key(sampling or GREEDY, self._rid))
 
     def submit(self, req: Request) -> bool:
         """Admission control: bounded queue + horizon check. False = rejected.
@@ -394,6 +521,13 @@ class Engine:
         self._admit_counter += 1
         req._admit_seq = self._admit_counter
         req.slot = i
+        # slot decode policy: PRNG key snapshot + sampling params + EOS id
+        s = req.sampling or GREEDY
+        self.keys_np[i] = req._key
+        self.temps_np[i] = s.temperature
+        self.topks_np[i] = s.top_k
+        self.eos_np[i] = -1 if req.eos_id is None else req.eos_id
+        self._policy_dev = None
         self.trace.append({"event": "admit", "rid": req.rid, "slot": i,
                            "recycled": recycled})
 
@@ -402,6 +536,13 @@ class Engine:
         batch (or the request completes outright for 1-token generations)."""
         self.tokens = self.tokens.at[i, 0].set(nxt0[0])
         self.pos[i] = req.bucket
+        # reset the slot's finished bit — device-side, no sync; the first
+        # token may itself be the EOS
+        if req.eos_id is not None:
+            self.finished = self.finished.at[i].set(
+                jnp.equal(nxt0[0], req.eos_id))
+        else:
+            self.finished = self.finished.at[i].set(False)
         self.prefills += 1
         req.state = "active"
         req._first_tok = nxt0
@@ -425,10 +566,9 @@ class Engine:
         for i in range(self.ecfg.slots):
             while self.slots_req[i] is None and self.queue:
                 req = self.queue.popleft()
-                nxt0, one = self._prefill_fn(req.bucket)(
-                    self.params, jnp.asarray(self._padded_prompt(req))[None, :])
-                self.cache = self._insert(self.cache, one, i)
                 self._mark_admitted(req, i)
+                nxt0, one = self._run_prefill(req, i)
+                self.cache = self._insert(self.cache, one, i)
                 self._activate(req, i, nxt0)
 
     def _growth_reserve(self) -> int:
@@ -463,8 +603,7 @@ class Engine:
                 req._chunk_cursor = 0
                 self._prefilling[i] = req
             else:
-                nxt0, one = self._prefill_fn(req.bucket)(
-                    self.params, jnp.asarray(self._padded_prompt(req))[None, :])
+                nxt0, one = self._run_prefill(req, i)
                 self.pool = self._page_insert(
                     self.pool, one["k"], one["v"],
                     jnp.asarray(pages, jnp.int32))
@@ -487,10 +626,12 @@ class Engine:
             toks = self._padded_prompt(req)[off:off + chunk]
             ids = self._slot_pages[i][off // self.ecfg.page_size:
                                       (off + chunk) // self.ecfg.page_size]
+            s = req.sampling or GREEDY
             nxt, self.pool = self._chunk_prefill(
                 self.params, self.pool, jnp.asarray(self.page_table_np[i]),
                 jnp.asarray(toks)[None, :], jnp.int32(off),
-                jnp.asarray(ids, jnp.int32))
+                jnp.asarray(ids, jnp.int32), jnp.asarray(req._key),
+                jnp.float32(s.temperature), jnp.int32(s.top_k))
             req._chunk_cursor += 1
             self.prefill_chunks += 1
             if off + chunk >= req.bucket:
@@ -544,6 +685,11 @@ class Engine:
         req._remaining = 0
         req._chunk_cursor = 0
         req.tokens_out = []
+        self.eos_np[i] = -1
+        self.temps_np[i] = 0.0
+        self._policy_dev = None
+        # req._key is NOT reset: recompute-on-readmit replays the same
+        # fold_in(key, pos) schedule, so sampled streams reproduce exactly
         self.queue.appendleft(req)
         self.evictions += 1
         self.trace.append({"event": "evict", "rid": req.rid, "slot": i})
@@ -568,20 +714,49 @@ class Engine:
 
     # -------------------------------------------------------------- stepping
 
-    def _finish(self, req: Request) -> None:
+    def _finish(self, req: Request, reason: str = "") -> None:
         req.state = "done"
         req.t_done = time.perf_counter()
         self.completed += 1
+        if reason == "eos":
+            req.reason = "eos"
+            self.eos_finished += 1
         # the first token comes from prefill logits; only the decode loop's
-        # tokens count toward decode throughput
+        # tokens count toward decode throughput. EOS-finished requests count
+        # the decode steps actually executed, not the max_new_tokens budget.
         self.prefill_tokens += 1
-        self.tokens_generated += req.max_new_tokens - 1
+        self.tokens_generated += max(
+            req.max_new_tokens - 1 - max(req._remaining, 0), 0)
         if self.paged:
             self._release_pages(req)
         if req.slot >= 0 and self.slots_req[req.slot] is req:
             self.slots_req[req.slot] = None
+            self.eos_np[req.slot] = -1
+            self.temps_np[req.slot] = 0.0
+            self._policy_dev = None
         self.trace.append({"event": "finish", "rid": req.rid,
-                           "slot": req.slot})
+                           "slot": req.slot, "reason": reason})
+
+    def _eos_poll(self) -> None:
+        """Learn about device-side EOS completions. The finished mask is
+        read back only every ``eos_poll_every`` decode steps and only while a
+        request with an ``eos_id`` is active — workloads that never set an
+        EOS keep the hot loop sync-free. Between polls a finished slot's
+        stream is frozen at its EOS token (``decode_select``), so polling
+        late costs idle decode work, never correctness."""
+        every = self.ecfg.eos_poll_every
+        if not every or self.decode_steps % every:
+            return
+        polled = [i for i in range(self.ecfg.slots)
+                  if self.slots_req[i] is not None
+                  and self.slots_req[i].state == "active"
+                  and self.slots_req[i].eos_id is not None]
+        if not polled:
+            return
+        fin = np.asarray(self.finished)
+        for i in polled:
+            if fin[i]:
+                self._finish(self.slots_req[i], reason="eos")
 
     def step(self) -> int:
         """One engine iteration: refill free slots (and, in chunked mode,
@@ -600,14 +775,22 @@ class Engine:
         active = [i for i in range(self.ecfg.slots)
                   if self.slots_req[i] is not None]
         if active:
+            # per-slot policy only changes at admit/finish/evict: the device
+            # copy is rebuilt then, not per step — steady decode uploads
+            # nothing but the position vector
+            if self._policy_dev is None:
+                self._policy_dev = (
+                    jnp.asarray(self.keys_np), jnp.asarray(self.temps_np),
+                    jnp.asarray(self.topks_np), jnp.asarray(self.eos_np))
+            policy = self._policy_dev + (self.finished,)
             if self.paged:
-                nxt, self.pool = self._decode(
+                nxt, self.finished, self.pool = self._decode(
                     self.params, self.pool, self._device_page_table(),
-                    self.tokens, jnp.asarray(self.pos))
+                    self.tokens, jnp.asarray(self.pos), *policy)
             else:
-                nxt, self.cache = self._decode(
+                nxt, self.finished, self.cache = self._decode(
                     self.params, self.cache, self.tokens,
-                    jnp.asarray(self.pos))
+                    jnp.asarray(self.pos), *policy)
             self.tokens = nxt[:, None]
             rids = tuple(self.slots_req[i].rid if self.slots_req[i] is not None
                          else -1 for i in range(self.ecfg.slots))
@@ -620,6 +803,7 @@ class Engine:
                 req._remaining -= 1
                 if req._remaining <= 0:
                     self._finish(req)
+            self._eos_poll()
         if self._sync_each_step:
             jax.block_until_ready(self.tokens)
         if self._activated and not self._sync_each_step:
@@ -680,13 +864,17 @@ class Engine:
         self._toklog = []
 
     def finalize_request(self, req: Request) -> List[int]:
-        """First token (from prefill logits) + decode-step tokens."""
+        """First token (from prefill logits) + decode-step tokens. Streams
+        with an ``eos_id`` are truncated at the first EOS (inclusive) — any
+        frozen post-EOS fill tokens the device emitted are dropped here."""
         if not req.tokens_out:
             out: List[int] = []
             if req._first_tok is not None:
                 out.append(int(np.asarray(req._first_tok)[0]))
                 req._first_tok = None
             out.extend(self._pending_tokens.pop(req.rid, []))
+            if req.eos_id is not None and req.eos_id in out:
+                out = out[:out.index(req.eos_id) + 1]
             req.tokens_out = out
         return req.tokens_out
 
@@ -702,6 +890,7 @@ class Engine:
         self.rejected = 0
         self.submitted = 0
         self.completed = 0
+        self.eos_finished = 0
         self.evictions = 0
         self.tokens_generated = 0
         self.prefill_tokens = 0
@@ -718,11 +907,13 @@ class Engine:
             "active_slots": sum(1 for r in self.slots_req if r is not None),
             "slots": self.ecfg.slots,
             "kv_layout": self.ecfg.kv_layout,
+            "capabilities": list(self.spec.capabilities),
             "decode_steps": self.decode_steps,
             "prefills": self.prefills,
             "recycles": self.recycles,
             "submitted": self.submitted,
             "completed": self.completed,
+            "eos_finished": self.eos_finished,
             "rejected": self.rejected,
             "batch_occupancy": occ,
             "peak_concurrent": self.peak_concurrent,
@@ -755,34 +946,61 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
     loop. Pads prompts to the same buckets as the engine so token streams are
     comparable; ``warmup`` compiles both steps before the timed region.
 
+    Speaks the same decode API as the engine — per-request
+    ``SamplingParams`` / ``eos_id`` through the shared ``sample_tokens`` key
+    schedule, and encoder-decoder requests via their ``encoder_input``
+    frames — so it doubles as the reference for engine stream equality,
+    greedy *and* sampled.
+
     Mirrors engine accounting: over-horizon requests are marked rejected and
     excluded from throughput (not silently served as empty), and
     ``tokens_per_s`` counts decode-loop tokens only (the first token of each
     request comes from prefill logits and is tallied in ``prefill_tokens``).
     Returns per-request tokens + aggregate throughput."""
-    def pre(params, tokens):
-        logits, cache = api.prefill(cfg, params, {"tokens": tokens},
-                                    s_max=max_seq)
-        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-        return nxt.astype(jnp.int32), cache
+    spec = api.family_spec(cfg)
 
-    def dec(params, cache, tokens, pos):
+    def pre(params, batch, key, temp, topk):
+        logits, cache = api.prefill(cfg, params, batch, s_max=max_seq)
+        last = jnp.full((1,), batch["tokens"].shape[1] - 1, jnp.int32)
+        nxt = sample_tokens(logits[:, -1], key[None], last,
+                            temp[None], topk[None])
+        return nxt, cache
+
+    def dec(params, cache, tokens, pos, key, temp, topk):
         logits, cache = api.decode_step(cfg, params, cache,
                                         {"tokens": tokens, "pos": pos})
-        nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-        return nxt.astype(jnp.int32), cache
+        nxt = sample_tokens(logits[:, -1], key[None], pos,
+                            temp[None], topk[None])
+        return nxt, cache
 
     prefill_fn = jax.jit(pre)
     decode_fn = jax.jit(dec, donate_argnums=(1,))
 
+    def batch_for(tokens_row, req):
+        batch = {"tokens": jnp.asarray(tokens_row)[None, :]}
+        if spec.needs_encoder_memory:
+            batch["audio_embeds"] = jnp.asarray(req.encoder_input)[None]
+        return batch
+
+    def policy(req):
+        s = req.sampling or GREEDY
+        key = req._key if req._key is not None else request_key(s, req.rid)
+        return (jnp.asarray(key), jnp.float32(s.temperature),
+                jnp.int32(s.top_k))
+
     if warmup and requests:
-        for b in {next((b for b in sorted(prompt_buckets)
-                        if b >= len(r.prompt)), None) for r in requests}:
-            if b is None:
-                continue
-            nxt, cache = prefill_fn(params, jnp.zeros((1, b), jnp.int32))
+        by_bucket = {}
+        for r in requests:
+            b = next((b for b in sorted(prompt_buckets)
+                      if b >= len(r.prompt)), None)
+            if b is not None:
+                by_bucket.setdefault(b, r)
+        for b, r in by_bucket.items():
+            k, t, tk = policy(r)
+            nxt, cache = prefill_fn(params, batch_for(np.zeros(b, np.int32), r),
+                                    k, t, tk)
             nxt, cache = decode_fn(params, cache, nxt[:, None],
-                                   jnp.full((1,), b, jnp.int32))
+                                   jnp.full((1,), b, jnp.int32), k, t, tk)
             jax.block_until_ready(nxt)
 
     outputs: Dict[int, List[int]] = {}
@@ -806,17 +1024,27 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             continue
         toks = np.zeros((bucket,), np.int32)
         toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
-        nxt, cache = prefill_fn(params, jnp.asarray(toks)[None, :])
+        k, t, tk = policy(req)
+        nxt, cache = prefill_fn(params, batch_for(toks, req), k, t, tk)
         gen = [nxt]
-        for i in range(req.max_new_tokens - 1):
-            pos = jnp.full((1,), bucket + i, jnp.int32)
-            nxt, cache = decode_fn(params, cache, gen[-1][:, None], pos)
-            gen.append(nxt)
+        # the sequential path syncs per token only when a request opts into
+        # EOS (it must know when to stop); the engine never has to
+        hit_eos = req.eos_id is not None and \
+            int(np.asarray(nxt)[0]) == req.eos_id
+        if not hit_eos:
+            for i in range(req.max_new_tokens - 1):
+                pos = jnp.full((1,), bucket + i, jnp.int32)
+                nxt, cache = decode_fn(params, cache, gen[-1][:, None], pos,
+                                       k, t, tk)
+                gen.append(nxt)
+                if req.eos_id is not None and \
+                        int(np.asarray(nxt)[0]) == req.eos_id:
+                    break
         jax.block_until_ready(gen[-1])
         outputs[req.rid] = [int(np.asarray(g)[0]) for g in gen]
         req.state = "done"
         prefill_tokens += 1
-        total += req.max_new_tokens - 1
+        total += len(gen) - 1
     elapsed = time.perf_counter() - t0
     return {"tokens": outputs, "tokens_generated": total,
             "prefill_tokens": prefill_tokens,

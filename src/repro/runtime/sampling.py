@@ -1,0 +1,115 @@
+"""Device-side token selection for the serving engine: sampling + EOS.
+
+Design constraints, in order:
+
+1. **Greedy stays bitwise-identical.** When every slot is greedy
+   (``temperature <= 0``) the selected token is exactly
+   ``argmax(logits.astype(float32))`` — the pre-sampling decode path — and a
+   ``lax.cond`` skips the sampling computation entirely, so pure-greedy
+   engines pay nothing for the sampling machinery.
+
+2. **The hot loop never syncs.** EOS completion is a device-side boolean
+   ``finished`` mask folded through :func:`decode_select`; a finished slot's
+   stream is frozen at its EOS token, and the host learns about it later
+   (``Engine`` polls the mask every ``eos_poll_every`` steps, or at drain).
+
+3. **Replay determinism.** Randomness is a pure function of the request's
+   PRNG key and the *position* being sampled — ``fold_in(key, pos)`` — not of
+   how many steps the engine happened to execute. Paged
+   eviction-by-recompute therefore replays a sampled stream identically: the
+   key is snapshotted at admission and positions are the same on re-admission.
+
+Key-schedule convention (shared by one-shot prefill, chunked prefill, decode,
+and the sequential baseline, so all of them produce the same streams): the
+token emitted after processing position ``p`` is sampled with
+``fold_in(key, p)``. One-shot prefill of a ``b``-token bucket samples at
+``b - 1``; a chunked prefill's final chunk ends at the same position; the
+decode step at ``pos`` samples at ``pos``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy. ``temperature <= 0`` means greedy (then
+    ``top_k`` is ignored); ``top_k == 0`` samples the full vocabulary."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(sampling: SamplingParams, rid: int) -> np.ndarray:
+    """The request's PRNG key (uint32[2]), snapshotted at admission.
+
+    Derived only from user-visible fields — (seed, rid) — so two engines fed
+    the same workload in the same order sample identical streams, and
+    eviction-by-recompute replays exactly (the key survives requeueing).
+    """
+    return np.asarray(jax.random.fold_in(jax.random.PRNGKey(sampling.seed),
+                                         rid), np.uint32)
+
+
+def sample_tokens(logits, keys, pos, temps, top_ks):
+    """Select one token per row. All inputs are per-row (batch-major):
+
+    logits [B, V] (any float dtype), keys [B, 2] uint32, pos [B] int32,
+    temps [B] float32, top_ks [B] int32. Returns int32 [B].
+
+    Rows with ``temps <= 0`` take the greedy argmax (bitwise the pre-sampling
+    path); others sample from temperature-scaled, top-k-masked logits via the
+    Gumbel-max trick keyed by ``fold_in(key, pos)``.
+    """
+    lg = logits.astype(jnp.float32)
+    gtok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    V = lg.shape[-1]
+
+    def sampled(_):
+        scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
+        # per-row top-k cutoff on the raw logits: k <= 0 keeps the full vocab
+        k_eff = jnp.where(top_ks <= 0, V, jnp.clip(top_ks, 1, V))
+        desc = -jnp.sort(-lg, axis=-1)
+        kth = jnp.take_along_axis(desc, (k_eff - 1)[:, None], axis=-1)
+        masked = jnp.where(lg >= kth, scaled, -jnp.inf)
+        gum = jax.vmap(lambda k, p: jax.random.gumbel(
+            jax.random.fold_in(k, p), (V,), jnp.float32))(keys, pos)
+        stok = jnp.argmax(masked + gum, axis=-1).astype(jnp.int32)
+        return jnp.where(temps <= 0, gtok, stok)
+
+    # pure-greedy batches (the common serving default) skip the sort/gumbel
+    # work entirely — greedy decode cost is unchanged by the sampling API
+    return jax.lax.cond(jnp.all(temps <= 0.0), lambda _: gtok, sampled, None)
+
+
+def decode_select(logits, keys, pos, temps, top_ks, eos_ids, finished):
+    """One hot-loop selection step: sample, then fold the EOS finished mask.
+
+    ``eos_ids`` [B] int32 with -1 meaning "no EOS for this row"; ``finished``
+    [B] bool. A finished row keeps emitting its EOS token (the stream is
+    frozen device-side; the host truncates at finalize), and a row that just
+    emitted its EOS becomes finished. Returns (tokens int32 [B], finished).
+    """
+    nxt = sample_tokens(logits, keys, pos, temps, top_ks)
+    fill = jnp.where(eos_ids >= 0, eos_ids, 0).astype(jnp.int32)
+    nxt = jnp.where(finished, fill, nxt)
+    finished = finished | ((eos_ids >= 0) & (nxt == eos_ids))
+    return nxt, finished

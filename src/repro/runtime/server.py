@@ -58,13 +58,38 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeCfg,
     return prefill_step
 
 
-def make_decode_step(cfg: ArchConfig, sample: str = "greedy",
+def make_decode_step(cfg: ArchConfig, sample="greedy",
                      act_specs=None) -> Callable:
+    """Decode step closure. ``sample`` is ``"greedy"`` or a
+    ``runtime.sampling.SamplingParams``; sampled steps take **per-row**
+    request PRNG keys via ``batch["keys"]`` (uint32 [B, 2] — one key per
+    sequence, exactly like the engine's per-slot keys) and draw through the
+    shared ``fold_in(key, pos)`` schedule, so server- and engine-served
+    streams for the same requests are identical."""
+    from .sampling import SamplingParams, sample_tokens
+
     def decode_step(params, cache, batch):
         with activation_shardings(act_specs):
+            batch = dict(batch)
+            keys = batch.pop("keys", None)
             logits, cache = api.decode_step(cfg, params, cache, batch)
-            next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-            return next_tok.astype(jnp.int32), logits, cache
+            if isinstance(sample, SamplingParams) and not sample.greedy:
+                B = batch["pos"].shape[0]
+                if keys is None:
+                    raise ValueError(
+                        "sampled decode_step needs per-row PRNG keys: "
+                        "batch['keys'] uint32 [B, 2]")
+                if tuple(keys.shape) != (B, 2):
+                    raise ValueError(f"batch['keys'] must be [B={B}, 2], "
+                                     f"got {tuple(keys.shape)}")
+                next_tok = sample_tokens(
+                    logits[:, -1], keys, batch["pos"],
+                    jnp.full((B,), sample.temperature, jnp.float32),
+                    jnp.full((B,), sample.top_k, jnp.int32))
+            else:
+                next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32),
+                                      axis=-1).astype(jnp.int32)
+            return next_tok, logits, cache
     return decode_step
 
 

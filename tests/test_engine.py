@@ -426,3 +426,335 @@ def test_prefill_first_token_accounted_separately(params):
     assert st_["prefill_tokens"] == 3
     assert st_["decode_steps"] == 0
     assert all(len(engine.finalize_request(r)) == 1 for r in reqs)
+
+
+# ----------------------------------------- ModelFamily protocol (capabilities)
+
+from repro.models.api import CapabilityError, KernelSpec  # noqa: E402
+from repro.runtime.sampling import SamplingParams  # noqa: E402
+
+
+def test_family_spec_capabilities():
+    assert api.family_spec(CFG).capabilities == ("pageable",)
+    assert api.family_spec(smoke_config("xlstm-350m")).capabilities == \
+        ("stateful_cache",)
+    assert api.family_spec(smoke_config("zamba2-2.7b")).capabilities == \
+        ("stateful_cache",)
+    assert api.family_spec(smoke_config("whisper-large-v3")).capabilities == \
+        ("needs_encoder_memory",)
+    assert api.supports_paged_kv(CFG)
+    assert not api.supports_paged_kv(smoke_config("whisper-large-v3"))
+
+
+def test_capability_errors_are_uniform():
+    wcfg = smoke_config("whisper-large-v3")
+    with pytest.raises(CapabilityError, match="pageable"):
+        api.paged_cache_specs(wcfg, 4, 4)
+    with pytest.raises(CapabilityError, match="pageable"):
+        api.decode_step_paged(wcfg, None, None, None, {})
+    with pytest.raises(CapabilityError, match="needs_encoder_memory"):
+        api.encode(CFG, None, {})
+    with pytest.raises(CapabilityError, match="pageable"):
+        api.prefill_chunk(smoke_config("xlstm-350m"), None, None, None, {}, 0)
+
+
+def test_capabilities_rendered_into_program_and_plan():
+    from repro.core.lower import plan_from_program
+    from repro.core.printer import to_mlir
+    shape = decode_shape()
+    text = to_mlir(build_program(CFG, shape))
+    assert "caps(pageable)" in text
+    wcfg = smoke_config("whisper-large-v3")
+    wtext = to_mlir(build_program(wcfg, shape))
+    assert "caps(needs_encoder_memory)" in wtext
+    assert "caps(encoder_memory)" in wtext        # explicit per-slot buffer
+    stext = to_mlir(build_program(smoke_config("xlstm-350m"), shape))
+    assert "caps(stateful_cache)" in stext
+    plan = plan_from_program(run_pipeline(build_program(CFG, shape)))
+    assert plan.capabilities == ("pageable",)
+    wplan = plan_from_program(run_pipeline(build_program(wcfg, shape)))
+    assert wplan.capabilities == ("needs_encoder_memory",)
+
+
+def test_kernel_spec_validated_once_at_construction(params):
+    with pytest.raises(ValueError, match="attn_impl"):
+        Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                 max_seq=MAX_SEQ, decode_kernel="cuda"),
+               params=params, plan_cache=PlanCache())
+    with pytest.raises(ValueError, match="kv_layout"):
+        Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                 max_seq=MAX_SEQ, kv_layout="block"),
+               params=params, plan_cache=PlanCache())
+    # the knobs live in EngineConfig now, not in the model-API signature
+    import inspect
+    sig = inspect.signature(api.decode_step_paged)
+    assert "interpret" not in sig.parameters
+    assert "attn_impl" not in sig.parameters
+    assert "kernel" in sig.parameters
+    with pytest.raises(ValueError):
+        KernelSpec(attn_impl="nope")
+
+
+# ----------------------------------------------- make_request validation
+
+
+def test_make_request_rejects_degenerate_inputs(params):
+    engine = mk_engine(params)
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.make_request([], 4)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.make_request([1, 2], 0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.make_request([1, 2], -3)
+    with pytest.raises(ValueError, match="eos_id"):
+        engine.make_request([1, 2], 2, eos_id=CFG.vocab)
+    with pytest.raises(ValueError, match="encoder_input"):
+        engine.make_request([1, 2], 2, encoder_input=np.zeros((3, 3)))
+
+
+# --------------------------------------------------- sampling + EOS decode
+
+
+def sampled_workload(n=4, seed=11, sampling=None, eos_id=None):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, CFG.vocab, size=BUCKET).tolist(), TOKENS,
+             sampling, eos_id) for _ in range(n)]
+
+
+def run_workload(engine, work):
+    reqs = [engine.make_request(p, n, sampling=s, eos_id=e)
+            for p, n, s, e in work]
+    engine.run(reqs)
+    return [engine.finalize_request(r) for r in reqs], reqs
+
+
+def test_greedy_streams_bitwise_stable_with_sampling_api(params):
+    """Regression: the sampling-capable decode path must leave greedy dense
+    AND paged streams bitwise-identical to the sequential reference."""
+    work = mixed_workload()
+    dense, dreqs = run_streams(mk_engine(params, slots=2), work)
+    paged, _ = run_streams(mk_paged(params, slots=2), work)
+    chunked, _ = run_streams(mk_paged(params, prefill_chunk=PAGE), work)
+    seq = serve_sequential(CFG, params, dreqs, max_seq=MAX_SEQ,
+                           prompt_buckets=(BUCKET,), warmup=False)
+    want = [seq["tokens"][r.rid] for r in dreqs]
+    assert dense == want
+    assert paged == want
+    assert chunked == want
+
+
+def test_sampled_streams_deterministic_replay(params):
+    sp = SamplingParams(temperature=1.0, top_k=8, seed=42)
+    work = sampled_workload(sampling=sp)
+    a, _ = run_workload(mk_engine(params, slots=2), work)
+    b, _ = run_workload(mk_engine(params, slots=2), work)
+    assert a == b
+    # a different seed draws a different stream; greedy differs too
+    other, _ = run_workload(
+        mk_engine(params, slots=2),
+        sampled_workload(sampling=SamplingParams(temperature=1.0, top_k=8,
+                                                 seed=43)))
+    greedy, _ = run_workload(mk_engine(params, slots=2), sampled_workload())
+    assert a != other
+    assert a != greedy
+
+
+def test_sampled_matches_sequential(params):
+    """Sampling is a pure function of (request key, position), shared with
+    the sequential baseline — batched and one-at-a-time streams agree."""
+    sp = SamplingParams(temperature=0.9, top_k=4, seed=7)
+    work = sampled_workload(sampling=sp)
+    streams, reqs = run_workload(mk_engine(params, slots=2), work)
+    seq = serve_sequential(CFG, params, reqs, max_seq=MAX_SEQ,
+                           prompt_buckets=(BUCKET,), warmup=False)
+    assert streams == [seq["tokens"][r.rid] for r in reqs]
+
+
+def test_sampled_eviction_by_recompute_replays(params):
+    """Paged eviction leans on the admission-time PRNG key snapshot: a
+    sampled stream recomputed after eviction must reproduce exactly."""
+    sp = SamplingParams(temperature=1.0, seed=7)
+    work = [(p, TOKENS, sp, None) for p in prompts(6)]
+    tight, treqs = run_workload(mk_paged(params, slots=4, num_pages=10), work)
+    roomy, _ = run_workload(mk_paged(params, slots=4), work)
+    assert tight == roomy
+    assert all(r.state == "done" for r in treqs)
+
+
+def test_sampled_chunked_prefill_matches_oneshot(params):
+    """The chunked-prefill first token samples at the same position as the
+    one-shot prefill, so streams agree chunked or not."""
+    sp = SamplingParams(temperature=1.2, top_k=16, seed=3)
+    work = [(p, TOKENS, sp, None) for p in prompts(4, seed=13)]
+    oneshot, _ = run_workload(mk_paged(params, slots=2), work)
+    chunked, _ = run_workload(mk_paged(params, prefill_chunk=PAGE), work)
+    assert oneshot == chunked
+
+
+def test_eos_terminates_streams(params):
+    greedy, _ = run_workload(mk_engine(params, slots=2), sampled_workload())
+    eos = greedy[0][1]               # a token we know the stream emits
+    engine = Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                      max_seq=MAX_SEQ, eos_poll_every=1),
+                    params=params, plan_cache=PlanCache())
+    streams, reqs = run_workload(engine, sampled_workload(eos_id=eos))
+    for g, s, r in zip(greedy, streams, reqs):
+        assert r.state == "done"
+        if eos in g:
+            assert s == g[:g.index(eos) + 1]      # truncated at first EOS
+            assert r.reason == "eos" or len(s) == len(g)
+        else:
+            assert s == g
+    st_ = engine.stats()
+    assert st_["eos_finished"] >= 1
+    assert st_["tokens_generated"] < 4 * (TOKENS - 1)  # early finish saved work
+
+
+def test_eos_without_poll_still_truncates(params):
+    """eos_poll_every=0: the host never polls mid-run; the device-side mask
+    freezes the stream and finalize truncates."""
+    greedy, _ = run_workload(mk_engine(params, slots=2), sampled_workload())
+    eos = greedy[0][1]
+    engine = Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                      max_seq=MAX_SEQ, eos_poll_every=0),
+                    params=params, plan_cache=PlanCache())
+    streams, reqs = run_workload(engine, sampled_workload(eos_id=eos))
+    for g, s in zip(greedy, streams):
+        assert s == (g[:g.index(eos) + 1] if eos in g else g)
+    assert engine.stats()["eos_finished"] == 0    # nobody polled
+
+
+# -------------------------------------------------- encoder-decoder serving
+
+
+WCFG = smoke_config("whisper-large-v3")
+W_BUCKET, W_TOKENS, W_MAX_SEQ = 8, 5, 13
+
+
+@pytest.fixture(scope="module")
+def wparams():
+    return api.init_params(WCFG, jax.random.key(1))
+
+
+def whisper_work(n=4, seed=2):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, WCFG.vocab, size=int(rng.integers(2, W_BUCKET + 1))
+                          ).tolist(),
+             int(rng.integers(1, W_TOKENS + 1)),
+             (rng.normal(size=(WCFG.encdec.enc_seq, WCFG.d_model))
+              * 0.02).astype(np.float32))
+            for _ in range(n)]
+
+
+def mk_whisper(wparams, **kw):
+    return Engine(WCFG, EngineConfig(slots=2, prompt_buckets=(W_BUCKET,),
+                                     max_seq=W_MAX_SEQ, **kw),
+                  params=wparams, plan_cache=PlanCache())
+
+
+def test_encdec_serves_through_engine(wparams):
+    """Whisper end-to-end through the same continuous-batching loop: per-slot
+    encoder memory filled at admission, streams match the sequential path."""
+    engine = mk_whisper(wparams)
+    work = whisper_work()
+    reqs = [engine.make_request(p, n, encoder_input=f) for p, n, f in work]
+    engine.run(reqs)
+    streams = [engine.finalize_request(r) for r in reqs]
+    assert all(r.state == "done" for r in reqs)
+    assert [len(s) for s in streams] == [n for _, n, _ in work]
+    sreqs = [engine.make_request(p, n, encoder_input=f) for p, n, f in work]
+    seq = serve_sequential(WCFG, wparams, sreqs, max_seq=W_MAX_SEQ,
+                           prompt_buckets=(W_BUCKET,), warmup=False)
+    assert streams == [seq["tokens"][r.rid] for r in sreqs]
+    assert engine.stats()["capabilities"] == ["needs_encoder_memory"]
+    # the per-slot encoder-memory buffer exists and was written
+    assert engine.enc_memory.shape == (2, WCFG.encdec.enc_seq, WCFG.d_model)
+    assert float(jnp.abs(engine.enc_memory).sum()) > 0
+
+
+def test_encdec_sampled_eos_decode(wparams):
+    """Acceptance: whisper serves with EOS-terminated *sampled* decode."""
+    engine = mk_whisper(wparams, eos_poll_every=1)
+    sp = SamplingParams(temperature=1.0, seed=5)
+    work = whisper_work(3, seed=9)
+    base = [engine.make_request(p, W_TOKENS, sampling=sp, encoder_input=f)
+            for p, _, f in work]
+    engine.run(base)
+    ref = [engine.finalize_request(r) for r in base]
+    eos = ref[0][0]                  # first sampled token => instant EOS hit
+    e2 = mk_whisper(wparams, eos_poll_every=1)
+    reqs = [e2.make_request(p, W_TOKENS, sampling=sp, eos_id=eos,
+                            encoder_input=f) for p, _, f in work]
+    e2.run(reqs)
+    streams = [e2.finalize_request(r) for r in reqs]
+    for rf, s in zip(ref, streams):
+        assert s == (rf[:rf.index(eos) + 1] if eos in rf else rf)
+    assert all(r.state == "done" for r in reqs)
+
+
+def test_encdec_requires_encoder_input_and_rejects_paged(wparams):
+    engine = mk_whisper(wparams)
+    with pytest.raises(ValueError, match="needs_encoder_memory"):
+        engine.make_request([1, 2], 2)
+    with pytest.raises(CapabilityError, match="pageable"):
+        Engine(WCFG, EngineConfig(slots=2, prompt_buckets=(W_BUCKET,),
+                                  max_seq=W_MAX_SEQ, kv_layout="paged"),
+               plan_cache=PlanCache())
+    # non-encdec families reject stray encoder inputs
+    dense = mk_engine(api.init_params(CFG, jax.random.key(0)))
+    with pytest.raises(ValueError, match="encoder_input"):
+        dense.make_request([1, 2], 2,
+                           encoder_input=np.zeros((4, 4), np.float32))
+
+
+# ------------------------------------------------- stats field semantics
+
+
+def test_stats_rejected_vs_evicted_vs_finished(params):
+    """The three terminal accountings never bleed into each other."""
+    engine = mk_paged(params, slots=4, num_pages=10)
+    ok = [engine.make_request(p, TOKENS) for p in prompts(6)]
+    bad = engine.make_request(list(range(BUCKET + 1)), 2)   # over bucket
+    assert not engine.submit(bad)
+    engine.run(ok)
+    st_ = engine.stats()
+    assert st_["submitted"] == 7                  # 6 served + 1 rejected
+    assert st_["rejected"] == 1
+    assert st_["completed"] == 6
+    assert st_["evictions"] > 0
+    # eviction requeues internally: it must not inflate submitted/completed
+    assert st_["completed"] + st_["rejected"] == st_["submitted"]
+    assert st_["eos_finished"] == 0
+    assert bad.state == "rejected" and all(r.state == "done" for r in ok)
+
+
+def test_stats_tokens_per_s_counts_decode_only(params):
+    engine = mk_engine(params, slots=2)
+    reqs = [engine.make_request(p, n)
+            for p, n in zip(prompts(3), (1, 4, 6))]
+    engine.run(reqs)
+    st_ = engine.stats()
+    # one prefill token per request; decode tokens exclude them
+    assert st_["prefill_tokens"] == 3
+    assert st_["tokens_generated"] == (1 - 1) + (4 - 1) + (6 - 1)
+    assert st_["elapsed_s"] > 0
+    assert st_["tokens_per_s"] == pytest.approx(
+        st_["tokens_generated"] / st_["elapsed_s"])
+
+
+def test_reset_stats_zeroes_counters_keeps_artifacts(params):
+    engine = mk_engine(params, slots=2)
+    engine.run([engine.make_request(p, 3) for p in prompts(2)])
+    assert engine.stats()["completed"] == 2
+    misses = engine.plan_cache.misses
+    engine.reset_stats()
+    st_ = engine.stats()
+    for k in ("decode_steps", "prefills", "recycles", "submitted",
+              "completed", "rejected", "eos_finished",
+              "tokens_generated", "prefill_tokens", "peak_concurrent"):
+        assert st_[k] == 0, k
+    assert st_["elapsed_s"] == 0.0 and st_["tokens_per_s"] == 0.0
+    # compiled artifacts survive: a rerun costs no new plan-cache misses
+    engine.run([engine.make_request(p, 3) for p in prompts(2)])
+    assert engine.plan_cache.misses == misses
+    assert engine.stats()["completed"] == 2

@@ -1,0 +1,161 @@
+"""Device-side sampling + EOS selection math (``runtime.sampling``).
+
+The contracts that the serving engine leans on: greedy is bitwise the
+pre-sampling argmax path, randomness is a pure function of (key, position),
+top-1 degenerates to argmax, rows are independent, and the finished mask
+freezes a stream at its EOS token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.sampling import (GREEDY, SamplingParams, decode_select,
+                                    request_key, sample_tokens)
+
+B, V = 4, 64
+RNG = np.random.default_rng(0)
+LOGITS = jnp.asarray(RNG.normal(size=(B, V)).astype(np.float32))
+KEYS = jnp.asarray(np.stack([request_key(SamplingParams(seed=1), r)
+                             for r in range(B)]))
+POS = jnp.arange(B, dtype=jnp.int32) + 3
+
+
+def test_greedy_is_bitwise_argmax():
+    got = sample_tokens(LOGITS, KEYS, POS, jnp.zeros(B, jnp.float32),
+                        jnp.zeros(B, jnp.int32))
+    want = jnp.argmax(LOGITS.astype(jnp.float32), axis=-1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # greedy ignores top_k
+    got_k = sample_tokens(LOGITS, KEYS, POS, jnp.zeros(B, jnp.float32),
+                          jnp.full(B, 3, jnp.int32))
+    assert (np.asarray(got_k) == np.asarray(want)).all()
+
+
+def test_top1_sampling_is_argmax():
+    got = sample_tokens(LOGITS, KEYS, POS, jnp.full(B, 2.0, jnp.float32),
+                        jnp.ones(B, jnp.int32))
+    want = jnp.argmax(LOGITS, axis=-1)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_sampling_deterministic_in_key_and_pos():
+    temps = jnp.full(B, 1.5, jnp.float32)
+    topk = jnp.zeros(B, jnp.int32)
+    a = sample_tokens(LOGITS, KEYS, POS, temps, topk)
+    b = sample_tokens(LOGITS, KEYS, POS, temps, topk)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    # a different position draws different gumbel noise (with high prob.)
+    many = [np.asarray(sample_tokens(LOGITS, KEYS, POS + p, temps, topk))
+            for p in range(8)]
+    assert len({tuple(m) for m in many}) > 1
+
+
+def test_rows_independent():
+    """Changing one row's key must not change any other row's token."""
+    temps = jnp.full(B, 1.5, jnp.float32)
+    topk = jnp.zeros(B, jnp.int32)
+    base = np.asarray(sample_tokens(LOGITS, KEYS, POS, temps, topk))
+    keys2 = KEYS.at[0].set(jnp.asarray(request_key(SamplingParams(seed=99), 7)))
+    other = np.asarray(sample_tokens(LOGITS, keys2, POS, temps, topk))
+    assert (base[1:] == other[1:]).all()
+
+
+def test_mixed_greedy_and_sampled_rows():
+    temps = jnp.asarray([0.0, 5.0, 0.0, 5.0], jnp.float32)
+    got = np.asarray(sample_tokens(LOGITS, KEYS, POS, temps,
+                                   jnp.zeros(B, jnp.int32)))
+    want = np.argmax(np.asarray(LOGITS), -1)
+    assert got[0] == want[0] and got[2] == want[2]
+
+
+def test_top_k_restricts_support():
+    """With k=4 every sampled token must be one of the 4 largest logits."""
+    temps = jnp.full(B, 3.0, jnp.float32)
+    topk = jnp.full(B, 4, jnp.int32)
+    allowed = np.argsort(-np.asarray(LOGITS), axis=-1)[:, :4]
+    for p in range(16):
+        got = np.asarray(sample_tokens(LOGITS, KEYS, POS + p, temps, topk))
+        for b in range(B):
+            assert got[b] in allowed[b]
+
+
+def test_decode_select_eos_freeze_and_set():
+    eos = jnp.asarray([3, -1, 3, -1], jnp.int32)
+    fin = jnp.asarray([True, False, False, False])
+    nxt, fin2 = decode_select(LOGITS, KEYS, POS, jnp.zeros(B, jnp.float32),
+                              jnp.zeros(B, jnp.int32), eos, fin)
+    # frozen row keeps emitting its EOS and stays finished
+    assert int(nxt[0]) == 3 and bool(fin2[0])
+    # rows without an eos_id never finish
+    assert not bool(fin2[1]) and not bool(fin2[3])
+    # a row that naturally argmaxes to its eos becomes finished
+    lg = LOGITS.at[2, 3].set(99.0)
+    nxt3, fin3 = decode_select(lg, KEYS, POS, jnp.zeros(B, jnp.float32),
+                               jnp.zeros(B, jnp.int32), eos, fin)
+    assert int(nxt3[2]) == 3 and bool(fin3[2])
+
+
+def test_request_key_deterministic_and_rid_dependent():
+    a = request_key(SamplingParams(seed=5), 1)
+    b = request_key(SamplingParams(seed=5), 1)
+    c = request_key(SamplingParams(seed=5), 2)
+    d = request_key(SamplingParams(seed=6), 1)
+    assert (a == b).all()
+    assert (a != c).any() and (a != d).any()
+    assert a.dtype == np.uint32 and a.shape == (2,)
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.5)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    assert GREEDY.greedy and not SamplingParams(temperature=1.0).greedy
+
+
+def test_decode_select_jits():
+    fn = jax.jit(decode_select)
+    eos = jnp.full(B, -1, jnp.int32)
+    nxt, fin = fn(LOGITS, KEYS, POS, jnp.zeros(B, jnp.float32),
+                  jnp.zeros(B, jnp.int32), eos, jnp.zeros(B, bool))
+    assert nxt.dtype == jnp.int32 and fin.dtype == bool
+
+
+def test_server_decode_step_sampled_per_row_keys():
+    """make_decode_step(sample=SamplingParams) keys each row independently
+    (batch['keys'] [B,2]) and matches the engine's sample_tokens schedule."""
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.server import make_decode_step
+
+    cfg = smoke_config("tinyllama-1.1b")
+    params = api.init_params(cfg, jax.random.key(0))
+    Bv, S = 2, 8
+    toks = jax.random.randint(jax.random.key(1), (Bv, S), 0, cfg.vocab)
+    _, cache = api.prefill(cfg, params, {"tokens": toks}, s_max=S + 4)
+    pos = jnp.full((Bv,), S, jnp.int32)
+    nxt_in = toks[:, -1:]
+    keys = jnp.asarray(np.stack([request_key(SamplingParams(seed=3), r)
+                                 for r in (1, 2)]))
+    sp = SamplingParams(temperature=1.0, top_k=8, seed=3)
+
+    step = make_decode_step(cfg, sample=sp)
+    got, logits, _ = step(params, cache,
+                          {"tokens": nxt_in, "pos": pos, "keys": keys})
+    want = sample_tokens(logits[:, -1], keys, pos,
+                         jnp.full((Bv,), sp.temperature, jnp.float32),
+                         jnp.full((Bv,), sp.top_k, jnp.int32))
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # rows keyed independently: swapping one row's key moves only that row
+    keys2 = keys.at[0].set(jnp.asarray(request_key(SamplingParams(seed=9), 7)))
+    got2, _, _ = step(params, cache,
+                      {"tokens": nxt_in, "pos": pos, "keys": keys2})
+    assert np.asarray(got2)[1] == np.asarray(got)[1]
+    # missing keys fails loudly, greedy ignores them
+    with pytest.raises(ValueError, match="keys"):
+        step(params, cache, {"tokens": nxt_in, "pos": pos})
+    greedy_step = make_decode_step(cfg)
+    g, glog, _ = greedy_step(params, cache, {"tokens": nxt_in, "pos": pos})
+    assert (np.asarray(g) ==
+            np.argmax(np.asarray(glog[:, -1], np.float32), -1)).all()
