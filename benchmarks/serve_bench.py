@@ -46,6 +46,19 @@ sampling/EOS), two comparisons through the same engine loop:
 ``--json3`` writes the section-3 metrics — CI emits ``BENCH_3.json`` and
 fails on any greedy stream divergence, same gate as section 2.
 
+Section 4 — speculative decoding (draft/verify mode, ``runtime.speculative``)
+on the same workload as the baseline engine:
+
+  * baseline — the plain decode loop, one token per slot per step;
+  * spec     — a same-family draft proposes ``lookahead_k`` tokens per slot,
+    the target verifies all k+1 positions in one batched call, and the
+    lossless rejection sampler accepts a prefix.
+
+Reports the acceptance rate and spec-vs-baseline decode tokens/s; greedy
+speculative streams must equal the baseline engine's bitwise (CI gate, same
+as sections 2/3), and fixed-seed sampled speculative streams must replay
+identically. ``--json4`` writes the metrics — CI emits ``BENCH_4.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -400,6 +413,151 @@ def bench_unified(json_path=None):
     return rows
 
 
+# ------------------------------------------------- speculative decoding
+
+SPEC_ARCH = "tinyllama-1.1b"
+SPEC_K = 3
+SPEC_DRAFT_LAYERS = 1        # draft = the target's first layer + shared head
+SPEC_TAIL_SCALE = 0.02       # residual down-scaling of the non-shared layers
+SPEC_BUCKET = 16
+SPEC_TOKENS = 48
+SPEC_REQUESTS = 12
+SPEC_SLOTS = 4
+
+
+def _spec_target_and_draft():
+    """Target params + a truncated-depth draft sharing its first layers.
+
+    Self-speculative decoding (Draft&Verify / LayerSkip style): the draft is
+    the target's first ``SPEC_DRAFT_LAYERS`` blocks plus the shared
+    embedding/head — genuinely ~1/n_layers the decode cost. Trained models
+    make such early exits usable predictors; random-init smoke models do not
+    (any draft gets chance-level agreement), so the target is initialized
+    with its *deeper* residual branches down-scaled — the draft/target
+    agreement is then a real, imperfect quantity and the benchmark exercises
+    both the accept and the reject/resample paths. The losslessness gates do
+    not depend on this construction: greedy equality holds for any draft.
+    """
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models import api
+
+    cfg = smoke_config(SPEC_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    nl = SPEC_DRAFT_LAYERS
+    mult = np.where(np.arange(cfg.n_layers) >= nl, SPEC_TAIL_SCALE, 1.0) \
+        .astype(np.float32)[:, None, None]
+    blocks = dict(params["blocks"])
+    blocks["wo"] = blocks["wo"] * mult
+    blocks["mlp"] = dict(blocks["mlp"], w2=blocks["mlp"]["w2"] * mult)
+    params = dict(params, blocks=blocks)
+    draft_cfg = dataclasses.replace(cfg, n_layers=nl,
+                                    name=f"{cfg.name}-draft{nl}")
+    draft_params = dict(params)
+    draft_params["blocks"] = jax.tree.map(lambda x: x[:nl], params["blocks"])
+    return cfg, params, draft_cfg, draft_params
+
+
+def bench_spec(json_path=None):
+    """Speculative vs baseline decode on one workload (section 4).
+
+    Reports the draft acceptance rate, emitted tokens per verify step, and
+    spec-vs-baseline decode tokens/s. Greedy stream equality with the
+    baseline engine is a CI gate (it must hold for ANY draft, by
+    construction of the rejection sampler), as is fixed-seed sampled replay.
+    """
+    import numpy as np
+
+    from repro.runtime.engine import Engine, EngineConfig
+    from repro.runtime.sampling import SamplingParams
+    from repro.runtime.speculative import SpecConfig
+
+    cfg, params, draft_cfg, draft_params = _spec_target_and_draft()
+    rng = np.random.default_rng(23)
+    workload = [(rng.integers(0, cfg.vocab, size=SPEC_BUCKET).tolist(),
+                 int(rng.integers(SPEC_TOKENS // 2, SPEC_TOKENS + 1)))
+                for _ in range(SPEC_REQUESTS)]
+
+    def engine_for(spec: bool):
+        ecfg = EngineConfig(
+            slots=SPEC_SLOTS, prompt_buckets=(SPEC_BUCKET,),
+            max_seq=SPEC_BUCKET + SPEC_TOKENS,
+            spec_decode=SpecConfig(draft_config=draft_cfg,
+                                   lookahead_k=SPEC_K) if spec else None)
+        return Engine(cfg, ecfg, params=params,
+                      draft_params=draft_params if spec else None)
+
+    def serve(spec: bool, sampling=None):
+        engine = engine_for(spec)
+
+        def mk():
+            return [engine.make_request(p, n, sampling=sampling)
+                    for p, n in workload]
+
+        engine.run(mk())            # warm (jit compile)
+        engine.reset_stats()
+        reqs = mk()
+        engine.run(reqs)
+        return [engine.finalize_request(r) for r in reqs], engine.stats()
+
+    base_streams, base_st = serve(False)
+    spec_streams, spec_st = serve(True)
+    greedy_match = spec_streams == base_streams
+
+    sp = SamplingParams(temperature=0.9, top_k=32, top_p=0.95, seed=11)
+    s1, _ = serve(True, sampling=sp)
+    s2, _ = serve(True, sampling=sp)
+    replay_match = s1 == s2
+
+    ratio = spec_st["tokens_per_s"] / max(base_st["tokens_per_s"], 1e-9)
+    print("# serve_bench_spec: arch,draft,lookahead_k,requests,slots,"
+          "base_tok_s,spec_tok_s,speedup,acceptance_rate,tokens_per_step,"
+          "greedy_match,sampled_replay")
+    tps = spec_st["tokens_generated"] / max(spec_st["spec_steps"], 1)
+    print(f"{cfg.name},{draft_cfg.name},{SPEC_K},{SPEC_REQUESTS},"
+          f"{SPEC_SLOTS},{base_st['tokens_per_s']:.1f},"
+          f"{spec_st['tokens_per_s']:.1f},{ratio:.2f},"
+          f"{spec_st['acceptance_rate']:.2f},{tps:.2f},"
+          f"{greedy_match},{replay_match}")
+    print(f"# speculative decode: {ratio:.2f}x baseline decode tokens/s at "
+          f"acceptance {spec_st['acceptance_rate']:.2f} "
+          f"({tps:.2f} tokens per verify step over {SPEC_SLOTS} slots); "
+          f"greedy streams identical: {greedy_match}")
+
+    if json_path:
+        payload = {
+            "bench": "speculative_decode",
+            "arch": cfg.name,
+            "draft_arch": draft_cfg.name,
+            "lookahead_k": SPEC_K,
+            "requests": SPEC_REQUESTS,
+            "slots": SPEC_SLOTS,
+            "baseline_tokens_per_s": base_st["tokens_per_s"],
+            "spec_tokens_per_s": spec_st["tokens_per_s"],
+            "spec_vs_baseline_tokens_per_s": ratio,
+            "acceptance_rate": spec_st["acceptance_rate"],
+            "tokens_per_spec_step": tps,
+            "spec_steps": spec_st["spec_steps"],
+            "baseline_decode_steps": base_st["decode_steps"],
+            "greedy_streams_identical": greedy_match,
+            "sampled_replay_identical": replay_match,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    if not greedy_match or not replay_match:
+        # CI gate: lossless means lossless — greedy speculative streams must
+        # be bitwise the baseline engine's, and sampled ones must replay
+        raise SystemExit("serve_bench_spec: speculative stream divergence "
+                         f"(greedy_match={greedy_match}, "
+                         f"replay={replay_match})")
+    return payload if json_path else ratio
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -407,10 +565,13 @@ def main() -> None:
                     help="write paged-benchmark metrics to this JSON file")
     ap.add_argument("--json3", default=None,
                     help="write unified-decode-API metrics to this JSON file")
+    ap.add_argument("--json4", default=None,
+                    help="write speculative-decode metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
     bench_unified(json_path=args.json3)
+    bench_spec(json_path=args.json4)
 
 
 if __name__ == "__main__":

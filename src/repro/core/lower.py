@@ -83,6 +83,9 @@ class LoweredPlan:
     # ModelFamily capability flags carried by the decode cache's data attr
     # (models.api.FamilySpec -> core.plans -> printer caps(...) rendering)
     capabilities: Tuple[str, ...] = ()
+    # draft/target pairing (draft_arch_name, lookahead_k) when this is a
+    # speculative verify plan (caps spec_verify/draft extensions), else None
+    spec_decode: Optional[Tuple[str, int]] = None
 
     # ------------------------------------------------------------------ meshes
 
@@ -179,10 +182,15 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
 
     from .printer import CAP_EXT_KEYS
     capabilities: Tuple[str, ...] = ()
+    spec_decode = None
     for attr in ir.find_all(prog, ir.DataAttr):
         if attr.symbol == "cache":
             capabilities = tuple(k for k in CAP_EXT_KEYS
                                  if ir.ext_get(attr.extensions, k) is True)
+            k = ir.ext_get(attr.extensions, "spec_verify")
+            if k is not None:
+                spec_decode = (str(ir.ext_get(attr.extensions, "draft", "")),
+                               int(k))
             break
 
     batch_axes: list = []
@@ -223,7 +231,7 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         remat=ir.ext_get(prog.extensions, "remat", "none"),
         grad_reduce=grad_reduce, zero=zero, compression=compression,
         collectives=syncs, page_geometry=page_geometry,
-        capabilities=capabilities)
+        capabilities=capabilities, spec_decode=spec_decode)
 
 
 # ----------------------------------------------------- explicit sync lowering

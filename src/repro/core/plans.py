@@ -57,6 +57,7 @@ def dist_rules(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool,
         ("*/vr", ()), ("*/vc", ()),
         # ---- inputs
         ("in/tokens", p((0, dp))),
+        ("in/draft_tokens", p((0, dp))),
         ("in/targets", p((0, dp))),
         ("in/pos", p((0, dp))),
         ("in/*_embeds", p((0, dp))),
@@ -171,7 +172,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   fsdp: bool = True, compression: Optional[str] = None,
                   overlap: bool = True, extra_ext: Optional[Dict] = None,
                   microbatches: Optional[int] = None,
-                  page_geometry: Optional[Tuple[int, int, int]] = None
+                  page_geometry: Optional[Tuple[int, int, int]] = None,
+                  spec_decode: Optional[Tuple[str, int]] = None
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
 
@@ -182,12 +184,22 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     ``alloc_pages``/``free_pages`` MemOps make the allocator lifecycle part of
     the IR — all of which the printer fingerprints, so page geometry
     participates in the PlanCache key exactly like shapes do.
+
+    ``spec_decode=(draft_name, lookahead_k)`` turns a decode program into the
+    **speculative verify** step: the token input widens to the k+1-position
+    chunk, the kernel becomes ``spec_verify``, and the draft/target pairing
+    is carried as capability extensions on the cache data attribute
+    (``caps(spec_verify(k) draft(name))`` in the printed dialect) — so the
+    verify plan fingerprints apart from the plain decode plan and the
+    PlanCache never conflates them.
     """
     axes = mesh_axes(multi_pod)
     dp = dp_axis(multi_pod)
     mb = microbatches if microbatches else _microbatches(cfg, shape, multi_pod)
     act, resident = _bytes_estimates(cfg, shape, multi_pod, mb)
     paged = page_geometry is not None and shape.kind == "decode"
+    spec = spec_decode if (spec_decode is not None
+                           and shape.kind == "decode") else None
 
     b = PlanBuilder(f"{cfg.name}@{shape.name}")
     b.mesh(axes, teams=("pod",) if multi_pod else (),
@@ -196,7 +208,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
 
     # symbols: the full state/input tree
     symbols = _symbols(cfg, shape,
-                       page_geometry=page_geometry if paged else None)
+                       page_geometry=page_geometry if paged else None,
+                       spec_decode=spec)
     for name, (shp, dt) in symbols.items():
         b.symbol(name, shp, dt)
 
@@ -222,8 +235,15 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
             b.worksharing_loop("seq", shape.seq_len, "model")
         b.loop("layer", cfg.n_layers, scan=True)
         b.simd_loop("model_dim", cfg.d_model, simdlen=128, block=(512, 1024))
-        b.kernel("prefill" if shape.kind == "prefill" else "decode_step",
-                 ("params", "cache", "in"))
+        if shape.kind == "prefill":
+            kernel = "prefill"
+        elif spec is not None:
+            # the verify step is the task-parallel half of the draft/verify
+            # pair: one batched kernel scoring all k+1 chunk positions
+            kernel = "spec_verify"
+        else:
+            kernel = "decode_step"
+        b.kernel(kernel, ("params", "cache", "in"))
 
     # data attributes: mark state as tofrom (donated), params read-only at serve
     if shape.kind == "train":
@@ -239,6 +259,12 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
         # canonical fingerprint — and therefore the PlanCache key — exactly
         # like shapes and page geometry do.
         caps = {f: True for f in api.family_spec(cfg).capabilities}
+        if spec is not None:
+            # the draft/target pairing is part of the serving contract: a
+            # verify plan for one draft (or one lookahead) must never be
+            # served for another, so both fingerprint via caps(...)
+            draft_name, lookahead_k = spec
+            caps.update(spec_verify=int(lookahead_k), draft=str(draft_name))
         if shape.kind == "decode" and paged:
             npages, ps, pps = page_geometry
             b.data("cache", mapping="tofrom", access="read-write",
@@ -273,7 +299,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
 
 
 def _symbols(cfg: ArchConfig, shape: ShapeCfg,
-             page_geometry: Optional[Tuple[int, int, int]] = None
+             page_geometry: Optional[Tuple[int, int, int]] = None,
+             spec_decode: Optional[Tuple[str, int]] = None
              ) -> Dict[str, Tuple]:
     """Flattened symbol table for state + inputs + outputs of this cell."""
     symbols: Dict[str, Tuple] = {}
@@ -297,7 +324,14 @@ def _symbols(cfg: ArchConfig, shape: ShapeCfg,
     if shape.kind != "train":
         V = cfg.vocab
         B = shape.global_batch
-        symbols["out/logits"] = ((B, 1, V), cfg.compute_dtype)
+        width = 1
+        if spec_decode is not None and shape.kind == "decode":
+            # the verify chunk: last emitted token + k draft proposals per
+            # slot, scored (and cache-written) in one call
+            width = int(spec_decode[1]) + 1
+            symbols["in/tokens"] = ((B, width), "int32")
+            symbols["in/draft_tokens"] = ((B, width - 1), "int32")
+        symbols["out/logits"] = ((B, width, V), cfg.compute_dtype)
     return symbols
 
 

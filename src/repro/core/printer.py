@@ -214,14 +214,21 @@ def _mm_fields(extensions) -> str:
 # canonical text: capability-driven dispatch is part of the serving contract,
 # so two plans that differ only in family capabilities (e.g. a pageable dense
 # cache vs an encoder-memory cache of the same shapes) must never share a
-# fingerprint — or a PlanCache entry.
+# fingerprint — or a PlanCache entry. Valued keys render as key(value):
+# ``spec_verify`` carries the speculative lookahead k and ``draft`` the
+# paired draft architecture, so a verify plan for one (draft, k) pairing can
+# never be served for another.
 CAP_EXT_KEYS = ("pageable", "needs_encoder_memory", "stateful_cache",
-                "encoder_memory")
+                "encoder_memory", "spec_verify", "draft")
 
 
 def _cap_fields(extensions) -> str:
-    parts = [key for key in CAP_EXT_KEYS
-             if ir.ext_get(extensions, key) is True]
+    parts = []
+    for key in CAP_EXT_KEYS:
+        v = ir.ext_get(extensions, key)
+        if v is None or v is False:
+            continue
+        parts.append(key if v is True else f"{key}({v})")
     return f"caps({' '.join(parts)})" if parts else ""
 
 

@@ -9,8 +9,12 @@ step, recycling slots as sequences finish (see ``runtime.engine``). Dispatch
 is capability-driven through the ModelFamily protocol (``models.api``), so
 encoder-decoder configs (whisper) serve through the same loop — the launcher
 synthesizes stub encoder frames per request. ``--temperature`` / ``--top-k``
-/ ``--seed`` turn on device-side sampling; ``--eos-id`` finishes requests on
-an EOS token via the engine's device-side finished mask.
+/ ``--top-p`` / ``--seed`` turn on device-side sampling; ``--eos-id``
+finishes requests on an EOS token via the engine's device-side finished
+mask. ``--draft-config`` + ``--lookahead`` switch the engine into the
+speculative draft/verify mode (``runtime.speculative``): pass an arch id for
+the draft family, or ``self`` for self-speculation with the target's own
+weights — greedy streams stay bitwise identical either way.
 
 All lowering + jit artifacts come from the process-wide PlanCache, so repeated
 launches in one process never re-run the pass pipeline.
@@ -35,13 +39,23 @@ def main():
                     help="0 = greedy; > 0 samples on-device")
     ap.add_argument("--top-k", type=int, default=0,
                     help="0 = full vocab; else sample the k largest logits")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="1.0 = off; else nucleus sampling: keep the "
+                         "smallest set of tokens with cumulative prob >= p")
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling PRNG seed (per-request keys fold in rid)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="finish requests on this token (-1 = run to budget)")
+    ap.add_argument("--draft-config", default=None,
+                    help="speculative decoding draft arch id ('self' = "
+                         "self-speculation with the target's weights)")
+    ap.add_argument("--lookahead", type=int, default=4,
+                    help="draft tokens proposed per speculative step")
     ap.add_argument("--sequential", action="store_true",
                     help="also time the pre-engine one-at-a-time path")
     args = ap.parse_args()
+
+    import dataclasses
 
     import numpy as np
 
@@ -51,24 +65,39 @@ def main():
     from ..models import api
     from ..runtime.engine import Engine, EngineConfig, serve_sequential
     from ..runtime.sampling import SamplingParams
+    from ..runtime.speculative import SpecConfig
 
     cfg = smoke_config(args.arch) if args.smoke else config(args.arch)
     spec = api.family_spec(cfg)
     bucket = 1 << max(args.prompt_len - 1, 1).bit_length()
     max_seq = args.max_seq or bucket + args.tokens
-    if args.temperature <= 0 and (args.top_k or args.seed):
-        ap.error("--top-k/--seed only apply to sampled decode: "
+    if args.temperature <= 0 and (args.top_k or args.seed
+                                  or args.top_p < 1.0):
+        ap.error("--top-k/--top-p/--seed only apply to sampled decode: "
                  "set --temperature > 0 (temperature 0 is greedy)")
     sampling = SamplingParams(temperature=args.temperature,
-                              top_k=args.top_k, seed=args.seed) \
+                              top_k=args.top_k, top_p=args.top_p,
+                              seed=args.seed) \
         if args.temperature > 0 else None
     eos_id = args.eos_id if args.eos_id >= 0 else None
 
     params = api.init_params(cfg, jax.random.key(0))
+    spec_decode = None
+    draft_params = None
+    if args.draft_config:
+        if args.draft_config == "self":
+            draft_cfg = dataclasses.replace(cfg, name=cfg.name + "-draft")
+            draft_params = params
+        else:
+            draft_cfg = smoke_config(args.draft_config) if args.smoke \
+                else config(args.draft_config)
+        spec_decode = SpecConfig(draft_config=draft_cfg,
+                                 lookahead_k=args.lookahead)
     engine = Engine(cfg, EngineConfig(slots=args.slots,
                                       prompt_buckets=(bucket,),
-                                      max_seq=max_seq),
-                    params=params)
+                                      max_seq=max_seq,
+                                      spec_decode=spec_decode),
+                    params=params, draft_params=draft_params)
 
     rng = np.random.default_rng(0)
 
@@ -93,14 +122,22 @@ def main():
 
     engine.run(requests)
     st = engine.stats()
-    mode = f"sampled(T={args.temperature},k={args.top_k})" if sampling \
-        else "greedy"
+    mode = f"sampled(T={args.temperature},k={args.top_k},p={args.top_p})" \
+        if sampling else "greedy"
+    if spec_decode:
+        mode += f"+spec(draft={spec_decode.draft_config.name}," \
+                f"k={spec_decode.lookahead_k})"
     print(f"engine: arch={cfg.name} caps={','.join(st['capabilities']) or '-'} "
           f"requests={args.requests} slots={args.slots} "
           f"prompt={args.prompt_len} tokens={args.tokens} mode={mode}")
     print(f"  completed={st['completed']} eos_finished={st['eos_finished']} "
           f"rejected={st['rejected']} decode_steps={st['decode_steps']} "
           f"recycles={st['recycles']}")
+    if spec_decode:
+        print(f"  spec_steps={st['spec_steps']} "
+              f"acceptance_rate={st['acceptance_rate']:.2f} "
+              f"tokens_per_step="
+              f"{st['tokens_generated'] / max(st['spec_steps'], 1):.2f}")
     print(f"  occupancy={st['batch_occupancy']:.2f} "
           f"throughput={st['tokens_per_s']:.1f} tok/s "
           f"plan_cache_hit_rate={st['plan_cache']['hit_rate']:.2f}")

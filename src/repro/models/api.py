@@ -63,6 +63,10 @@ class FamilySpec:
     init_paged_cache: Optional[Callable] = None
     decode_step_paged: Optional[Callable] = None
     prefill_chunk: Optional[Callable] = None
+    # speculative verify (dense per-layer KV families): score k+1 positions
+    # per slot in one batched call, dense- or paged-cache backed
+    verify_chunk: Optional[Callable] = None
+    verify_chunk_paged: Optional[Callable] = None
 
     @property
     def capabilities(self) -> Tuple[str, ...]:
@@ -114,6 +118,16 @@ def _tf_prefill_chunk(cfg, params, pool, page_row, batch, offset):
                                      batch["tokens"], offset)
 
 
+def _tf_verify_chunk(cfg, params, cache, batch):
+    return transformer.verify_chunk(cfg, params, cache, batch["tokens"],
+                                    batch["pos"])
+
+
+def _tf_verify_chunk_paged(cfg, params, pool, page_table, batch):
+    return transformer.verify_chunk_paged(cfg, params, pool, page_table,
+                                          batch["tokens"], batch["pos"])
+
+
 # ----------------------------------------------------------- encdec adapters
 
 
@@ -157,6 +171,8 @@ def _transformer_spec(key: str, **caps) -> FamilySpec:
         init_paged_cache=transformer.init_paged_cache if paged else None,
         decode_step_paged=_tf_decode_paged if paged else None,
         prefill_chunk=_tf_prefill_chunk if paged else None,
+        verify_chunk=_tf_verify_chunk if paged else None,
+        verify_chunk_paged=_tf_verify_chunk_paged if paged else None,
         **caps)
 
 
@@ -222,6 +238,39 @@ def cache_specs(cfg: ArchConfig, B: int, S_max: int):
     return family_spec(cfg).cache_specs(cfg, B, S_max)
 
 
+def cache_batch_dims(cfg: ArchConfig, s_max: int):
+    """Per-leaf batch dim of a family's cache pytree, found structurally:
+    the dim whose extent tracks B (works for KV, conv/ssm state, and xLSTM
+    cells alike, whatever the family's layout)."""
+    a = cache_specs(cfg, 2, s_max)
+    b = cache_specs(cfg, 3, s_max)
+
+    def bdim(x, y):
+        for i, (p, q) in enumerate(zip(x.shape, y.shape)):
+            if p != q:
+                return i
+        return -1  # batch-independent leaf: keep the serving copy
+
+    return jax.tree.map(bdim, a, b)
+
+
+def build_cache_insert(cfg: ArchConfig, s_max: int):
+    """Jitted slot insert: a cache-of-one into slot ``i`` of a batched cache
+    (used by the serving engine's dense layout and the speculative draft
+    cache alike)."""
+    bdims = cache_batch_dims(cfg, s_max)
+
+    def insert(cache, one, slot):
+        def leaf(c, o, d):
+            if d < 0:
+                return c
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, o.astype(c.dtype), slot, axis=d)
+        return jax.tree.map(leaf, cache, one, bdims)
+
+    return jax.jit(insert, donate_argnums=(0,))
+
+
 def init_cache(cfg: ArchConfig, B: int, S_max: int):
     return family_spec(cfg).init_cache(cfg, B, S_max)
 
@@ -275,3 +324,33 @@ def prefill_chunk(cfg: ArchConfig, params, pool, page_row,
     spec = family_spec(cfg)
     return spec.require("prefill_chunk", "pageable")(
         cfg, params, pool, page_row, batch, offset)
+
+
+# -------------------------------------------------------- speculative verify
+# The target side of the draft/verify loop: one batched call scores all k+1
+# chunk positions per slot. Available exactly where the family keeps a dense
+# per-layer K/V cache (the same families as paged serving).
+
+
+def supports_spec_verify(cfg: ArchConfig) -> bool:
+    return family_spec(cfg).verify_chunk is not None
+
+
+def verify_chunk(cfg: ArchConfig, params, cache, batch: Dict[str, Any]):
+    """Verify a speculative chunk against the dense cache.
+
+    ``batch = {"tokens": [B, k+1], "pos": [B]}``; returns
+    (logits [B, k+1, V], cache with the chunk K/V written at its positions).
+    """
+    spec = family_spec(cfg)
+    return spec.require("verify_chunk", "spec_verify")(cfg, params, cache,
+                                                       batch)
+
+
+def verify_chunk_paged(cfg: ArchConfig, params, pool, page_table,
+                       batch: Dict[str, Any]):
+    """Verify a speculative chunk against the paged pool (same contract as
+    :func:`verify_chunk`; the page table must map the chunk's pages)."""
+    spec = family_spec(cfg)
+    return spec.require("verify_chunk_paged", "spec_verify")(
+        cfg, params, pool, page_table, batch)

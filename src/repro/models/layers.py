@@ -323,6 +323,39 @@ def attention_decode_paged(q, k_pages, v_pages, page_table, pos, *,
     return _attend_cached(q, k_c, v_c, valid, new_kv)
 
 
+def cache_insert_chunk(cache, new, pos):
+    """Insert a chunk [B,C,KV,hd] into [B,S,KV,hd] at per-row start positions
+    (non-rolling logical layout) — the dense-cache write of the speculative
+    verify step. Callers guarantee ``pos + C <= S`` (speculative engines size
+    their caches with ``lookahead_k`` slack rows so the update never clamps);
+    entries past the accepted prefix are masked by position until the next
+    chunk overwrites them, so rejected drafts need no dense rollback.
+    """
+    def one(c, n, i):
+        return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), i,
+                                                   axis=0)
+
+    return jax.vmap(one)(cache, new, pos)
+
+
+def cache_insert_paged_chunk(pool, new, page_table, pos):
+    """Scatter a chunk of C new tokens' K/V into the paged pool, all layers
+    at once — the paged-cache write of the speculative verify step.
+
+    pool: [L,NP,PS,KV,hd]; new: [L,B,C,KV,hd]; page_table: [B,P]; pos: [B].
+    Token j of row b lands in page ``page_table[b, (pos+j) // PS]`` at offset
+    ``(pos+j) % PS``. Callers guarantee the covering pages are mapped (the
+    engine allocates ``lookahead_k`` ahead and rolls the tail back on
+    rejection); null-row slots scatter into the reserved null page.
+    """
+    ps = pool.shape[2]
+    C = new.shape[2]
+    positions = pos[:, None] + jnp.arange(C)[None, :]           # [B,C]
+    phys = jnp.take_along_axis(page_table, positions // ps, axis=1)
+    off = positions % ps
+    return pool.at[:, phys, off].set(new.astype(pool.dtype))
+
+
 def cache_insert_paged(pool, new, page_table, pos):
     """Scatter one new token's K/V into the paged pool, all layers at once.
 

@@ -29,7 +29,8 @@ from ..core.act_sharding import (anchor_block_grads, constrain,
 from . import mamba2, moe as moe_lib, xlstm as xlstm_lib
 from .layers import (apply_rope, attention_chunked, attention_decode,
                      attention_decode_paged, attention_full,
-                     attention_prefill_chunk, cache_insert, cache_insert_paged,
+                     attention_prefill_chunk, cache_insert, cache_insert_chunk,
+                     cache_insert_paged, cache_insert_paged_chunk,
                      embed_lookup, gather_kv_pages, mlp_apply, norm)
 
 CHUNKED_ATTN_THRESHOLD = 8192
@@ -585,11 +586,15 @@ class KernelSpec:
                              f"got {self.attn_impl!r}")
 
 
-def _check_paged(cfg: ArchConfig) -> None:
+def _check_dense_kv(cfg: ArchConfig, what: str) -> None:
     if cfg.family not in PAGED_FAMILIES:
         raise NotImplementedError(
-            f"paged KV cache needs a dense per-layer K/V cache; family "
+            f"{what} needs a dense per-layer K/V cache; family "
             f"'{cfg.family}' keeps recurrent/rolling state (ROADMAP)")
+
+
+def _check_paged(cfg: ArchConfig) -> None:
+    _check_dense_kv(cfg, "paged KV cache")
 
 
 def paged_cache_shapes(cfg: ArchConfig, num_pages: int,
@@ -712,3 +717,100 @@ def prefill_chunk(cfg: ArchConfig, params, pool, page_row, tokens, offset):
         body, x, (params["blocks"], pool["k_pages"], pool["v_pages"]))
     hidden = norm(x, params["final_norm"], cfg.norm)
     return logits_fn(cfg, params, hidden[:, -1:]), (k_steps, v_steps)
+
+
+# ------------------------------------------------------- speculative verify
+
+
+def _verify_qkv(cfg: ArchConfig, p_l, x, positions, dtype):
+    """Projections + RoPE for a verify chunk at per-row positions [B,C]."""
+    B, C, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xr = norm(x, p_l["ln1"], cfg.norm).astype(dtype)
+    q = jnp.einsum("bsd,dh->bsh", xr, p_l["wq"].astype(dtype)) \
+        .reshape(B, C, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", xr, p_l["wk"].astype(dtype)) \
+        .reshape(B, C, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", xr, p_l["wv"].astype(dtype)) \
+        .reshape(B, C, KV, hd)
+    return (apply_rope(q, positions, cfg.rope_theta),
+            apply_rope(k, positions, cfg.rope_theta), v)
+
+
+def verify_chunk(cfg: ArchConfig, params, cache, tokens, pos):
+    """Speculative verify against the dense cache: score all C = k+1 chunk
+    tokens (the last emitted token + k draft proposals) in one batched call.
+
+    tokens [B,C] at per-row absolute positions ``pos .. pos+C-1``;
+    cache [L,B,S,KV,hd] holds context positions ``< pos`` per row. The chunk
+    attends to cached context plus itself causally
+    (``attention_prefill_chunk``) and its K/V is written at its positions in
+    one post-scan insert, mirroring ``decode_step``'s read-only layer scan.
+    Returns (logits [B,C,V], cache) — the rejection sampler picks the
+    accepted prefix from the logits; rejected positions stay masked by
+    ``pos`` until the next chunk overwrites them.
+    """
+    _check_dense_kv(cfg, "speculative verify")
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B, C = tokens.shape
+    positions = pos[:, None] + jnp.arange(C)[None, :]
+    x = constrain(embed_lookup(params["embed"], tokens, dtype), "hidden")
+
+    def body(x, xs_l):
+        p_l, k_c, v_c = xs_l
+        q, k, v = _verify_qkv(cfg, p_l, x, positions, dtype)
+        o = attention_prefill_chunk(q, k_c, v_c, k, v, pos)
+        a = jnp.einsum("bsh,hd->bsd",
+                       o.reshape(B, C, cfg.n_heads * cfg.hd).astype(dtype),
+                       p_l["wo"].astype(dtype))
+        x = x + a.astype(x.dtype)
+        m, _ = _mlp_or_moe(cfg, p_l, x, dtype)
+        return constrain(x + m.astype(x.dtype), "hidden"), (k, v)
+
+    x, (k_steps, v_steps) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"]))
+    ins = jax.vmap(lambda c, n: cache_insert_chunk(c, n, pos))
+    new_cache = {"k": ins(cache["k"], k_steps), "v": ins(cache["v"], v_steps)}
+    hidden = norm(x, params["final_norm"], cfg.norm)
+    return logits_fn(cfg, params, hidden), new_cache
+
+
+def verify_chunk_paged(cfg: ArchConfig, params, pool, page_table, tokens,
+                       pos):
+    """Speculative verify against the paged pool: same contract as
+    :func:`verify_chunk` but context is gathered through the page table and
+    the chunk K/V is scattered into its covering pages
+    (``cache_insert_paged_chunk``). ``page_table`` [B,P] must map every page
+    covering ``pos .. pos+C-1`` (the engine allocates the lookahead ahead of
+    the step and rolls the tail back on rejection); it may be column-sliced
+    to the pages actually in use — context past ``pos`` is masked anyway.
+    """
+    _check_dense_kv(cfg, "speculative verify")
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B, C = tokens.shape
+    positions = pos[:, None] + jnp.arange(C)[None, :]
+    x = constrain(embed_lookup(params["embed"], tokens, dtype), "hidden")
+
+    def body(x, xs_l):
+        p_l, k_pg, v_pg = xs_l
+        q, k, v = _verify_qkv(cfg, p_l, x, positions, dtype)
+        k_ctx = gather_kv_pages(k_pg, page_table)
+        v_ctx = gather_kv_pages(v_pg, page_table)
+        o = attention_prefill_chunk(q, k_ctx, v_ctx, k, v, pos)
+        a = jnp.einsum("bsh,hd->bsd",
+                       o.reshape(B, C, cfg.n_heads * cfg.hd).astype(dtype),
+                       p_l["wo"].astype(dtype))
+        x = x + a.astype(x.dtype)
+        m, _ = _mlp_or_moe(cfg, p_l, x, dtype)
+        return constrain(x + m.astype(x.dtype), "hidden"), (k, v)
+
+    x, (k_steps, v_steps) = jax.lax.scan(
+        body, x, (params["blocks"], pool["k_pages"], pool["v_pages"]))
+    new_pool = {
+        "k_pages": cache_insert_paged_chunk(pool["k_pages"], k_steps,
+                                            page_table, pos),
+        "v_pages": cache_insert_paged_chunk(pool["v_pages"], v_steps,
+                                            page_table, pos),
+    }
+    hidden = norm(x, params["final_norm"], cfg.norm)
+    return logits_fn(cfg, params, hidden), new_pool

@@ -39,7 +39,18 @@ Two KV-cache layouts (``EngineConfig.kv_layout``):
 Paged mode also enables **chunked prefill** (``prefill_chunk > 0``): prompts
 prefill page-aligned chunk by chunk, one chunk per engine step, interleaved
 with decode — long prompts stop stalling the decode batch, which is what
-drops tail time-to-first-token at depth.
+drops tail time-to-first-token at depth. Each chunk gathers only the pages
+already holding context (bucketed by powers of two), not the full per-slot
+horizon.
+
+``EngineConfig.spec_decode`` switches the decode loop into **speculative
+mode** (``runtime.speculative``): a draft family proposes ``lookahead_k``
+tokens per slot per step, the target verifies all k+1 positions in one
+batched call, and a lossless rejection sampler accepts a prefix — greedy
+streams stay bitwise identical to this engine's plain decode loop, sampled
+streams keep exact eviction-by-recompute replay, and each step emits 1 to
+k+1 tokens per slot. Speculative mode is the one engine path that syncs per
+step (the host must learn the acceptance counts to advance positions).
 
 All compiled artifacts route through ``core.lower.PlanCache``; the paged page
 geometry is part of the UPIR program (``paged_kv_alloc`` data attributes +
@@ -68,6 +79,7 @@ from ..models.api import KernelSpec
 from ..models.layers import cache_write_pages
 from .sampling import (GREEDY, SamplingParams, decode_select, request_key,
                        sample_tokens)
+from .speculative import SpecConfig, SpeculativeDecoder
 
 # ----------------------------------------------------------------- requests
 
@@ -120,6 +132,8 @@ class EngineConfig:
     prefill_chunk: int = 0             # 0 = one-shot prefill; else chunk length
     decode_kernel: str = "xla"         # xla (gather) | pallas (paged-attention kernel)
     interpret: bool = True             # Pallas interpreter mode (CPU containers)
+    # ---- speculative decoding (draft/verify mode; runtime.speculative)
+    spec_decode: Optional[SpecConfig] = None
 
 
 # --------------------------------------------------------- free-list allocator
@@ -178,7 +192,7 @@ class Engine:
 
     def __init__(self, cfg: ArchConfig, ecfg: EngineConfig = EngineConfig(), *,
                  params=None, key=None, plan_cache: Optional[PlanCache] = None,
-                 trace: Optional[list] = None):
+                 trace: Optional[list] = None, draft_params=None):
         self.cfg = cfg
         self.ecfg = ecfg
         self.spec = api.family_spec(cfg)
@@ -188,6 +202,11 @@ class Engine:
         if ecfg.eos_poll_every < 0:
             raise ValueError("eos_poll_every must be >= 0")
         self.paged = ecfg.kv_layout == "paged"
+        # speculative mode: the verify step writes K/V up to lookahead_k
+        # positions past the last accepted token, so every cache layout
+        # carries that many slack rows past the admission horizon
+        self.spec_cfg = ecfg.spec_decode
+        self._slack = self.spec_cfg.lookahead_k if self.spec_cfg else 0
         # decode-kernel knobs live in EngineConfig and are validated once —
         # they no longer leak through every decode_step_paged call
         self._kernel = KernelSpec(attn_impl=ecfg.decode_kernel,
@@ -213,7 +232,8 @@ class Engine:
             else default_plan_cache()
         self.trace = trace if trace is not None else []
 
-        self.pages_per_slot = -(-ecfg.max_seq // ecfg.page_size)
+        self.pages_per_slot = -(-(ecfg.max_seq + self._slack)
+                                // ecfg.page_size)
         self.num_pages = (ecfg.num_pages or ecfg.slots * self.pages_per_slot) \
             if self.paged else 0
         page_geom = (self.num_pages, ecfg.page_size, self.pages_per_slot) \
@@ -233,8 +253,18 @@ class Engine:
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
 
+        # draft/verify mode: the decoder owns the draft params + dense draft
+        # cache and the fused draft/verify/accept step (its verify plan is a
+        # first-class UPIR program carrying the draft/target pairing)
+        self._spec = SpeculativeDecoder(self, self.spec_cfg,
+                                        draft_params=draft_params) \
+            if self.spec_cfg else None
+
+        # _slack is in the key: spec and plain engines of the same geometry
+        # bake different s_max into their prefill/insert closures and must
+        # never share them through a common PlanCache
         fkey = (self.plan.fingerprint, cfg, ecfg.backend, ecfg.slots,
-                ecfg.max_seq, ecfg.kv_layout)
+                ecfg.max_seq, ecfg.kv_layout, self._slack)
         if self.paged:
             fkey += (self._kernel,)
             self._decode = self.plan_cache.get_or_build(
@@ -261,7 +291,8 @@ class Engine:
                 (ecfg.slots, self.pages_per_slot), np.int32)
             self._slot_pages: List[List[int]] = [[] for _ in range(ecfg.slots)]
         else:
-            self.cache = api.init_cache(cfg, ecfg.slots, ecfg.max_seq)
+            self.cache = api.init_cache(cfg, ecfg.slots,
+                                        ecfg.max_seq + self._slack)
         # per-slot encoder memory (needs_encoder_memory capability): filled
         # once at admission from the request's frames, read by prefill
         if self.spec.needs_encoder_memory:
@@ -278,6 +309,7 @@ class Engine:
         self.keys_np = np.zeros((ecfg.slots, 2), np.uint32)
         self.temps_np = np.zeros((ecfg.slots,), np.float32)
         self.topks_np = np.zeros((ecfg.slots,), np.int32)
+        self.topps_np = np.ones((ecfg.slots,), np.float32)
         self.eos_np = np.full((ecfg.slots,), -1, np.int32)
         self._policy_dev = None        # device copy, rebuilt only when dirty
         self.queue: Deque[Request] = deque()
@@ -298,11 +330,12 @@ class Engine:
     def _build_decode(self):
         cfg = self.cfg
 
-        def step(params, cache, tokens, pos, keys, temps, topks, eos, fin):
+        def step(params, cache, tokens, pos, keys, temps, topks, topps, eos,
+                 fin):
             logits, cache = api.decode_step(cfg, params, cache,
                                             {"tokens": tokens, "pos": pos})
             nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
-                                     eos, fin)
+                                     eos, fin, top_ps=topps)
             return nxt, fin, cache
 
         return jax.jit(step, donate_argnums=(1,))
@@ -311,12 +344,12 @@ class Engine:
         cfg, kernel = self.cfg, self._kernel
 
         def step(params, pool, page_table, tokens, pos, keys, temps, topks,
-                 eos, fin):
+                 topps, eos, fin):
             logits, pool = api.decode_step_paged(
                 cfg, params, pool, page_table,
                 {"tokens": tokens, "pos": pos}, kernel=kernel)
             nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
-                                     eos, fin)
+                                     eos, fin, top_ps=topps)
             return nxt, fin, pool
 
         return jax.jit(step, donate_argnums=(1,))
@@ -341,14 +374,14 @@ class Engine:
         cfg = self.cfg
 
         def chunk(params, pool, page_row, tokens, offset, page_ids, key,
-                  temp, topk):
+                  temp, topk, topp):
             logits, (k_c, v_c) = api.prefill_chunk(
                 cfg, params, pool, page_row, {"tokens": tokens}, offset)
             # only the final chunk's token is used; its sampling position is
             # the last processed position — identical to one-shot prefill's
             last = (offset + tokens.shape[1] - 1).astype(jnp.int32)
             nxt = sample_tokens(logits[:, -1], key[None], last[None],
-                                temp[None], topk[None])
+                                temp[None], topk[None], topp[None])
             pool = {"k_pages": cache_write_pages(pool["k_pages"], k_c,
                                                  page_ids),
                     "v_pages": cache_write_pages(pool["v_pages"], v_c,
@@ -357,33 +390,9 @@ class Engine:
 
         return jax.jit(chunk, donate_argnums=(1,))
 
-    def _cache_batch_dims(self):
-        """Per-leaf batch dim of the cache pytree, found structurally: the dim
-        whose extent tracks B (works for KV, conv/ssm state, and xLSTM cells
-        alike, whatever the family's layout)."""
-        a = api.cache_specs(self.cfg, 2, self.ecfg.max_seq)
-        b = api.cache_specs(self.cfg, 3, self.ecfg.max_seq)
-
-        def bdim(x, y):
-            for i, (p, q) in enumerate(zip(x.shape, y.shape)):
-                if p != q:
-                    return i
-            return -1  # batch-independent leaf: keep the engine's copy
-
-        return jax.tree.map(bdim, a, b)
-
     def _build_insert(self):
-        bdims = self._cache_batch_dims()
-
-        def insert(cache, one, slot):
-            def leaf(c, o, d):
-                if d < 0:
-                    return c
-                return jax.lax.dynamic_update_slice_in_dim(
-                    c, o.astype(c.dtype), slot, axis=d)
-            return jax.tree.map(leaf, cache, one, bdims)
-
-        return jax.jit(insert, donate_argnums=(0,))
+        return api.build_cache_insert(self.cfg,
+                                      self.ecfg.max_seq + self._slack)
 
     def _prefill_fn(self, bucket: int):
         cfg = self.cfg
@@ -391,10 +400,10 @@ class Engine:
         # paged one-shot prefill pads the cache only to the prompt's pages —
         # the whole point: a short prompt no longer reserves the horizon
         s_max = self._page_count(bucket) * self.ecfg.page_size if self.paged \
-            else self.ecfg.max_seq
+            else self.ecfg.max_seq + self._slack
 
         def build():
-            def pre(params, tokens, memory, key, temp, topk):
+            def pre(params, tokens, memory, key, temp, topk, topp):
                 batch = {"tokens": tokens}
                 if encdec:
                     batch["encoder_memory"] = memory
@@ -402,7 +411,7 @@ class Engine:
                 # first-token sampling position = last processed position
                 last = jnp.full((1,), tokens.shape[1] - 1, jnp.int32)
                 nxt = sample_tokens(logits[:, -1], key[None], last,
-                                    temp[None], topk[None])
+                                    temp[None], topk[None], topp[None])
                 return nxt, cache
             return jax.jit(pre)
         return self.plan_cache.get_or_build(
@@ -423,7 +432,8 @@ class Engine:
         s = req.sampling or GREEDY
         return self._prefill_fn(req.bucket)(
             self.params, toks, memory, jnp.asarray(req._key),
-            jnp.float32(s.temperature), jnp.int32(s.top_k))
+            jnp.float32(s.temperature), jnp.int32(s.top_k),
+            jnp.float32(s.top_p))
 
     def _page_count(self, tokens: int) -> int:
         return -(-tokens // self.ecfg.page_size)
@@ -526,6 +536,7 @@ class Engine:
         self.keys_np[i] = req._key
         self.temps_np[i] = s.temperature
         self.topks_np[i] = s.top_k
+        self.topps_np[i] = s.top_p
         self.eos_np[i] = -1 if req.eos_id is None else req.eos_id
         self._policy_dev = None
         self.trace.append({"event": "admit", "rid": req.rid, "slot": i,
@@ -559,6 +570,9 @@ class Engine:
             self._finish(req)      # 1-token request: done at prefill
         else:
             self.slots_req[i] = req
+            if self._spec is not None:
+                # the draft needs its own prompt KV before it can propose
+                self._spec.prefill_slot(self._padded_prompt(req), i)
 
     def _admit_into_free_slots(self) -> None:
         if self.paged:
@@ -627,23 +641,44 @@ class Engine:
             ids = self._slot_pages[i][off // self.ecfg.page_size:
                                       (off + chunk) // self.ecfg.page_size]
             s = req.sampling or GREEDY
+            # chunk-sized context gather: only the pages holding previous
+            # chunks' K/V are gathered (bucketed to powers of two to bound
+            # retraces) — the full-row gather paid full-horizon attention
+            # cost on every chunk, even at offset 0. Dropped entries were
+            # masked (kpos < offset) anyway, so streams are unchanged.
+            width = self._gather_bucket(off // self.ecfg.page_size)
+            row = self.page_table_np[i][:width]
             nxt, self.pool = self._chunk_prefill(
-                self.params, self.pool, jnp.asarray(self.page_table_np[i]),
+                self.params, self.pool, jnp.asarray(row),
                 jnp.asarray(toks)[None, :], jnp.int32(off),
                 jnp.asarray(ids, jnp.int32), jnp.asarray(req._key),
-                jnp.float32(s.temperature), jnp.int32(s.top_k))
+                jnp.float32(s.temperature), jnp.int32(s.top_k),
+                jnp.float32(s.top_p))
             req._chunk_cursor += 1
             self.prefill_chunks += 1
             if off + chunk >= req.bucket:
                 del self._prefilling[i]
                 self._activate(req, i, nxt)
 
+    def _gather_bucket(self, ctx_pages: int) -> int:
+        """Context-gather width (in pages) for a chunked-prefill step:
+        the next power of two covering the pages already written, so short
+        offsets stop gathering (and attending over) the full per-slot
+        horizon. Power-of-two bucketing bounds jit retraces to O(log P)."""
+        if ctx_pages <= 0:
+            return 0
+        width = 1
+        while width < ctx_pages:
+            width <<= 1
+        return min(width, self.pages_per_slot)
+
     # ------------------------------------------------------ paged page flow
 
     def _ensure_pages(self) -> None:
         """Before decode, every active slot about to write position ``pos``
-        must own the page covering it. Allocation failures trigger eviction
-        of the newest-admitted active request (recompute-on-readmit), oldest
+        (through ``pos + lookahead_k`` in speculative mode) must own the
+        pages covering it. Allocation failures trigger eviction of the
+        newest-admitted active request (recompute-on-readmit), oldest
         requests always make progress — liveness under overcommit."""
         order = sorted((i for i in range(self.ecfg.slots)
                         if self.slots_req[i] is not None),
@@ -652,7 +687,8 @@ class Engine:
             req = self.slots_req[i]
             if req is None:
                 continue               # evicted while growing an older slot
-            while self.pos[i] // self.ecfg.page_size >= len(self._slot_pages[i]):
+            while (self.pos[i] + self._slack) // self.ecfg.page_size \
+                    >= len(self._slot_pages[i]):
                 got = self.allocator.alloc(1)
                 if got is None:
                     if not self._evict_newest():
@@ -687,6 +723,7 @@ class Engine:
         req.tokens_out = []
         self.eos_np[i] = -1
         self.temps_np[i] = 0.0
+        self.topps_np[i] = 1.0
         self._policy_dev = None
         # req._key is NOT reset: recompute-on-readmit replays the same
         # fold_in(key, pos) schedule, so sampled streams reproduce exactly
@@ -703,6 +740,18 @@ class Engine:
         self._slot_pages[i] = []
         self.page_table_np[i, :] = 0
         self.pos[i] = 0
+
+    def _rollback_pages(self, i: int) -> None:
+        """Speculative paged commit: after acceptance, pages wholly past the
+        accepted context tail hold only rejected drafts' K/V — return them
+        to the free list and null their page-table entries, so the pool only
+        ever stays charged for committed tokens."""
+        keep = self._page_count(int(self.pos[i]))
+        row = self._slot_pages[i]
+        if len(row) > keep:
+            self.allocator.free(row[keep:])
+            self.page_table_np[i, keep:len(row)] = 0
+            del row[keep:]
 
     def _device_page_table(self):
         """Decode sees real rows only for active slots; prefilling/free slots
@@ -733,6 +782,7 @@ class Engine:
             self.slots_req[req.slot] = None
             self.eos_np[req.slot] = -1
             self.temps_np[req.slot] = 0.0
+            self.topps_np[req.slot] = 1.0
             self._policy_dev = None
         self.trace.append({"event": "finish", "rid": req.rid,
                            "slot": req.slot, "reason": reason})
@@ -781,29 +831,34 @@ class Engine:
             if self._policy_dev is None:
                 self._policy_dev = (
                     jnp.asarray(self.keys_np), jnp.asarray(self.temps_np),
-                    jnp.asarray(self.topks_np), jnp.asarray(self.eos_np))
-            policy = self._policy_dev + (self.finished,)
-            if self.paged:
-                nxt, self.finished, self.pool = self._decode(
-                    self.params, self.pool, self._device_page_table(),
-                    self.tokens, jnp.asarray(self.pos), *policy)
+                    jnp.asarray(self.topks_np), jnp.asarray(self.topps_np),
+                    jnp.asarray(self.eos_np))
+            if self._spec is not None:
+                self._spec_step(active)
             else:
-                nxt, self.finished, self.cache = self._decode(
-                    self.params, self.cache, self.tokens,
-                    jnp.asarray(self.pos), *policy)
-            self.tokens = nxt[:, None]
-            rids = tuple(self.slots_req[i].rid if self.slots_req[i] is not None
-                         else -1 for i in range(self.ecfg.slots))
-            self._toklog.append((nxt, rids))
-            self.decode_steps += 1
-            self._occupancy_sum += len(active)
-            for i in active:
-                req = self.slots_req[i]
-                self.pos[i] += 1
-                req._remaining -= 1
-                if req._remaining <= 0:
-                    self._finish(req)
-            self._eos_poll()
+                policy = self._policy_dev + (self.finished,)
+                if self.paged:
+                    nxt, self.finished, self.pool = self._decode(
+                        self.params, self.pool, self._device_page_table(),
+                        self.tokens, jnp.asarray(self.pos), *policy)
+                else:
+                    nxt, self.finished, self.cache = self._decode(
+                        self.params, self.cache, self.tokens,
+                        jnp.asarray(self.pos), *policy)
+                self.tokens = nxt[:, None]
+                rids = tuple(self.slots_req[i].rid
+                             if self.slots_req[i] is not None
+                             else -1 for i in range(self.ecfg.slots))
+                self._toklog.append((nxt, rids))
+                self.decode_steps += 1
+                self._occupancy_sum += len(active)
+                for i in active:
+                    req = self.slots_req[i]
+                    self.pos[i] += 1
+                    req._remaining -= 1
+                    if req._remaining <= 0:
+                        self._finish(req)
+                self._eos_poll()
         if self._sync_each_step:
             jax.block_until_ready(self.tokens)
         if self._activated and not self._sync_each_step:
@@ -814,6 +869,52 @@ class Engine:
         if self.paged:
             self.peak_pages = max(self.peak_pages, self.allocator.in_use)
         return len(active)
+
+    def _spec_step(self, active) -> None:
+        """One draft/verify iteration: the fused jit proposes ``k`` tokens
+        per slot, verifies all ``k+1`` positions in one batched call, and
+        rejection-samples the accepted prefix. The host reads the acceptance
+        counts (speculative mode syncs once per step — that is what buys
+        multi-token emission), commits per-slot emissions clamped to each
+        request's budget, handles EOS inline, and rolls back the paged tail
+        so only accepted tokens stay committed."""
+        keys, temps, topks, topps, _eos = self._policy_dev
+        pos_dev = jnp.asarray(self.pos)
+        if self.paged:
+            out, n_acc, self.pool, self._spec.cache = self._spec._step(
+                self.params, self._spec.params, self.pool,
+                self._device_page_table(), self._spec.cache, self.tokens,
+                pos_dev, keys, temps, topks, topps)
+        else:
+            out, n_acc, self.cache, self._spec.cache = self._spec._step(
+                self.params, self._spec.params, self.cache, self._spec.cache,
+                self.tokens, pos_dev, keys, temps, topks, topps)
+        out_np = np.asarray(out)
+        n_np = np.asarray(n_acc)
+        toks_np = np.array(self.tokens)   # mutable host copy
+        self.decode_steps += 1
+        self.spec_steps += 1
+        self._occupancy_sum += len(active)
+        for i in active:
+            req = self.slots_req[i]
+            emit = min(int(n_np[i]) + 1, req._remaining)
+            toks = [int(t) for t in out_np[i, :emit]]
+            eos_hit = req.eos_id is not None and req.eos_id in toks
+            if eos_hit:
+                toks = toks[:toks.index(req.eos_id) + 1]
+            self.draft_proposed += self._slack
+            self.draft_accepted += min(int(n_np[i]), len(toks))
+            self._pending_tokens.setdefault(req.rid, []).extend(toks)
+            self.pos[i] += len(toks)
+            toks_np[i, 0] = toks[-1]
+            req._remaining -= len(toks)
+            if eos_hit:
+                self._finish(req, reason="eos")
+            elif req._remaining <= 0:
+                self._finish(req)
+            elif self.paged:
+                self._rollback_pages(i)
+        self.tokens = jnp.asarray(toks_np)
 
     def run(self, requests: Sequence[Request] = (), *,
             max_steps: int = 1_000_000,
@@ -886,6 +987,9 @@ class Engine:
         self.decode_steps = 0
         self.prefills = 0
         self.prefill_chunks = 0
+        self.spec_steps = 0
+        self.draft_proposed = 0
+        self.draft_accepted = 0
         self.recycles = 0
         self.rejected = 0
         self.submitted = 0
@@ -933,6 +1037,16 @@ class Engine:
                 "evictions": self.evictions,
                 "prefill_chunks": self.prefill_chunks,
             })
+        if self.spec_cfg is not None:
+            out.update({
+                "spec_steps": self.spec_steps,
+                "lookahead_k": self.spec_cfg.lookahead_k,
+                "draft_arch": self.spec_cfg.draft_config.name,
+                "draft_proposed": self.draft_proposed,
+                "draft_accepted": self.draft_accepted,
+                "acceptance_rate": (self.draft_accepted / self.draft_proposed
+                                    if self.draft_proposed else 0.0),
+            })
         return out
 
 
@@ -959,18 +1073,18 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
     Returns per-request tokens + aggregate throughput."""
     spec = api.family_spec(cfg)
 
-    def pre(params, batch, key, temp, topk):
+    def pre(params, batch, key, temp, topk, topp):
         logits, cache = api.prefill(cfg, params, batch, s_max=max_seq)
         last = jnp.full((1,), batch["tokens"].shape[1] - 1, jnp.int32)
         nxt = sample_tokens(logits[:, -1], key[None], last,
-                            temp[None], topk[None])
+                            temp[None], topk[None], topp[None])
         return nxt, cache
 
-    def dec(params, cache, tokens, pos, key, temp, topk):
+    def dec(params, cache, tokens, pos, key, temp, topk, topp):
         logits, cache = api.decode_step(cfg, params, cache,
                                         {"tokens": tokens, "pos": pos})
         nxt = sample_tokens(logits[:, -1], key[None], pos,
-                            temp[None], topk[None])
+                            temp[None], topk[None], topp[None])
         return nxt, cache
 
     prefill_fn = jax.jit(pre)
@@ -986,7 +1100,7 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
         s = req.sampling or GREEDY
         key = req._key if req._key is not None else request_key(s, req.rid)
         return (jnp.asarray(key), jnp.float32(s.temperature),
-                jnp.int32(s.top_k))
+                jnp.int32(s.top_k), jnp.float32(s.top_p))
 
     if warmup and requests:
         by_bucket = {}
@@ -996,11 +1110,11 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             if b is not None:
                 by_bucket.setdefault(b, r)
         for b, r in by_bucket.items():
-            k, t, tk = policy(r)
+            k, t, tk, tp = policy(r)
             nxt, cache = prefill_fn(params, batch_for(np.zeros(b, np.int32), r),
-                                    k, t, tk)
+                                    k, t, tk, tp)
             nxt, cache = decode_fn(params, cache, nxt[:, None],
-                                   jnp.full((1,), b, jnp.int32), k, t, tk)
+                                   jnp.full((1,), b, jnp.int32), k, t, tk, tp)
             jax.block_until_ready(nxt)
 
     outputs: Dict[int, List[int]] = {}
@@ -1024,8 +1138,8 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             continue
         toks = np.zeros((bucket,), np.int32)
         toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
-        k, t, tk = policy(req)
-        nxt, cache = prefill_fn(params, batch_for(toks, req), k, t, tk)
+        k, t, tk, tp = policy(req)
+        nxt, cache = prefill_fn(params, batch_for(toks, req), k, t, tk, tp)
         gen = [nxt]
         # the sequential path syncs per token only when a request opts into
         # EOS (it must know when to stop); the engine never has to
@@ -1035,7 +1149,7 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             for i in range(req.max_new_tokens - 1):
                 pos = jnp.full((1,), bucket + i, jnp.int32)
                 nxt, cache = decode_fn(params, cache, gen[-1][:, None], pos,
-                                       k, t, tk)
+                                       k, t, tk, tp)
                 gen.append(nxt)
                 if req.eos_id is not None and \
                         int(np.asarray(nxt)[0]) == req.eos_id:

@@ -38,10 +38,12 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
     """Per-request decode policy. ``temperature <= 0`` means greedy (then
-    ``top_k`` is ignored); ``top_k == 0`` samples the full vocabulary."""
+    ``top_k``/``top_p`` are ignored); ``top_k == 0`` samples the full
+    vocabulary; ``top_p == 1.0`` disables the nucleus filter."""
 
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 1.0
     seed: int = 0
 
     def __post_init__(self):
@@ -49,6 +51,8 @@ class SamplingParams:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
 
     @property
     def greedy(self) -> bool:
@@ -69,15 +73,72 @@ def request_key(sampling: SamplingParams, rid: int) -> np.ndarray:
                                          rid), np.uint32)
 
 
-def sample_tokens(logits, keys, pos, temps, top_ks):
+def policy_mask(lg, top_ks, top_ps=None):
+    """Token support of the per-row sampling policy: bool [B, V].
+
+    ``lg`` [B, V] f32 raw logits; ``top_ks`` [B] int32 (<= 0 keeps the full
+    vocab); ``top_ps`` [B] f32 or None (None / >= 1.0 disables the nucleus
+    filter). Top-k is a cutoff on the raw logits; top-p keeps the smallest
+    prefix of the probability-sorted vocabulary whose cumulative probability
+    reaches ``top_p`` (the argmax token is always kept), via the sorted-cumsum
+    mask. Both filters compose (intersection).
+    """
+    V = lg.shape[-1]
+    k_eff = jnp.where(top_ks <= 0, V, jnp.clip(top_ks, 1, V))
+    order = jnp.argsort(-lg, axis=-1)            # one sort serves both masks
+    desc = jnp.take_along_axis(lg, order, axis=-1)
+    kth = jnp.take_along_axis(desc, (k_eff - 1)[:, None], axis=-1)
+    mask = lg >= kth
+    if top_ps is None:
+        return mask
+
+    def nucleus(mask):
+        probs = jax.nn.softmax(lg, axis=-1)
+        sp = jnp.take_along_axis(probs, order, axis=-1)
+        cum = jnp.cumsum(sp, axis=-1)
+        # keep a sorted slot iff the mass strictly above it is below top_p:
+        # the smallest nucleus reaching top_p, and always at least the top-1
+        keep_sorted = (cum - sp) < top_ps[:, None]
+        pmask = jnp.zeros_like(keep_sorted).at[
+            jnp.arange(lg.shape[0])[:, None], order].set(keep_sorted)
+        # top_p >= 1 keeps everything exactly (cumsum rounding must not drop
+        # tail tokens when the filter is disabled)
+        return mask & (pmask | (top_ps >= 1.0)[:, None])
+
+    # the engine always ships a top_ps vector; batches with the filter off
+    # everywhere (the default) skip the softmax/cumsum/scatter entirely
+    return jax.lax.cond(jnp.all(top_ps >= 1.0), lambda m: m, nucleus, mask)
+
+
+def masked_probs(logits, temps, top_ks, top_ps=None):
+    """The per-row policy distribution as explicit probabilities: f32 [B, V].
+
+    Softmax of the temperature-scaled, top-k/top-p-masked logits — exactly
+    the distribution :func:`sample_tokens` draws from, so the speculative
+    rejection sampler's p/q ratios are computed against the same law the
+    proposal was drawn with. Greedy rows (``temps <= 0``) return a one-hot at
+    the argmax, which makes deterministic acceptance (token equality) a
+    special case of the generic rejection formula.
+    """
+    lg = logits.astype(jnp.float32)
+    scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
+    mask = policy_mask(lg, top_ks, top_ps)
+    p = jax.nn.softmax(jnp.where(mask, scaled, -jnp.inf), axis=-1)
+    greedy = jax.nn.one_hot(jnp.argmax(lg, axis=-1), lg.shape[-1],
+                            dtype=jnp.float32)
+    return jnp.where((temps <= 0)[:, None], greedy, p)
+
+
+def sample_tokens(logits, keys, pos, temps, top_ks, top_ps=None):
     """Select one token per row. All inputs are per-row (batch-major):
 
     logits [B, V] (any float dtype), keys [B, 2] uint32, pos [B] int32,
-    temps [B] float32, top_ks [B] int32. Returns int32 [B].
+    temps [B] float32, top_ks [B] int32, top_ps [B] float32 or None.
+    Returns int32 [B].
 
     Rows with ``temps <= 0`` take the greedy argmax (bitwise the pre-sampling
-    path); others sample from temperature-scaled, top-k-masked logits via the
-    Gumbel-max trick keyed by ``fold_in(key, pos)``.
+    path); others sample from temperature-scaled, top-k/top-p-masked logits
+    via the Gumbel-max trick keyed by ``fold_in(key, pos)``.
     """
     lg = logits.astype(jnp.float32)
     gtok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
@@ -85,11 +146,7 @@ def sample_tokens(logits, keys, pos, temps, top_ks):
 
     def sampled(_):
         scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
-        # per-row top-k cutoff on the raw logits: k <= 0 keeps the full vocab
-        k_eff = jnp.where(top_ks <= 0, V, jnp.clip(top_ks, 1, V))
-        desc = -jnp.sort(-lg, axis=-1)
-        kth = jnp.take_along_axis(desc, (k_eff - 1)[:, None], axis=-1)
-        masked = jnp.where(lg >= kth, scaled, -jnp.inf)
+        masked = jnp.where(policy_mask(lg, top_ks, top_ps), scaled, -jnp.inf)
         gum = jax.vmap(lambda k, p: jax.random.gumbel(
             jax.random.fold_in(k, p), (V,), jnp.float32))(keys, pos)
         stok = jnp.argmax(masked + gum, axis=-1).astype(jnp.int32)
@@ -100,7 +157,8 @@ def sample_tokens(logits, keys, pos, temps, top_ks):
     return jax.lax.cond(jnp.all(temps <= 0.0), lambda _: gtok, sampled, None)
 
 
-def decode_select(logits, keys, pos, temps, top_ks, eos_ids, finished):
+def decode_select(logits, keys, pos, temps, top_ks, eos_ids, finished,
+                  top_ps=None):
     """One hot-loop selection step: sample, then fold the EOS finished mask.
 
     ``eos_ids`` [B] int32 with -1 meaning "no EOS for this row"; ``finished``
@@ -108,8 +166,95 @@ def decode_select(logits, keys, pos, temps, top_ks, eos_ids, finished):
     frozen device-side; the host truncates at finalize), and a row that just
     emitted its EOS becomes finished. Returns (tokens int32 [B], finished).
     """
-    nxt = sample_tokens(logits, keys, pos, temps, top_ks)
+    nxt = sample_tokens(logits, keys, pos, temps, top_ks, top_ps)
     fill = jnp.where(eos_ids >= 0, eos_ids, 0).astype(jnp.int32)
     nxt = jnp.where(finished, fill, nxt)
     finished = finished | ((eos_ids >= 0) & (nxt == eos_ids))
     return nxt, finished
+
+
+# ------------------------------------------------------- speculative decoding
+
+# Sub-key tags for the draft/verify loop. The draft's *proposal* at position p
+# deliberately uses the baseline ``fold_in(key, p)`` key (no tag): when the
+# draft equals the target, the proposal then reproduces the baseline sampled
+# stream token-for-token. Accept/residual draws fold one more tag in, so they
+# are independent uniform streams on the same position-pure schedule —
+# eviction-by-recompute replays a speculative sampled stream exactly.
+ACCEPT_FOLD = 1
+RESID_FOLD = 2
+
+
+def _fold2(key, p, tag):
+    return jax.random.fold_in(jax.random.fold_in(key, p), tag)
+
+
+def spec_accept(target_logits, draft_tokens, draft_logits, keys, pos, temps,
+                top_ks, top_ps=None):
+    """Vectorized lossless rejection sampler for one draft/verify step.
+
+    ``target_logits`` [B, k+1, V] — the target's verify logits at positions
+    ``pos .. pos+k``; ``draft_tokens`` [B, k] — the draft's proposals (token
+    emitted after position ``pos+j`` is proposal ``j``); ``draft_logits``
+    [B, k, V] — the draft logits each proposal was drawn from (the q
+    distribution is recovered via :func:`masked_probs`, exactly the law
+    :func:`sample_tokens` sampled). Returns ``(tokens [B, k+1] int32,
+    n_accept [B] int32)``; row ``b`` emits ``tokens[b, :n_accept[b] + 1]``.
+
+    Per position: accept proposal ``d`` iff ``u * q(d) < p(d)`` with
+    ``u ~ U[0,1)`` keyed ``fold_in(fold_in(key, pos), ACCEPT_FOLD)``; on the
+    first rejection, resample from ``normalize(max(p - q, 0))`` (Gumbel-max
+    keyed ``RESID_FOLD``). If every proposal is accepted, the bonus token is
+    drawn from the last verify position with the *baseline*
+    :func:`sample_tokens` schedule. Greedy rows degenerate exactly: one-hot
+    p/q make acceptance token equality and the residual the target argmax, so
+    greedy speculative streams are the plain argmax-of-target stream — and a
+    ``lax.cond`` takes that pure-argmax path outright for all-greedy batches
+    (the common serving default pays no sort/softmax/gumbel work).
+    """
+    B, C, V = target_logits.shape
+    k = C - 1
+    tlg = target_logits.astype(jnp.float32)
+    targmax = jnp.argmax(tlg, axis=-1).astype(jnp.int32)      # [B, C]
+    idx = jnp.arange(C)[None, :]
+    drafted = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+
+    def emit(n, corrections):
+        out = jnp.where(idx < n[:, None], drafted,
+                        corrections).astype(jnp.int32)
+        return out, n.astype(jnp.int32)
+
+    def greedy(_):
+        acc = draft_tokens == targmax[:, :k]
+        n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        return emit(n, targmax)
+
+    def sampled(_):
+        p = jax.vmap(masked_probs, in_axes=(1, None, None, None),
+                     out_axes=1)(tlg[:, :k], temps, top_ks, top_ps)
+        q = jax.vmap(masked_probs, in_axes=(1, None, None, None),
+                     out_axes=1)(draft_logits, temps, top_ks, top_ps)
+        pd = jnp.take_along_axis(p, draft_tokens[..., None], axis=-1)[..., 0]
+        qd = jnp.take_along_axis(q, draft_tokens[..., None], axis=-1)[..., 0]
+        steps = jnp.arange(k)
+        us = jax.vmap(lambda key, p0: jax.vmap(lambda j: jax.random.uniform(
+            _fold2(key, p0 + j, ACCEPT_FOLD)))(steps))(keys, pos)   # [B, k]
+        acc = us * qd < pd
+        n = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+
+        # residual distribution at each would-be rejection point; if float
+        # cancellation zeroes it entirely, fall back to the target policy
+        # (still a valid, deterministic draw — p == q bitwise implies sure
+        # acceptance, so the fallback is off the accepted path anyway)
+        res = jnp.maximum(p - q, 0.0)
+        res = jnp.where(res.sum(-1, keepdims=True) > 0, res, p)
+        rg = jax.vmap(lambda key, p0: jax.vmap(
+            lambda j: jax.random.gumbel(_fold2(key, p0 + j, RESID_FOLD),
+                                        (V,), jnp.float32))(steps))(keys, pos)
+        res_tok = jnp.argmax(jnp.log(res) + rg, axis=-1).astype(jnp.int32)
+
+        bonus = sample_tokens(tlg[:, k], keys, pos + k, temps, top_ks,
+                              top_ps)
+        return emit(n, jnp.concatenate([res_tok, bonus[:, None]], axis=1))
+
+    return jax.lax.cond(jnp.all(temps <= 0.0), greedy, sampled, None)

@@ -28,22 +28,26 @@ from ..models import api
 def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  mesh=None, plan_cache: Optional[PlanCache] = None,
                  trace: Optional[list] = None,
-                 page_geometry: Optional[Tuple[int, int, int]] = None
+                 page_geometry: Optional[Tuple[int, int, int]] = None,
+                 spec_decode: Optional[Tuple[str, int]] = None
                  ) -> LoweredPlan:
-    """(config, shape, backend, mesh[, page geometry]) -> LoweredPlan, via the
-    PlanCache.
+    """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
+    LoweredPlan, via the PlanCache.
 
     Builds the UPIR program for the serving step and asks the cache for its
     optimized/lowered form; a warm cache skips the pass pipeline entirely
     (the hit is visible in ``plan_cache.stats()``). ``page_geometry``
     switches the decode program to the paged-KV layout — the geometry is
     fingerprinted, so paged and dense plans (and different page sizes) never
-    collide in the cache.
+    collide in the cache. ``spec_decode=(draft_name, k)`` builds the
+    speculative *verify* program instead of the plain decode step; the
+    pairing fingerprints via ``caps(spec_verify(k) draft(name))``.
     """
     from ..core.plans import build_program
     cache = plan_cache if plan_cache is not None else default_plan_cache()
     mesh_shape = tuple(mesh.shape.items()) if mesh is not None else None
-    prog = build_program(cfg, shape, page_geometry=page_geometry)
+    prog = build_program(cfg, shape, page_geometry=page_geometry,
+                         spec_decode=spec_decode)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)
 
@@ -85,7 +89,8 @@ def make_decode_step(cfg: ArchConfig, sample="greedy",
                 next_tok = sample_tokens(
                     logits[:, -1], keys, batch["pos"],
                     jnp.full((B,), sample.temperature, jnp.float32),
-                    jnp.full((B,), sample.top_k, jnp.int32))
+                    jnp.full((B,), sample.top_k, jnp.int32),
+                    jnp.full((B,), sample.top_p, jnp.float32))
             else:
                 next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32),
                                       axis=-1).astype(jnp.int32)

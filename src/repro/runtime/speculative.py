@@ -1,0 +1,202 @@
+"""Speculative decoding subsystem: the draft/verify engine mode.
+
+Speculative decoding is a *task-parallel* serving pattern layered on the same
+UPIR pipeline the plain decode step uses: a small **draft** family proposes
+``lookahead_k`` tokens per active slot (running its own dense KV cache and
+its own PlanCache entries), the **target** model verifies all ``k+1``
+positions in one batched ``prefill_chunk``-style call (a first-class UPIR
+program — ``caps(spec_verify(k) draft(name))`` in the printed dialect, so
+the draft/target pairing participates in the canonical fingerprint), and a
+vectorized **lossless rejection sampler** (``sampling.spec_accept``) accepts
+a prefix of the proposals and resamples the first rejected position.
+
+Losslessness contract:
+
+  * **Greedy** requests accept a proposal iff it equals the target's argmax,
+    and every emitted token *is* the target's argmax at its position — the
+    stream is bitwise identical to the non-speculative engine across dense,
+    paged, and chunked-prefill configs.
+  * **Sampled** requests draw proposals from the draft's policy distribution
+    on the baseline ``fold_in(request_key, position)`` schedule and
+    accept/residual uniforms on tagged sub-keys of the same schedule, so the
+    emitted marginal distribution is the target policy exactly and paged
+    eviction-by-recompute replays a speculative sampled stream token-for-
+    token.
+
+The draft phase runs ``k+1`` chained single-token decode steps inside one
+``lax.scan`` (the extra final feed writes the last proposal's K/V so the
+draft cache stays gap-free after a fully-accepted step); draft + verify +
+accept fuse into a single jitted dispatch per engine step. The engine
+allocates paged KV ``k`` positions ahead of each step and rolls the
+page-table tail back after acceptance, so only accepted tokens stay
+committed in the pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..models import api
+from .sampling import sample_tokens, spec_accept
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Draft/verify engine mode knobs.
+
+    ``draft_config`` is any same-vocabulary, non-encoder-decoder family (a
+    smaller sibling of the target, or the target itself for self-
+    speculation); ``lookahead_k`` is the number of tokens the draft proposes
+    per engine step — each step emits between 1 and ``k+1`` tokens per slot.
+    """
+
+    draft_config: ArchConfig
+    lookahead_k: int = 4
+
+    def __post_init__(self):
+        if self.lookahead_k < 1:
+            raise ValueError(
+                f"lookahead_k must be >= 1, got {self.lookahead_k}")
+
+
+class SpeculativeDecoder:
+    """Draft-model state + the fused draft/verify/accept step for an Engine.
+
+    Owns the draft params, the draft's per-slot dense KV cache (sized with
+    ``lookahead_k`` slack rows, like the target's), and the compiled
+    artifacts — all routed through the engine's PlanCache under keys derived
+    from the *verify* plan fingerprint (which embeds the draft/target
+    pairing) plus the draft's own decode-plan fingerprint.
+    """
+
+    def __init__(self, engine, scfg: SpecConfig, draft_params=None):
+        from . import server
+        cfg, ecfg = engine.cfg, engine.ecfg
+        dcfg = scfg.draft_config
+        self.tcfg = cfg
+        self.draft_cfg = dcfg
+        self.k = scfg.lookahead_k
+        if not api.supports_spec_verify(cfg):
+            raise api.CapabilityError(
+                f"speculative decode: family '{api.family_key(cfg)}' has no "
+                f"spec_verify entry point (needs a dense per-layer K/V "
+                f"cache)")
+        dspec = api.family_spec(dcfg)
+        if dspec.needs_encoder_memory:
+            raise api.CapabilityError(
+                f"speculative decode: draft family '{dspec.key}' needs "
+                f"encoder memory — drafts must be decoder-only")
+        if dcfg.vocab != cfg.vocab:
+            raise ValueError(
+                f"draft vocab {dcfg.vocab} != target vocab {cfg.vocab}: "
+                f"the rejection sampler compares distributions over one "
+                f"vocabulary")
+        self.paged = engine.paged
+
+        # the verify step is a first-class UPIR program: the chunk widens
+        # in/tokens to k+1, the kernel is spec_verify, and the draft/target
+        # pairing fingerprints via caps(spec_verify(k) draft(name))
+        page_geom = (engine.num_pages, ecfg.page_size,
+                     engine.pages_per_slot) if engine.paged else None
+        self.verify_plan = server.serving_plan(
+            cfg, ShapeCfg(f"engine_b{ecfg.slots}_spec{self.k}", "decode",
+                          ecfg.max_seq, ecfg.slots),
+            backend=ecfg.backend, plan_cache=engine.plan_cache,
+            trace=engine.trace, page_geometry=page_geom,
+            spec_decode=(dcfg.name, self.k))
+        # the draft rides its own (plain dense decode) plan + cache entries
+        self.draft_plan = server.serving_plan(
+            dcfg, ShapeCfg(f"draft_b{ecfg.slots}", "decode", ecfg.max_seq,
+                           ecfg.slots),
+            backend=ecfg.backend, plan_cache=engine.plan_cache,
+            trace=engine.trace)
+
+        self.params = draft_params if draft_params is not None \
+            else api.init_params(dcfg, jax.random.key(1))
+        self._s_slack = ecfg.max_seq + self.k
+        self.cache = api.init_cache(dcfg, ecfg.slots, self._s_slack)
+        self._plan_cache = engine.plan_cache
+        self._fkey = ("spec", self.verify_plan.fingerprint,
+                      self.draft_plan.fingerprint, cfg, dcfg, ecfg.backend,
+                      ecfg.slots, ecfg.max_seq, ecfg.kv_layout, self.k)
+        self._step = self._plan_cache.get_or_build(
+            self._fkey + ("step",), self._build_step)
+        self._insert = self._plan_cache.get_or_build(
+            self._fkey + ("draft_insert",),
+            lambda: api.build_cache_insert(dcfg, self._s_slack))
+
+    # ------------------------------------------------------------ draft side
+
+    def prefill_slot(self, prompt_row, i: int) -> None:
+        """Build the draft's KV for slot ``i``'s prompt (one-shot; the draft
+        is small, so it never needs chunking even when the target chunks)."""
+        fn = self._draft_prefill_fn(len(prompt_row))
+        one = fn(self.params, jnp.asarray(prompt_row)[None, :])
+        self.cache = self._insert(self.cache, one, i)
+
+    def _draft_prefill_fn(self, bucket: int):
+        dcfg, s_slack = self.draft_cfg, self._s_slack
+
+        def build():
+            def pre(dparams, tokens):
+                _, cache = api.prefill(dcfg, dparams, {"tokens": tokens},
+                                       s_max=s_slack)
+                return cache
+            return jax.jit(pre)
+
+        return self._plan_cache.get_or_build(
+            self._fkey + ("draft_prefill", bucket), build)
+
+    # ------------------------------------------------------------ fused step
+
+    def _build_step(self):
+        cfg, dcfg, k, paged = self.tcfg, self.draft_cfg, self.k, self.paged
+
+        def draft_phase(dparams, dcache, tokens, pos, keys, temps, topks,
+                        topps):
+            # k+1 chained draft decode steps in one scan: step j feeds the
+            # current token at pos+j and proposes the next; the extra final
+            # feed writes the last proposal's K/V so a fully-accepted step
+            # leaves no gap in the draft cache
+            def body(carry, j):
+                dcache, tok = carry
+                logits, dcache = api.decode_step(
+                    dcfg, dparams, dcache, {"tokens": tok, "pos": pos + j})
+                lg = logits[:, -1]
+                nxt = sample_tokens(lg, keys, pos + j, temps, topks, topps)
+                return (dcache, nxt[:, None]), (nxt, lg)
+
+            (dcache, _), (props, qlg) = jax.lax.scan(
+                body, (dcache, tokens), jnp.arange(k + 1))
+            return dcache, props[:k].swapaxes(0, 1), qlg[:k].swapaxes(0, 1)
+
+        if paged:
+            def step(params, dparams, pool, page_table, dcache, tokens, pos,
+                     keys, temps, topks, topps):
+                dcache, drafts, qlg = draft_phase(
+                    dparams, dcache, tokens, pos, keys, temps, topks, topps)
+                chunk = jnp.concatenate([tokens, drafts], axis=1)
+                vlogits, pool = api.verify_chunk_paged(
+                    cfg, params, pool, page_table,
+                    {"tokens": chunk, "pos": pos})
+                out, n = spec_accept(vlogits, drafts, qlg, keys, pos, temps,
+                                     topks, topps)
+                return out, n, pool, dcache
+
+            return jax.jit(step, donate_argnums=(2, 4))
+
+        def step(params, dparams, cache, dcache, tokens, pos, keys, temps,
+                 topks, topps):
+            dcache, drafts, qlg = draft_phase(
+                dparams, dcache, tokens, pos, keys, temps, topks, topps)
+            chunk = jnp.concatenate([tokens, drafts], axis=1)
+            vlogits, cache = api.verify_chunk(
+                cfg, params, cache, {"tokens": chunk, "pos": pos})
+            out, n = spec_accept(vlogits, drafts, qlg, keys, pos, temps,
+                                 topks, topps)
+            return out, n, cache, dcache
+
+        return jax.jit(step, donate_argnums=(2, 3))

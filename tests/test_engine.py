@@ -570,6 +570,28 @@ def test_sampled_matches_sequential(params):
     assert streams == [seq["tokens"][r.rid] for r in reqs]
 
 
+def test_top_p_sampled_matches_sequential_and_moves_streams(params):
+    """Nucleus sampling rides the same key schedule: engine == sequential,
+    replay is deterministic, and a tight top_p actually changes the stream
+    relative to the unfiltered policy."""
+    sp = SamplingParams(temperature=1.2, top_p=0.7, seed=5)
+    work = sampled_workload(sampling=sp)
+    streams, reqs = run_workload(mk_engine(params, slots=2), work)
+    seq = serve_sequential(CFG, params, reqs, max_seq=MAX_SEQ,
+                           prompt_buckets=(BUCKET,), warmup=False)
+    assert streams == [seq["tokens"][r.rid] for r in reqs]
+    replay, _ = run_workload(mk_engine(params, slots=2), work)
+    assert streams == replay
+    wide, _ = run_workload(
+        mk_engine(params, slots=2),
+        sampled_workload(sampling=SamplingParams(temperature=1.2, seed=5)))
+    assert streams != wide
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(temperature=1.0, top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(temperature=1.0, top_p=1.5)
+
+
 def test_sampled_eviction_by_recompute_replays(params):
     """Paged eviction leans on the admission-time PRNG key snapshot: a
     sampled stream recomputed after eviction must reproduce exactly."""

@@ -11,7 +11,8 @@ import numpy as np
 import pytest
 
 from repro.runtime.sampling import (GREEDY, SamplingParams, decode_select,
-                                    request_key, sample_tokens)
+                                    masked_probs, policy_mask, request_key,
+                                    sample_tokens)
 
 B, V = 4, 64
 RNG = np.random.default_rng(0)
@@ -78,6 +79,68 @@ def test_top_k_restricts_support():
         got = np.asarray(sample_tokens(LOGITS, KEYS, POS + p, temps, topk))
         for b in range(B):
             assert got[b] in allowed[b]
+
+
+def test_top_p_restricts_support():
+    """With top_p = p, sampled tokens come from the smallest prefix of the
+    probability-sorted vocab whose cumulative mass reaches p."""
+    temps = jnp.full(B, 3.0, jnp.float32)
+    topk = jnp.zeros(B, jnp.int32)
+    topp = jnp.full(B, 0.6, jnp.float32)
+    probs = np.asarray(jax.nn.softmax(LOGITS, axis=-1))
+    allowed = []
+    for b in range(B):
+        order = np.argsort(-probs[b])
+        cum = np.cumsum(probs[b][order])
+        keep = order[:int(np.searchsorted(cum, 0.6) + 1)]
+        allowed.append(set(keep.tolist()))
+    for p in range(16):
+        got = np.asarray(sample_tokens(LOGITS, KEYS, POS + p, temps, topk,
+                                       topp))
+        for b in range(B):
+            assert got[b] in allowed[b]
+
+
+def test_top_p_disabled_is_bitwise_off():
+    """top_p = 1.0 keeps the whole vocabulary: token-for-token identical to
+    the no-top-p path (cumsum rounding must not drop tail tokens)."""
+    temps = jnp.full(B, 1.5, jnp.float32)
+    topk = jnp.full(B, 5, jnp.int32)
+    mask = policy_mask(LOGITS, topk, jnp.ones(B, jnp.float32))
+    assert (np.asarray(mask) == np.asarray(policy_mask(LOGITS, topk))).all()
+    for p in range(8):
+        a = sample_tokens(LOGITS, KEYS, POS + p, temps, topk)
+        b = sample_tokens(LOGITS, KEYS, POS + p, temps, topk,
+                          jnp.ones(B, jnp.float32))
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_top_p_always_keeps_argmax():
+    """Even a tiny top_p keeps the argmax token (the nucleus is never
+    empty), and greedy rows ignore top_p entirely."""
+    tiny = jnp.full(B, 1e-6, jnp.float32)
+    mask = np.asarray(policy_mask(LOGITS, jnp.zeros(B, jnp.int32), tiny))
+    am = np.argmax(np.asarray(LOGITS), -1)
+    for b in range(B):
+        assert mask[b, am[b]]
+        assert mask[b].sum() == 1
+    got = sample_tokens(LOGITS, KEYS, POS, jnp.zeros(B, jnp.float32),
+                        jnp.zeros(B, jnp.int32), tiny)
+    assert (np.asarray(got) == am).all()
+
+
+def test_masked_probs_is_the_sampling_law():
+    """masked_probs sums to one over the policy support and is one-hot for
+    greedy rows — the p/q the speculative rejection sampler compares."""
+    temps = jnp.asarray([0.0, 1.3, 0.7, 2.0], jnp.float32)
+    topks = jnp.asarray([0, 4, 0, 0], jnp.int32)
+    topps = jnp.asarray([1.0, 1.0, 0.5, 0.9], jnp.float32)
+    p = np.asarray(masked_probs(LOGITS, temps, topks, topps))
+    np.testing.assert_allclose(p.sum(-1), np.ones(B), rtol=1e-5)
+    assert p[0].max() == 1.0 and (p[0] > 0).sum() == 1   # greedy: one-hot
+    assert (p[1] > 0).sum() == 4                         # top-k support
+    mask = np.asarray(policy_mask(LOGITS, topks, topps))
+    assert ((p > 0) <= mask).all()
 
 
 def test_decode_select_eos_freeze_and_set():

@@ -1,0 +1,370 @@
+"""Speculative decoding: draft/verify engine mode + lossless rejection
+sampling (``runtime.speculative``, ``sampling.spec_accept``).
+
+The contracts under test: greedy speculative streams are bitwise identical
+to the non-speculative engine across dense, paged, and chunked-prefill
+configs; a draft equal to the target accepts everything; sampled speculative
+streams replay deterministically (including through paged
+eviction-by-recompute); the verify step is a fingerprinted UPIR program
+carrying the draft/target pairing; and the chunk-sized context-gather fix
+leaves chunked-prefill numerics untouched.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeCfg, smoke_config
+from repro.core.lower import PlanCache, plan_from_program
+from repro.core.passes import run_pipeline
+from repro.core.plans import build_program
+from repro.core.printer import program_fingerprint, to_mlir
+from repro.models import api
+from repro.models.api import CapabilityError
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.sampling import (SamplingParams, request_key,
+                                    sample_tokens, spec_accept)
+from repro.runtime.speculative import SpecConfig
+
+CFG = smoke_config("tinyllama-1.1b")
+BUCKET = 8
+TOKENS = 6
+K = 3
+# all-accept self-drafts emit k+1 tokens per step: a decode budget that is a
+# multiple of k+1 is never clamped, so acceptance_rate reads exactly 1.0
+TOKENS_EXACT = (K + 1) * 2 + 1
+MAX_SEQ = BUCKET + max(TOKENS, TOKENS_EXACT)
+
+DRAFT_CFG = dataclasses.replace(CFG, name=CFG.name + "-draft")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def mk_engine(params, **kw):
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ, **kw),
+                  params=params, plan_cache=PlanCache())
+
+
+def mk_spec(params, *, k=K, draft_params=None, draft_cfg=DRAFT_CFG, **kw):
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ,
+                                    spec_decode=SpecConfig(
+                                        draft_config=draft_cfg,
+                                        lookahead_k=k), **kw),
+                  params=params, plan_cache=PlanCache(),
+                  draft_params=draft_params if draft_params is not None
+                  else params)
+
+
+def mixed_workload(n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, CFG.vocab,
+                          size=int(rng.integers(1, BUCKET + 1))).tolist(),
+             int(rng.integers(1, TOKENS + 1))) for _ in range(n)]
+
+
+def run_streams(engine, workload, sampling=None):
+    reqs = [engine.make_request(p, n, sampling=sampling)
+            for p, n in workload]
+    engine.run(reqs)
+    return [engine.finalize_request(r) for r in reqs], engine
+
+
+# ------------------------------------------------------ rejection sampler
+
+
+def test_spec_accept_greedy_prefix_and_correction():
+    """Greedy acceptance is argmax matching; the emitted stream is the
+    target's argmax at every position regardless of what was drafted."""
+    B, V, k = 2, 16, 3
+    rng = np.random.default_rng(0)
+    tlg = jnp.asarray(rng.normal(size=(B, k + 1, V)).astype(np.float32))
+    targmax = np.argmax(np.asarray(tlg), -1)
+    # row 0: draft matches positions 0,1 then diverges; row 1 matches all
+    drafts = np.stack([targmax[0, :k], targmax[1, :k]]).astype(np.int32)
+    drafts[0, 2] = (drafts[0, 2] + 1) % V
+    dlg = jnp.asarray(rng.normal(size=(B, k, V)).astype(np.float32))
+    keys = jnp.asarray(np.stack([request_key(SamplingParams(), r)
+                                 for r in (1, 2)]))
+    pos = jnp.asarray([5, 9], jnp.int32)
+    zeros = jnp.zeros((B,), jnp.float32)
+    out, n = spec_accept(tlg, jnp.asarray(drafts), dlg, keys, pos, zeros,
+                         jnp.zeros((B,), jnp.int32))
+    assert n.tolist() == [2, 3]
+    # every emitted token is the target argmax at its position
+    for b in range(B):
+        emitted = np.asarray(out)[b, :int(n[b]) + 1]
+        assert (emitted == targmax[b, :int(n[b]) + 1]).all()
+
+
+def test_spec_accept_identical_distributions_accept_all():
+    """p == q bitwise => the accept ratio is 1 and u < 1 always accepts, for
+    any sampled policy — the all-accept half of losslessness."""
+    B, V, k = 3, 32, 4
+    rng = np.random.default_rng(1)
+    dlg = jnp.asarray(rng.normal(size=(B, k, V)).astype(np.float32))
+    tlg = jnp.concatenate(
+        [dlg, jnp.asarray(rng.normal(size=(B, 1, V)).astype(np.float32))], 1)
+    keys = jnp.asarray(np.stack([request_key(SamplingParams(seed=4), r)
+                                 for r in range(B)]))
+    pos = jnp.asarray([0, 7, 31], jnp.int32)
+    temps = jnp.full((B,), 0.8, jnp.float32)
+    topks = jnp.asarray([0, 8, 4], jnp.int32)
+    topps = jnp.asarray([1.0, 0.9, 0.5], jnp.float32)
+    # proposals drawn from q itself (the draft's own schedule)
+    drafts = jnp.stack([sample_tokens(dlg[:, j], keys, pos + j, temps, topks,
+                                      topps) for j in range(k)], axis=1)
+    out, n = spec_accept(tlg, drafts, dlg, keys, pos, temps, topks, topps)
+    assert n.tolist() == [k] * B
+    assert (np.asarray(out)[:, :k] == np.asarray(drafts)).all()
+
+
+# ------------------------------------------------- engine stream equality
+
+
+def test_greedy_spec_bitwise_equals_baseline_all_layouts(params):
+    """The acceptance-criterion gate: greedy speculative streams are bitwise
+    the non-speculative engine's across dense, paged, and chunked-prefill
+    configs (draft weights are irrelevant to the greedy stream)."""
+    work = mixed_workload()
+    base, _ = run_streams(mk_engine(params), work)
+    other_draft = api.init_params(DRAFT_CFG, jax.random.key(7))
+    dense, _ = run_streams(mk_spec(params, draft_params=other_draft), work)
+    paged, pe = run_streams(
+        mk_spec(params, kv_layout="paged", page_size=4), work)
+    chunked, _ = run_streams(
+        mk_spec(params, kv_layout="paged", page_size=4, prefill_chunk=4),
+        work)
+    assert dense == base
+    assert paged == base
+    assert chunked == base
+    # drained paged spec engine returned every page (tail rollback included)
+    assert pe.allocator.available == pe.num_pages
+
+
+def test_self_draft_accepts_everything(params):
+    """draft == target => all-accept: acceptance_rate is exactly 1.0 on an
+    unclamped budget and the stream equals the baseline engine's."""
+    work = [(p, TOKENS_EXACT) for p, _ in mixed_workload(4, seed=5)]
+    base, _ = run_streams(mk_engine(params), work)
+    streams, engine = run_streams(mk_spec(params), work)
+    st = engine.stats()
+    assert streams == base
+    assert st["acceptance_rate"] == 1.0
+    assert st["draft_accepted"] == st["draft_proposed"]
+    # proposals count per slot: k per active slot per step
+    assert st["draft_proposed"] >= st["spec_steps"] * K
+    assert st["draft_proposed"] % K == 0
+    # fully-accepted steps emit k+1 tokens: far fewer steps than tokens
+    assert st["spec_steps"] < st["tokens_generated"]
+
+
+def test_sampled_spec_replay_and_seed_sensitivity(params):
+    sp = SamplingParams(temperature=1.0, top_k=8, top_p=0.9, seed=42)
+    work = [(p, TOKENS) for p, _ in mixed_workload(4, seed=11)]
+    other_draft = api.init_params(DRAFT_CFG, jax.random.key(9))
+    a, _ = run_streams(mk_spec(params, draft_params=other_draft), work, sp)
+    b, _ = run_streams(mk_spec(params, draft_params=other_draft), work, sp)
+    assert a == b
+    c, _ = run_streams(
+        mk_spec(params, draft_params=other_draft), work,
+        SamplingParams(temperature=1.0, top_k=8, top_p=0.9, seed=43))
+    assert a != c
+
+
+def test_spec_paged_eviction_by_recompute_replays(params):
+    """A speculative sampled stream recomputed after eviction reproduces
+    exactly: the PRNG schedule is position-pure and the draft cache is
+    rebuilt at re-admission."""
+    sp = SamplingParams(temperature=1.0, seed=7)
+    rng = np.random.default_rng(0)
+    work = [(rng.integers(0, CFG.vocab, size=BUCKET).tolist(), TOKENS)
+            for _ in range(6)]
+
+    def paged_spec(num_pages):
+        return Engine(CFG, EngineConfig(slots=4, prompt_buckets=(BUCKET,),
+                                        max_seq=MAX_SEQ, kv_layout="paged",
+                                        page_size=4, num_pages=num_pages,
+                                        spec_decode=SpecConfig(
+                                            draft_config=DRAFT_CFG,
+                                            lookahead_k=K)),
+                      params=params, plan_cache=PlanCache(),
+                      draft_params=params)
+
+    tight, te = run_streams(paged_spec(10), work, sp)
+    roomy, _ = run_streams(paged_spec(0), work, sp)
+    assert te.stats()["evictions"] > 0
+    assert tight == roomy
+
+
+def test_spec_greedy_eos_matches_baseline(params):
+    """EOS is handled inline in speculative mode (the host sees every token
+    anyway); truncated streams match the baseline engine's truncation."""
+    work = [(p, TOKENS) for p, _ in mixed_workload(4, seed=13)]
+    base, _ = run_streams(mk_engine(params), work)
+    eos = base[0][0]
+    engine = mk_spec(params)
+    reqs = [engine.make_request(p, n, eos_id=eos) for p, n in work]
+    engine.run(reqs)
+    streams = [engine.finalize_request(r) for r in reqs]
+    for b, s in zip(base, streams):
+        assert s == (b[:b.index(eos) + 1] if eos in b else b)
+    assert engine.stats()["eos_finished"] >= 1
+
+
+# ------------------------------------------------------ UPIR verify plan
+
+
+def test_spec_verify_program_fingerprint_and_plan():
+    shape = ShapeCfg("engine_b2_spec3", "decode", MAX_SEQ, 2)
+    prog = build_program(CFG, shape, spec_decode=(DRAFT_CFG.name, K))
+    text = to_mlir(prog)
+    assert f"spec_verify({K})" in text
+    assert f"draft({DRAFT_CFG.name})" in text
+    assert "upir.kernel @spec_verify" in text
+    fp_plain = program_fingerprint(build_program(CFG, shape))
+    fp_spec = program_fingerprint(prog)
+    fp_k4 = program_fingerprint(
+        build_program(CFG, shape, spec_decode=(DRAFT_CFG.name, K + 1)))
+    fp_other = program_fingerprint(
+        build_program(CFG, shape, spec_decode=("other-draft", K)))
+    assert len({fp_plain, fp_spec, fp_k4, fp_other}) == 4
+    plan = plan_from_program(run_pipeline(prog))
+    assert plan.spec_decode == (DRAFT_CFG.name, K)
+    assert plan_from_program(
+        run_pipeline(build_program(CFG, shape))).spec_decode is None
+
+
+def test_spec_verify_plan_widens_token_symbol():
+    shape = ShapeCfg("engine_b2_spec3", "decode", MAX_SEQ, 2)
+    prog = build_program(CFG, shape, spec_decode=(DRAFT_CFG.name, K))
+    symtab = prog.symbol_table()
+    assert symtab["in/tokens"][0] == (2, K + 1)
+    assert symtab["in/draft_tokens"][0] == (2, K)
+    assert symtab["out/logits"][0] == (2, K + 1, CFG.vocab)
+
+
+# ----------------------------------------------------------- validation
+
+
+def test_spec_config_and_engine_validation(params):
+    with pytest.raises(ValueError, match="lookahead_k"):
+        SpecConfig(draft_config=DRAFT_CFG, lookahead_k=0)
+    wcfg = smoke_config("whisper-large-v3")
+    with pytest.raises(CapabilityError, match="spec_verify"):
+        Engine(wcfg, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                  max_seq=MAX_SEQ,
+                                  spec_decode=SpecConfig(
+                                      draft_config=DRAFT_CFG)),
+               plan_cache=PlanCache())
+    with pytest.raises(CapabilityError, match="decoder-only"):
+        mk_spec(params, draft_cfg=wcfg)
+    bad_vocab = dataclasses.replace(DRAFT_CFG, vocab=CFG.vocab * 2)
+    with pytest.raises(ValueError, match="vocab"):
+        mk_spec(params, draft_cfg=bad_vocab)
+    with pytest.raises(CapabilityError, match="spec_verify"):
+        api.verify_chunk(smoke_config("xlstm-350m"), None, None, {})
+
+
+# ------------------------------------------------- batched verify numerics
+
+
+def test_verify_chunk_matches_stepwise_decode(params):
+    """The batched verify logits agree with running the same tokens through
+    k+1 single-token decode steps (the numerics speculative greedy equality
+    rides on), and the chunk K/V lands where decode would put it."""
+    B, C = 2, K + 1
+    rng = np.random.default_rng(2)
+    prompts = jnp.asarray(rng.integers(0, CFG.vocab, size=(B, BUCKET)),
+                          jnp.int32)
+    s_max = BUCKET + C + 2
+    _, cache_a = api.prefill(CFG, params, {"tokens": prompts}, s_max=s_max)
+    _, cache_b = api.prefill(CFG, params, {"tokens": prompts}, s_max=s_max)
+    chunk = jnp.asarray(rng.integers(0, CFG.vocab, size=(B, C)), jnp.int32)
+    pos = jnp.full((B,), BUCKET, jnp.int32)
+
+    vlogits, vcache = api.verify_chunk(CFG, params, cache_a,
+                                       {"tokens": chunk, "pos": pos})
+    step_logits = []
+    for j in range(C):
+        lg, cache_b = api.decode_step(
+            CFG, params, cache_b,
+            {"tokens": chunk[:, j:j + 1], "pos": pos + j})
+        step_logits.append(np.asarray(lg[:, -1], np.float32))
+    np.testing.assert_allclose(np.asarray(vlogits, np.float32),
+                               np.stack(step_logits, axis=1),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(vcache["k"], np.float32),
+                               np.asarray(cache_b["k"], np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------- chunk-sized context gather fix
+
+
+def test_prefill_chunk_sliced_gather_is_exact(params):
+    """The bucketed context gather drops only masked entries: chunk logits
+    and K/V match the full-horizon gather (to reduction-order rounding; the
+    bitwise stream gates live in the engine-level equality tests)."""
+    ps, nchunks = 4, 2
+    n_pages = BUCKET // ps
+    pool = api.init_paged_cache(CFG, 8, ps)
+    rng = np.random.default_rng(4)
+    page_row_full = np.zeros((8,), np.int32)
+    page_row_full[:n_pages] = np.arange(1, n_pages + 1)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab, size=(1, BUCKET)),
+                       jnp.int32)
+    from repro.models.layers import cache_write_pages
+    for c in range(nchunks):
+        off = c * ps
+        batch = {"tokens": toks[:, off:off + ps]}
+        ctx_pages = off // ps
+        lg_full, kv_full = api.prefill_chunk(
+            CFG, params, pool, jnp.asarray(page_row_full), batch, off)
+        lg_slim, kv_slim = api.prefill_chunk(
+            CFG, params, pool, jnp.asarray(page_row_full[:ctx_pages]),
+            batch, off)
+        np.testing.assert_allclose(np.asarray(lg_slim), np.asarray(lg_full),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(kv_slim[0]),
+                                   np.asarray(kv_full[0]),
+                                   rtol=2e-5, atol=2e-5)
+        pool = {"k_pages": cache_write_pages(
+                    pool["k_pages"], kv_full[0],
+                    jnp.asarray([c + 1], jnp.int32)),
+                "v_pages": cache_write_pages(
+                    pool["v_pages"], kv_full[1],
+                    jnp.asarray([c + 1], jnp.int32))}
+
+
+def test_engine_gather_bucket_widths(params):
+    engine = mk_engine(params, kv_layout="paged", page_size=4,
+                       prefill_chunk=4)
+    assert engine._gather_bucket(0) == 0
+    assert engine._gather_bucket(1) == 1
+    assert engine._gather_bucket(3) == 4
+    assert engine._gather_bucket(engine.pages_per_slot + 5) \
+        == engine.pages_per_slot
+
+
+# --------------------------------------------------------------- stats
+
+
+def test_spec_stats_fields(params):
+    streams, engine = run_streams(mk_spec(params),
+                                  [(p, TOKENS) for p, _ in mixed_workload(3)])
+    st = engine.stats()
+    assert st["spec_steps"] > 0
+    assert st["lookahead_k"] == K
+    assert st["draft_arch"] == DRAFT_CFG.name
+    assert st["draft_proposed"] >= st["spec_steps"] * K
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert st["decode_steps"] == st["spec_steps"]
+    # a non-speculative engine reports none of the spec fields
+    assert "spec_steps" not in mk_engine(params).stats()
