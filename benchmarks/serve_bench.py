@@ -59,6 +59,22 @@ speculative streams must equal the baseline engine's bitwise (CI gate, same
 as sections 2/3), and fixed-seed sampled speculative streams must replay
 identically. ``--json4`` writes the metrics — CI emits ``BENCH_4.json``.
 
+Section 5 — prefix caching (``EngineConfig.prefix_cache``) on a
+shared-system-prompt workload: every request is one long shared system
+prefix plus a short unique user suffix, served at equal KV memory by
+
+  * paged          — prefix caching off (every prompt prefills in full);
+  * prefix         — automatic prefix caching: cached prefix pages are
+    ref-counted into each new request's page table, only the suffix
+    prefills;
+  * prefix_chunked — the same with chunked prefill (hit chunks are skipped
+    outright).
+
+Reports prefill-TTFT (p50/p99), pool concurrency, and the prefix hit/CoW
+counters; greedy streams must be bitwise identical with sharing on and off
+(CI gate — prefix hits must not perturb streams). ``--json5`` writes the
+metrics — CI emits ``BENCH_5.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -558,6 +574,138 @@ def bench_spec(json_path=None):
     return payload if json_path else ratio
 
 
+# ------------------------------------------------- prefix caching (CoW)
+
+PFX_ARCH = "tinyllama-1.1b"
+PFX_PAGE = 64
+PFX_SYSTEM = 448             # shared system prompt (7 full pages)
+PFX_BUCKET = 512             # system + unique user suffix, one bucket
+PFX_TOKENS = 8
+PFX_REQUESTS = 12
+PFX_SLOTS = 4
+PFX_CHUNK = 128
+# equal KV memory, deliberately below worst-case demand: without sharing
+# only ~2 prompts' pages fit at once; with sharing the system prefix is
+# charged once and all 4 slots fill — the pool-concurrency win
+PFX_NUM_PAGES = 22
+
+
+def bench_prefix(json_path=None):
+    """Prefix caching vs plain paged serving on a shared-system-prompt
+    workload at equal KV memory (section 5).
+
+    Greedy streams must be bitwise identical with sharing on and off (CI
+    gate, same as sections 2-4); the tracked wins are prefill TTFT (hits
+    skip the shared prefix's forward pass) and pool concurrency (the prefix
+    is charged to the pool once, not per slot).
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import Engine, EngineConfig
+
+    cfg = smoke_config(PFX_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(31)
+    system = rng.integers(0, cfg.vocab, size=PFX_SYSTEM).tolist()
+    workload = [(system + rng.integers(
+        0, cfg.vocab, size=int(rng.integers(24, PFX_BUCKET - PFX_SYSTEM + 1))
+    ).tolist(), PFX_TOKENS) for _ in range(PFX_REQUESTS)]
+
+    common = dict(slots=PFX_SLOTS, prompt_buckets=(PFX_BUCKET,),
+                  max_seq=PFX_BUCKET + PFX_TOKENS, kv_layout="paged",
+                  page_size=PFX_PAGE, num_pages=PFX_NUM_PAGES,
+                  max_queue=2 * PFX_REQUESTS)
+    engines = {
+        "paged": EngineConfig(**common),
+        "prefix": EngineConfig(prefix_cache=True, **common),
+        "prefix_chunked": EngineConfig(prefix_cache=True,
+                                       prefill_chunk=PFX_CHUNK, **common),
+    }
+    results = {}
+    streams = {}
+    for name, ecfg in engines.items():
+        engine = Engine(cfg, ecfg, params=params)
+        # warm: two passes over the workload. The first compiles the cold
+        # prefill paths and populates the index; the second runs against
+        # the *converged* index state, compiling every suffix-prefill
+        # length and the full-prompt-hit sampler the steady state uses.
+        # The measured run is then the steady state of a long-lived
+        # system-prompt deployment, with jit compile excluded.
+        for _ in range(2):
+            engine.run([engine.make_request(p, n) for p, n in workload])
+        engine.reset_stats()
+        reqs = [engine.make_request(p, n) for p, n in workload]
+        engine.run(reqs, sync_per_step=True)
+        st = engine.stats()
+        done = [r for r in reqs if r.state == "done"]
+        ttft = np.asarray([r.t_first - r.t_submit for r in done])
+        streams[name] = [engine.finalize_request(r) for r in reqs]
+        results[name] = {
+            "completed": len(done),
+            "tokens_per_s": st["tokens_per_s"],
+            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+            "peak_concurrent": st["peak_concurrent"],
+            "peak_pages": st["peak_pages"],
+            "evictions": st["evictions"],
+            "prefix_hits": st.get("prefix_hits", 0),
+            "prefix_full_hits": st.get("prefix_full_hits", 0),
+            "prefix_hit_tokens": st.get("prefix_hit_tokens", 0),
+            "cow_copies": st.get("cow_copies", 0),
+            "prefix_cached_pages": st.get("prefix_cached_pages", 0),
+        }
+    identical = (streams["paged"] == streams["prefix"]
+                 == streams["prefix_chunked"])
+
+    print("# serve_bench_prefix: engine,requests,slots,num_pages,completed,"
+          "tok_s,ttft_p50_ms,ttft_p99_ms,peak_concurrent,evictions,"
+          "prefix_hits,hit_tokens,cow_copies")
+    for name, r in results.items():
+        print(f"{name},{PFX_REQUESTS},{PFX_SLOTS},{PFX_NUM_PAGES},"
+              f"{r['completed']},{r['tokens_per_s']:.1f},"
+              f"{r['ttft_p50_ms']:.1f},{r['ttft_p99_ms']:.1f},"
+              f"{r['peak_concurrent']},{r['evictions']},{r['prefix_hits']},"
+              f"{r['prefix_hit_tokens']},{r['cow_copies']}")
+    p50 = results["paged"]["ttft_p50_ms"] \
+        / max(results["prefix"]["ttft_p50_ms"], 1e-9)
+    p99 = results["paged"]["ttft_p99_ms"] \
+        / max(results["prefix"]["ttft_p99_ms"], 1e-9)
+    conc = results["prefix"]["peak_concurrent"] \
+        / max(results["paged"]["peak_concurrent"], 1)
+    print(f"# prefix caching: {p50:.2f}x p50 / {p99:.2f}x p99 prefill-TTFT "
+          f"vs no sharing, {conc:.2f}x pool concurrency at equal KV memory "
+          f"({results['prefix']['prefix_hit_tokens']} prefill tokens "
+          f"skipped); streams identical: {identical}")
+
+    if json_path:
+        payload = {
+            "bench": "prefix_caching_shared_system_prompt",
+            "arch": cfg.name,
+            "requests": PFX_REQUESTS,
+            "system_prompt_tokens": PFX_SYSTEM,
+            "bucket": PFX_BUCKET,
+            "page_size": PFX_PAGE,
+            "num_pages": PFX_NUM_PAGES,
+            "engines": results,
+            "prefix_ttft_p50_improvement": p50,
+            "prefix_ttft_p99_improvement": p99,
+            "prefix_vs_paged_concurrency": conc,
+            "streams_identical": identical,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    if not identical:
+        # CI gate: a prefix hit must be bitwise-invisible — the mapped
+        # cached pages and the skipped prefill may not move any stream
+        raise SystemExit("serve_bench_prefix: greedy token streams diverged "
+                         "between sharing-off/on/chunked engines")
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -567,11 +715,14 @@ def main() -> None:
                     help="write unified-decode-API metrics to this JSON file")
     ap.add_argument("--json4", default=None,
                     help="write speculative-decode metrics to this JSON file")
+    ap.add_argument("--json5", default=None,
+                    help="write prefix-caching metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
     bench_unified(json_path=args.json3)
     bench_spec(json_path=args.json4)
+    bench_prefix(json_path=args.json5)
 
 
 if __name__ == "__main__":

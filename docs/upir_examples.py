@@ -1,0 +1,161 @@
+"""Generators for the example programs embedded in ``docs/UPIR_TEXT.md``.
+
+Every fenced snippet in the spec sits between markers::
+
+    <!-- BEGIN upir-example:NAME -->
+    ```mlir
+    ...rendered program text...
+    ```
+    <!-- END upir-example:NAME -->
+
+and is produced by a real ``core.plans.build_program`` call below, rendered
+through the same ``core.printer.to_mlir`` the PlanCache fingerprints. The
+committed snippets are therefore *testable documentation*:
+``tests/test_docs.py`` re-renders each example and asserts the spec matches
+byte-for-byte, so the document cannot rot silently when the printer or the
+planner changes.
+
+Regenerate the committed snippets in place::
+
+    PYTHONPATH=src python docs/upir_examples.py --write
+
+Check for drift (exactly what the test does)::
+
+    PYTHONPATH=src python docs/upir_examples.py --check
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Callable, Dict
+
+UPIR_TEXT_MD = Path(__file__).resolve().parent / "UPIR_TEXT.md"
+
+_BLOCK_RE = re.compile(
+    r"<!-- BEGIN upir-example:([a-z0-9-]+) -->\n"
+    r"```mlir\n(.*?)\n```\n"
+    r"<!-- END upir-example:\1 -->",
+    re.DOTALL)
+
+
+# ------------------------------------------------------------- the examples
+# Smoke-scale configs keep the snippets readable; the *structure* (ops,
+# attribute order, mm/caps rendering) is identical at production scale.
+
+
+def _cfg():
+    from repro.configs import smoke_config
+    return smoke_config("tinyllama-1.1b")
+
+
+def _shape(name: str, kind: str, seq: int, batch: int):
+    from repro.configs.base import ShapeCfg
+    return ShapeCfg(name, kind, seq, batch)
+
+
+def dense_decode() -> str:
+    """The serving engine's plain decode program (dense KV layout)."""
+    from repro.core.plans import build_program
+    from repro.core.printer import to_mlir
+    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2)))
+
+
+def paged_prefix_decode() -> str:
+    """Paged decode with prefix sharing: paged_kv_alloc data attributes,
+    alloc/dealloc/share/cow MemOps, mm(...) geometry + shared_prefix."""
+    from repro.core.plans import build_program
+    from repro.core.printer import to_mlir
+    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                                 page_geometry=(15, 4, 4),
+                                 prefix_sharing=True))
+
+
+def spec_verify() -> str:
+    """The speculative verify program: kernel spec_verify, k+1-wide token
+    input, caps(spec_verify(k) draft(name)) on the decode cache."""
+    from repro.core.plans import build_program
+    from repro.core.printer import to_mlir
+    return to_mlir(build_program(
+        _cfg(), _shape("engine_b2_spec3", "decode", 14, 2),
+        spec_decode=("tinyllama-1.1b-draft1", 3)))
+
+
+def train_step() -> str:
+    """A training program: taskloop microbatching, the grads allreduce,
+    state/grads data attributes."""
+    from repro.core.plans import build_program
+    from repro.core.printer import to_mlir
+    return to_mlir(build_program(_cfg(), _shape("train_smoke", "train", 16, 4)))
+
+
+EXAMPLES: Dict[str, Callable[[], str]] = {
+    "dense-decode": dense_decode,
+    "paged-prefix-decode": paged_prefix_decode,
+    "spec-verify": spec_verify,
+    "train-step": train_step,
+}
+
+
+# ---------------------------------------------------------------- machinery
+
+
+def render_all() -> Dict[str, str]:
+    return {name: fn() for name, fn in EXAMPLES.items()}
+
+
+def committed_blocks(md_text: str) -> Dict[str, str]:
+    """Example-name -> snippet text, parsed from the spec's fenced blocks."""
+    return {m.group(1): m.group(2) for m in _BLOCK_RE.finditer(md_text)}
+
+
+def replace_blocks(md_text: str, rendered: Dict[str, str]) -> str:
+    def sub(m: "re.Match[str]") -> str:
+        name = m.group(1)
+        body = rendered.get(name, m.group(2))
+        return (f"<!-- BEGIN upir-example:{name} -->\n"
+                f"```mlir\n{body}\n```\n"
+                f"<!-- END upir-example:{name} -->")
+    return _BLOCK_RE.sub(sub, md_text)
+
+
+def drift(md_text: str) -> Dict[str, str]:
+    """Example-name -> reason, for every mismatch between the committed spec
+    and a fresh render (missing blocks and orphaned blocks included)."""
+    rendered = render_all()
+    committed = committed_blocks(md_text)
+    out: Dict[str, str] = {}
+    for name, text in rendered.items():
+        if name not in committed:
+            out[name] = "missing from UPIR_TEXT.md"
+        elif committed[name] != text:
+            out[name] = "committed snippet differs from fresh render"
+    for name in committed:
+        if name not in rendered:
+            out[name] = "block has no generator in docs/upir_examples.py"
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--write", action="store_true",
+                      help="rewrite the fenced blocks in UPIR_TEXT.md")
+    mode.add_argument("--check", action="store_true",
+                      help="exit non-zero if any committed snippet drifted")
+    args = ap.parse_args()
+    md = UPIR_TEXT_MD.read_text()
+    if args.write:
+        UPIR_TEXT_MD.write_text(replace_blocks(md, render_all()))
+        print(f"rewrote {len(EXAMPLES)} example blocks in {UPIR_TEXT_MD}")
+        return
+    problems = drift(md)
+    if problems:
+        for name, why in sorted(problems.items()):
+            print(f"DRIFT {name}: {why}")
+        raise SystemExit(1)
+    print(f"{len(EXAMPLES)} example blocks match their generators")
+
+
+if __name__ == "__main__":
+    main()

@@ -85,6 +85,25 @@ class PlanBuilder:
                                    extensions=ir.ext(**extensions)))
         return self
 
+    def share(self, symbol: str, allocator: str = "default_mem_alloc",
+              **extensions: Any) -> "PlanBuilder":
+        """Ref-counted aliasing of already-allocated storage (prefix-shared
+        KV pages): the allocator hands out an existing buffer again instead
+        of fresh storage."""
+        self._mems.append(ir.MemOp(kind="share", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
+        return self
+
+    def cow(self, symbol: str, allocator: str = "default_mem_alloc",
+            **extensions: Any) -> "PlanBuilder":
+        """Copy-on-write duplication: a write into shared storage first
+        materializes a private copy, leaving the shared original intact."""
+        self._mems.append(ir.MemOp(kind="cow", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
+        return self
+
     # ---------------------------------------------------------------------- loops
 
     def loop(self, induction: str, upper: Any, *, lower: Any = 0, step: Any = 1,

@@ -117,9 +117,17 @@ class MoveOp:
 
 @dataclass(frozen=True)
 class MemOp:
-    """upir.memory_alloc / upir.memory_dealloc — explicit memory management (§4.2)."""
+    """upir.memory_{alloc,dealloc,share,cow} — explicit memory management (§4.2).
 
-    kind: str                 # "alloc" | "dealloc"
+    ``alloc``/``dealloc`` bracket a buffer's lifetime; ``share`` marks a
+    ref-counted aliasing of already-allocated storage (prefix-shared KV
+    pages), and ``cow`` marks the copy-on-write duplication that resolves a
+    write into shared storage. All four render into the canonical program
+    text, so an engine that manages memory differently (e.g. prefix sharing
+    on vs off) fingerprints — and plan-caches — differently.
+    """
+
+    kind: str                 # "alloc" | "dealloc" | "share" | "cow"
     symbol: str
     allocator: str = "default_mem_alloc"
     extensions: Extensions = ()

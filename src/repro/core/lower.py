@@ -80,6 +80,10 @@ class LoweredPlan:
     # paged-KV geometry (num_pages, page_size, pages_per_slot) when the
     # program manages the decode cache through paged_kv_alloc, else None
     page_geometry: Optional[Tuple[int, int, int]] = None
+    # True when the paged cache is prefix-shared: the program carries
+    # share/cow MemOps and the mm(shared_prefix) annotation, and the engine
+    # runs ref-counted page aliasing with copy-on-write duplication
+    prefix_sharing: bool = False
     # ModelFamily capability flags carried by the decode cache's data attr
     # (models.api.FamilySpec -> core.plans -> printer caps(...) rendering)
     capabilities: Tuple[str, ...] = ()
@@ -173,11 +177,14 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
             offload.append(attr.symbol)
 
     page_geometry = None
+    prefix_sharing = False
     for attr in ir.find_all(prog, ir.DataAttr):
         if attr.allocator == "paged_kv_alloc":
             page_geometry = (ir.ext_get(attr.extensions, "num_pages", 0),
                              ir.ext_get(attr.extensions, "page_size", 0),
                              ir.ext_get(attr.extensions, "pages_per_slot", 0))
+            prefix_sharing = bool(
+                ir.ext_get(attr.extensions, "shared_prefix", False))
             break
 
     from .printer import CAP_EXT_KEYS
@@ -231,6 +238,7 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         remat=ir.ext_get(prog.extensions, "remat", "none"),
         grad_reduce=grad_reduce, zero=zero, compression=compression,
         collectives=syncs, page_geometry=page_geometry,
+        prefix_sharing=prefix_sharing,
         capabilities=capabilities, spec_decode=spec_decode)
 
 

@@ -173,6 +173,7 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   overlap: bool = True, extra_ext: Optional[Dict] = None,
                   microbatches: Optional[int] = None,
                   page_geometry: Optional[Tuple[int, int, int]] = None,
+                  prefix_sharing: bool = False,
                   spec_decode: Optional[Tuple[str, int]] = None
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
@@ -184,6 +185,14 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     ``alloc_pages``/``free_pages`` MemOps make the allocator lifecycle part of
     the IR — all of which the printer fingerprints, so page geometry
     participates in the PlanCache key exactly like shapes do.
+
+    ``prefix_sharing=True`` (paged decode only) additionally marks the pool
+    as prefix-shared: the cache data attribute gains the
+    ``mm(shared_prefix)`` annotation and the program carries ``share`` /
+    ``cow`` MemOps — ref-counted page aliasing with copy-on-write
+    duplication is part of the memory-management contract, so a
+    sharing-enabled engine fingerprints (and plan-caches) apart from a
+    sharing-disabled one of the same geometry.
 
     ``spec_decode=(draft_name, lookahead_k)`` turns a decode program into the
     **speculative verify** step: the token input widens to the k+1-position
@@ -267,9 +276,12 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
             caps.update(spec_verify=int(lookahead_k), draft=str(draft_name))
         if shape.kind == "decode" and paged:
             npages, ps, pps = page_geometry
+            mm: Dict[str, Any] = dict(page_size=ps, num_pages=npages,
+                                      pages_per_slot=pps)
+            if prefix_sharing:
+                mm["shared_prefix"] = True
             b.data("cache", mapping="tofrom", access="read-write",
-                   allocator="paged_kv_alloc", page_size=ps,
-                   num_pages=npages, pages_per_slot=pps, **caps)
+                   allocator="paged_kv_alloc", **mm, **caps)
             # the page table IS the explicit data-movement plan: logical
             # position -> physical page, shipped to the device every step
             b.data("cache/page_table", mapping="to", access="read-only",
@@ -281,6 +293,17 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
             # sequences release their pages on completion/eviction
             b.dealloc("cache/k_pages", allocator="paged_kv_alloc")
             b.dealloc("cache/v_pages", allocator="paged_kv_alloc")
+            if prefix_sharing:
+                # prefix caching: admission may alias (ref-count) another
+                # sequence's prompt-prefix pages instead of allocating +
+                # re-prefilling, and a write into a shared page duplicates
+                # it first — both are explicit memory ops in the IR
+                b.share("cache/k_pages", allocator="paged_kv_alloc",
+                        shared_prefix=True)
+                b.share("cache/v_pages", allocator="paged_kv_alloc",
+                        shared_prefix=True)
+                b.cow("cache/k_pages", allocator="paged_kv_alloc")
+                b.cow("cache/v_pages", allocator="paged_kv_alloc")
         elif shape.kind == "decode":
             b.data("cache", mapping="tofrom", access="read-write", **caps)
             if caps.get("needs_encoder_memory"):

@@ -197,7 +197,11 @@ def _parallel(p) -> str:
 # Memory-management extension keys rendered into the canonical text (and thus
 # the program fingerprint): paged-KV geometry must distinguish plans the same
 # way shapes do, so a PlanCache warmed at one page size never serves another.
-MM_EXT_KEYS = ("page_size", "num_pages", "pages_per_slot", "page_map")
+# ``shared_prefix`` marks prefix-shared (ref-counted, copy-on-write) KV pages:
+# an engine with prefix caching on manages memory differently from one with it
+# off, so the two must never share a fingerprint either.
+MM_EXT_KEYS = ("page_size", "num_pages", "pages_per_slot", "page_map",
+               "shared_prefix")
 
 
 def _mm_fields(extensions) -> str:

@@ -51,6 +51,16 @@ def main():
                          "self-speculation with the target's weights)")
     ap.add_argument("--lookahead", type=int, default=4,
                     help="draft tokens proposed per speculative step")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve with the paged KV layout (page pool + page "
+                         "tables; overcommit admission)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per physical KV page (paged layout)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="automatic prefix caching (requires --paged): "
+                         "identical prompt prefixes share ref-counted KV "
+                         "pages copy-on-write and skip prefill compute; "
+                         "token streams are unchanged bitwise")
     ap.add_argument("--sequential", action="store_true",
                     help="also time the pre-engine one-at-a-time path")
     args = ap.parse_args()
@@ -93,9 +103,16 @@ def main():
                 else config(args.draft_config)
         spec_decode = SpecConfig(draft_config=draft_cfg,
                                  lookahead_k=args.lookahead)
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (prefix sharing is page "
+                 "aliasing)")
     engine = Engine(cfg, EngineConfig(slots=args.slots,
                                       prompt_buckets=(bucket,),
                                       max_seq=max_seq,
+                                      kv_layout="paged" if args.paged
+                                      else "dense",
+                                      page_size=args.page_size,
+                                      prefix_cache=args.prefix_cache,
                                       spec_decode=spec_decode),
                     params=params, draft_params=draft_params)
 
@@ -138,6 +155,13 @@ def main():
               f"acceptance_rate={st['acceptance_rate']:.2f} "
               f"tokens_per_step="
               f"{st['tokens_generated'] / max(st['spec_steps'], 1):.2f}")
+    if args.prefix_cache:
+        print(f"  prefix_hits={st['prefix_hits']} "
+              f"(full={st['prefix_full_hits']}) "
+              f"hit_tokens={st['prefix_hit_tokens']} "
+              f"cow_copies={st['cow_copies']} "
+              f"cached_pages={st['prefix_cached_pages']} "
+              f"shared_pages={st['shared_pages']}")
     print(f"  occupancy={st['batch_occupancy']:.2f} "
           f"throughput={st['tokens_per_s']:.1f} tok/s "
           f"plan_cache_hit_rate={st['plan_cache']['hit_rate']:.2f}")

@@ -382,6 +382,18 @@ def cache_write_pages(pool, kv, page_ids):
     return pool.at[:, page_ids].set(kvr.astype(pool.dtype))
 
 
+def cache_copy_pages(pool, src_ids, dst_ids):
+    """Duplicate physical pages inside the pool — the copy-on-write op.
+
+    pool: [L,NP,PS,KV,hd]; src_ids/dst_ids: [n] int32. Every row of page
+    ``src_ids[j]`` (all layers) is copied into page ``dst_ids[j]``. The
+    engine calls this when a slot must write into a prefix-shared page
+    (refcount > 1): the shared original stays byte-identical for its other
+    readers, and the writer proceeds into its private copy.
+    """
+    return pool.at[:, dst_ids].set(pool[:, src_ids])
+
+
 def attention_prefill_chunk(q, k_ctx, v_ctx, k_new, v_new, offset, *,
                             window: int = 0):
     """Chunked-prefill attention: a chunk of queries at absolute positions

@@ -43,6 +43,23 @@ drops tail time-to-first-token at depth. Each chunk gathers only the pages
 already holding context (bucketed by powers of two), not the full per-slot
 horizon.
 
+``EngineConfig.prefix_cache`` (paged mode only) turns on **automatic prefix
+caching**: at admission the padded prompt's page-aligned prefix chunks are
+hashed into a chain (token ids + page geometry + plan fingerprint —
+``PrefixIndex``), looked up in a ref-counted page index, and hits are mapped
+straight into the new request's page table (``PagedKVAllocator.share``)
+instead of being re-prefilled — identical system prompts across slots share
+physical KV pages and skip their prefill compute; only the unseen suffix
+runs a forward pass. Shared pages are **copy-on-write**: a slot that must
+write into a shared page (decode or speculative verify reaching a
+partially-filled tail page) first duplicates it (``cache_copy_pages``), so
+the cached original stays byte-identical for its other readers. Sharing is
+bitwise-invisible to token streams — greedy streams with the cache on equal
+the sharing-disabled paged engine exactly. The ``share``/``cow`` memory ops
+and the ``mm(shared_prefix)`` annotation are part of the UPIR program, so a
+sharing-enabled engine fingerprints (and plan-caches) apart from a plain
+paged one.
+
 ``EngineConfig.spec_decode`` switches the decode loop into **speculative
 mode** (``runtime.speculative``): a draft family proposes ``lookahead_k``
 tokens per slot per step, the target verifies all k+1 positions in one
@@ -64,8 +81,9 @@ entries that ``run_pipeline`` appends when the plan is first compiled.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -76,7 +94,7 @@ from ..configs.base import ArchConfig, ShapeCfg
 from ..core.lower import PlanCache, default_plan_cache
 from ..models import api
 from ..models.api import KernelSpec
-from ..models.layers import cache_write_pages
+from ..models.layers import cache_copy_pages, cache_write_pages
 from .sampling import (GREEDY, SamplingParams, decode_select, request_key,
                        sample_tokens)
 from .speculative import SpecConfig, SpeculativeDecoder
@@ -86,7 +104,34 @@ from .speculative import SpecConfig, SpeculativeDecoder
 
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``tokens_out`` is filled by the engine."""
+    """One generation request; build via :meth:`Engine.make_request` (which
+    validates) rather than directly. ``tokens_out`` is filled by the engine.
+
+    User-facing fields:
+
+    * ``rid`` — engine-assigned request id, unique per engine. Folds into the
+      request's PRNG key, so two engines fed the same workload in the same
+      order produce identical sampled streams.
+    * ``prompt`` — token ids; padded with zeros up to the matching
+      ``EngineConfig.prompt_buckets`` entry before prefill (streams are a
+      function of the *padded* prompt — the prefix cache hashes it likewise).
+    * ``max_new_tokens`` — generation budget; the request finishes early only
+      on ``eos_id``.
+    * ``sampling`` — per-request :class:`~repro.runtime.sampling.
+      SamplingParams`; ``None`` means greedy (the bitwise pre-sampling argmax
+      path).
+    * ``eos_id`` — finish when this token is emitted, tracked by the
+      device-side finished mask (no hot-loop sync); ``None`` runs to budget.
+    * ``encoder_input`` — ``[enc_seq, d_model]`` frames, required exactly for
+      ``needs_encoder_memory`` families (whisper), rejected elsewhere.
+
+    Engine-filled observability fields: ``state`` (``new | queued |
+    prefilling | active | done | rejected``), ``reason`` (rejection text or
+    ``"eos"``), ``bucket`` (padded prompt length), ``slot``, ``tokens_out``
+    (via :meth:`Engine.finalize_request`) and the ``t_submit`` / ``t_first``
+    / ``t_done`` timestamps (TTFT = ``t_first - t_submit``; wall-clock exact
+    only under ``run(sync_per_step=True)``).
+    """
 
     rid: int
     prompt: Sequence[int]
@@ -110,10 +155,66 @@ class Request:
     # PRNG key snapshot (uint32[2]): taken at make_request and never reset, so
     # eviction-by-recompute replays a sampled stream identically
     _key: Any = None
+    # prefix-cache bookkeeping (paged + prefix_cache engines): the prompt's
+    # page chain keys and how many leading pages were shared at admission —
+    # kept on the request so chunked prefill can register the fresh pages
+    # when its last chunk lands
+    _prefix_keys: Any = None
+    _prefix_hit: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Engine construction knobs, validated once in :class:`Engine`.
+
+    Fields marked *[plan key]* change the UPIR decode program and therefore
+    the canonical fingerprint — two engines differing in one of them never
+    share a ``PlanCache`` entry; the remaining fields either enter the
+    engine's derived jit keys directly (``slots``, ``max_seq``,
+    ``kv_layout``, kernel knobs, speculative slack) or are pure host-side
+    scheduling policy with no compiled artifact at all.
+
+    * ``slots`` *[plan key]* — fixed decode batch width; recycling a finished
+      slot never re-jits because the batch shape never changes.
+    * ``max_queue`` — admission-control bound; submits beyond it are
+      rejected, not buffered.
+    * ``prompt_buckets`` — allowed padded prompt lengths; each bucket gets
+      its own traced prefill (bounded retraces). Streams are a function of
+      the *bucket-padded* prompt.
+    * ``max_seq`` *[plan key]* — per-sequence horizon
+      (``bucket + max_new_tokens`` must fit).
+    * ``backend`` — ``"jit"`` single-process serving (the mesh path lives in
+      ``runtime.server``).
+    * ``keep_results`` / ``max_trace_events`` — memory bounds for long-lived
+      processes (unfinalized outputs / trace ring).
+    * ``eos_poll_every`` — decode steps between host polls of the
+      device-side finished mask (``0`` = only truncate at finalize);
+      workloads with no ``eos_id`` never sync regardless.
+    * ``kv_layout`` *[plan key]* — ``"dense"`` (per-slot horizon
+      reservation) or ``"paged"`` (physical page pool + page tables +
+      free-list allocator; overcommit admission with
+      eviction-by-recompute).
+    * ``page_size`` / ``num_pages`` *[plan key]* — paged pool geometry,
+      rendered as ``mm(...)`` data attributes into the program text
+      (``0`` pages = ``slots * ceil(max_seq/page_size)``, i.e. no
+      overcommit).
+    * ``prefill_chunk`` — ``0`` = one-shot prefill; else long prompts
+      prefill this many page-aligned tokens per engine step, interleaved
+      with decode (chunked prefill; cuts tail TTFT under long prompts).
+    * ``decode_kernel`` / ``interpret`` — paged decode attention
+      implementation (``"xla"`` gather or the ``"pallas"`` paged-attention
+      kernel, optionally interpreted on CPU); validated here once as a
+      ``KernelSpec`` and keyed into the paged jit entries.
+    * ``prefix_cache`` *[plan key]* — paged mode only: automatic prefix
+      caching with ref-counted page sharing and copy-on-write (adds
+      ``mm(shared_prefix)`` + ``share``/``cow`` MemOps to the program).
+      Bitwise-invisible to token streams.
+    * ``spec_decode`` *[plan key]* — draft/verify speculative mode
+      (:class:`~repro.runtime.speculative.SpecConfig`); the verify program
+      fingerprints the draft/target pairing, and every cache layout carries
+      ``lookahead_k`` slack rows.
+    """
+
     slots: int = 4                     # fixed decode batch width
     max_queue: int = 64                # admission-control queue bound
     prompt_buckets: Tuple[int, ...] = (16, 32, 64)
@@ -132,6 +233,7 @@ class EngineConfig:
     prefill_chunk: int = 0             # 0 = one-shot prefill; else chunk length
     decode_kernel: str = "xla"         # xla (gather) | pallas (paged-attention kernel)
     interpret: bool = True             # Pallas interpreter mode (CPU containers)
+    prefix_cache: bool = False         # paged only: share prompt-prefix pages
     # ---- speculative decoding (draft/verify mode; runtime.speculative)
     spec_decode: Optional[SpecConfig] = None
 
@@ -140,18 +242,32 @@ class EngineConfig:
 
 
 class PagedKVAllocator:
-    """Host-side free list over the physical KV pages ``1..num_pages``.
+    """Host-side ref-counted free list over physical KV pages ``1..num_pages``.
 
     Page 0 is the reserved null page (``models.layers.NULL_PAGE``) — never
     handed out, so unmapped page-table entries always point somewhere
-    harmless. Double-free and foreign-page frees raise: a page accounting bug
-    silently corrupts another sequence's KV, so it must be loud.
+    harmless.
+
+    ``alloc`` hands out pages with refcount 1; prefix sharing takes
+    additional references on live pages (``share``) when the same physical
+    page is mapped into several slots' page tables and/or retained by the
+    engine's :class:`PrefixIndex`. ``free`` drops one reference and returns
+    the page to the free list only when the last holder lets go — a shared
+    page (refcount > 1) can therefore never be recycled, which is what makes
+    "shared pages are never evicted while referenced" an allocator invariant
+    rather than a scheduler promise. ``in_use`` counts *unique* pages, so
+    overcommit admission and ``peak_pages`` accounting stay correct under
+    aliasing (``available + in_use == total`` always holds).
+
+    Double-free, foreign-page frees, and shares of pages not in use raise: a
+    page accounting bug silently corrupts another sequence's KV, so it must
+    be loud.
     """
 
     def __init__(self, num_pages: int):
         self.total = num_pages
         self._free: List[int] = list(range(num_pages, 0, -1))  # pop() -> low ids
-        self._in_use: set = set()
+        self._ref: Dict[int, int] = {}
 
     @property
     def available(self) -> int:
@@ -159,22 +275,127 @@ class PagedKVAllocator:
 
     @property
     def in_use(self) -> int:
-        return len(self._in_use)
+        """Unique pages currently allocated (aliases count once)."""
+        return len(self._ref)
+
+    @property
+    def shared_pages(self) -> int:
+        """Pages currently held by more than one reference."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int = 1) -> Optional[List[int]]:
         """``n`` pages, or None (all-or-nothing) when the pool can't cover it."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._in_use.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Take one additional reference on each (live) page."""
         for p in pages:
-            if p not in self._in_use:
+            if p not in self._ref:
+                raise ValueError(f"share of page {p} not in use")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Drop one reference per page; recycle pages that reach zero."""
+        for p in pages:
+            c = self._ref.get(p)
+            if c is None:
                 raise ValueError(f"free of page {p} not in use (double free?)")
-            self._in_use.remove(p)
-            self._free.append(p)
+            if c == 1:
+                del self._ref[p]
+                self._free.append(p)
+            else:
+                self._ref[p] = c - 1
+
+
+class PrefixIndex:
+    """Content-addressed index of prompt-prefix KV pages (prefix caching).
+
+    Maps a *page chain key* — the SHA-256 chain over the padded prompt's
+    page-sized token chunks, salted with the page geometry and the decode
+    plan's canonical fingerprint — to the physical page holding that chunk's
+    K/V. Causality makes this sound: the K/V content of page ``j`` is a
+    deterministic function of every token up to the end of page ``j``, which
+    is exactly what the chain digests. A page whose chunk is shorter than
+    ``page_size`` (the partially-filled tail of a prompt whose bucket is not
+    page-aligned) digests fewer bytes and so can only be hit by a prompt
+    ending at the same position with the same tokens.
+
+    The index holds one allocator reference per entry (taken by the engine at
+    registration), so cached pages survive their originating request;
+    entries whose page nobody else maps (refcount 1) are reclaimable
+    LRU-first under pool pressure. Entries for complete prompts additionally
+    carry the prefill's last-position logits, letting a full-prompt hit skip
+    the forward pass entirely and still sample its first token bitwise
+    exactly.
+    """
+
+    def __init__(self, page_size: int, salt: str):
+        self.page_size = page_size
+        self._salt = salt.encode("utf-8")
+        # key -> {"page": int, "logits": Optional[device [V]]}; insertion
+        # order doubles as LRU (lookups move hit chains to the MRU end)
+        self._entries: "OrderedDict[bytes, Dict[str, Any]]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def keys_for(self, tokens: np.ndarray) -> List[bytes]:
+        """Chain keys, one per page the padded prompt covers."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        digest = hashlib.sha256(self._salt).digest()
+        out: List[bytes] = []
+        for start in range(0, len(toks), self.page_size):
+            chunk = toks[start:start + self.page_size]
+            digest = hashlib.sha256(digest + chunk.tobytes()).digest()
+            out.append(digest)
+        return out
+
+    def lookup(self, keys: Sequence[bytes]) -> List[int]:
+        """Pages of the longest cached chain prefix (possibly empty)."""
+        pages: List[int] = []
+        for k in keys:
+            e = self._entries.get(k)
+            if e is None:
+                break
+            self._entries.move_to_end(k)
+            pages.append(e["page"])
+        return pages
+
+    def tail_logits(self, key: bytes):
+        """Cached last-position prefill logits for a complete-prompt key."""
+        e = self._entries.get(key)
+        return None if e is None else e.get("logits")
+
+    def register(self, key: bytes, page: int) -> bool:
+        """Insert ``key -> page``; False if the key is already cached (the
+        caller keeps its duplicate page private and takes no index ref)."""
+        if key in self._entries:
+            return False
+        self._entries[key] = {"page": page}
+        return True
+
+    def attach_logits(self, key: bytes, logits) -> None:
+        e = self._entries.get(key)
+        if e is not None and e.get("logits") is None:
+            e["logits"] = logits
+
+    def pop_reclaimable(self, allocator: PagedKVAllocator) -> Optional[int]:
+        """Drop the LRU entry whose page nobody else holds; returns the page
+        (caller frees it) or None when every cached page is still mapped."""
+        victim = next((k for k, e in self._entries.items()
+                       if allocator.refcount(e["page"]) == 1), None)
+        if victim is None:
+            return None
+        return self._entries.pop(victim)["page"]
 
 
 # ------------------------------------------------------------------- engine
@@ -202,6 +423,11 @@ class Engine:
         if ecfg.eos_poll_every < 0:
             raise ValueError("eos_poll_every must be >= 0")
         self.paged = ecfg.kv_layout == "paged"
+        self.prefix_cache = bool(ecfg.prefix_cache)
+        if self.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires kv_layout='paged': "
+                             "prefix sharing is page aliasing, and the dense "
+                             "layout has no pages to alias")
         # speculative mode: the verify step writes K/V up to lookahead_k
         # positions past the last accepted token, so every cache layout
         # carries that many slack rows past the admission horizon
@@ -248,7 +474,8 @@ class Engine:
         self.plan = server.serving_plan(cfg, self.shape, backend=ecfg.backend,
                                         plan_cache=self.plan_cache,
                                         trace=self.trace,
-                                        page_geometry=page_geom)
+                                        page_geometry=page_geom,
+                                        prefix_sharing=self.prefix_cache)
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
@@ -290,6 +517,17 @@ class Engine:
             self.page_table_np = np.zeros(
                 (ecfg.slots, self.pages_per_slot), np.int32)
             self._slot_pages: List[List[int]] = [[] for _ in range(ecfg.slots)]
+            if self.prefix_cache:
+                # chain keys are salted with the plan fingerprint, which
+                # already digests the model config, page geometry, and the
+                # shared_prefix memory contract — a cache entry can never be
+                # hit by a different model or geometry
+                self.prefix_index = PrefixIndex(
+                    ecfg.page_size, salt=f"{cfg.name}/{self.plan.fingerprint}")
+                self._page_copy = self.plan_cache.get_or_build(
+                    fkey + ("page_copy",), self._build_page_copy)
+                self._hit_sample = self.plan_cache.get_or_build(
+                    fkey + ("hit_sample",), self._build_hit_sample)
         else:
             self.cache = api.init_cache(cfg, ecfg.slots,
                                         ecfg.max_seq + self._slack)
@@ -378,7 +616,9 @@ class Engine:
             logits, (k_c, v_c) = api.prefill_chunk(
                 cfg, params, pool, page_row, {"tokens": tokens}, offset)
             # only the final chunk's token is used; its sampling position is
-            # the last processed position — identical to one-shot prefill's
+            # the last processed position — identical to one-shot prefill's.
+            # The raw last-position logits ride along so the prefix cache can
+            # retain a complete prompt's logits for full-hit admissions.
             last = (offset + tokens.shape[1] - 1).astype(jnp.int32)
             nxt = sample_tokens(logits[:, -1], key[None], last[None],
                                 temp[None], topk[None], topp[None])
@@ -386,9 +626,56 @@ class Engine:
                                                  page_ids),
                     "v_pages": cache_write_pages(pool["v_pages"], v_c,
                                                  page_ids)}
-            return nxt, pool
+            return nxt, logits[:, -1], pool
 
         return jax.jit(chunk, donate_argnums=(1,))
+
+    def _build_suffix_prefill(self, bucket: int, offset: int):
+        """Prefill only the unseen suffix ``[offset, bucket)`` of a prompt
+        whose first ``offset`` tokens were served from the prefix cache: one
+        ``prefill_chunk`` forward over the suffix, gathering the shared
+        pages as context, writing K/V into the request's fresh pages only.
+        Traced per (bucket, offset) pair — bounded by pages-per-bucket."""
+        cfg, ps = self.cfg, self.ecfg.page_size
+        suffix = bucket - offset
+        pad = -suffix % ps     # fill the tail page (rows are position-masked)
+
+        def sfx(params, pool, page_row, tokens, page_ids, key, temp, topk,
+                topp):
+            logits, (k_c, v_c) = api.prefill_chunk(
+                cfg, params, pool, page_row, {"tokens": tokens},
+                jnp.int32(offset))
+            last = jnp.full((1,), bucket - 1, jnp.int32)
+            nxt = sample_tokens(logits[:, -1], key[None], last,
+                                temp[None], topk[None], topp[None])
+            if pad:
+                widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                k_c = jnp.pad(k_c, widths)
+                v_c = jnp.pad(v_c, widths)
+            pool = {"k_pages": cache_write_pages(pool["k_pages"], k_c,
+                                                 page_ids),
+                    "v_pages": cache_write_pages(pool["v_pages"], v_c,
+                                                 page_ids)}
+            return nxt, logits[:, -1], pool
+
+        return jax.jit(sfx, donate_argnums=(1,))
+
+    def _build_page_copy(self):
+        """Copy-on-write duplication: physical pages src -> dst, all layers."""
+        def cp(pool, src, dst):
+            return {"k_pages": cache_copy_pages(pool["k_pages"], src, dst),
+                    "v_pages": cache_copy_pages(pool["v_pages"], src, dst)}
+        return jax.jit(cp, donate_argnums=(0,))
+
+    def _build_hit_sample(self):
+        """First token of a full-prompt prefix hit: sample from the *cached*
+        last-position prefill logits — the same device buffer the original
+        prefill produced, so greedy hits are bitwise the original argmax and
+        sampled hits draw with the new request's own key/position."""
+        def fn(logits, key, pos, temp, topk, topp):
+            return sample_tokens(logits[None, :], key[None], pos[None],
+                                 temp[None], topk[None], topp[None])
+        return jax.jit(fn)
 
     def _build_insert(self):
         return api.build_cache_insert(self.cfg,
@@ -408,11 +695,13 @@ class Engine:
                 if encdec:
                     batch["encoder_memory"] = memory
                 logits, cache = api.prefill(cfg, params, batch, s_max=s_max)
-                # first-token sampling position = last processed position
+                # first-token sampling position = last processed position;
+                # the raw last-position logits ride along for the prefix
+                # cache's full-hit entries
                 last = jnp.full((1,), tokens.shape[1] - 1, jnp.int32)
                 nxt = sample_tokens(logits[:, -1], key[None], last,
                                     temp[None], topk[None], topp[None])
-                return nxt, cache
+                return nxt, logits[:, -1], cache
             return jax.jit(pre)
         return self.plan_cache.get_or_build(
             self._fkey + ("prefill", bucket), build)
@@ -421,7 +710,8 @@ class Engine:
         """One-shot prefill for ``req``: run the encoder into the slot's
         encoder-memory buffer (capability path), then prefill *from that
         buffer row* — the per-slot buffer is the source of cross-attention
-        memory, not a side copy. Returns (first token [1], cache-of-one)."""
+        memory, not a side copy. Returns (first token [1],
+        last-position logits [1, V], cache-of-one)."""
         toks = jnp.asarray(self._padded_prompt(req))[None, :]
         memory = jnp.zeros((1, 0, 0), jnp.float32)   # unused placeholder
         if self.spec.needs_encoder_memory:
@@ -581,7 +871,7 @@ class Engine:
             while self.slots_req[i] is None and self.queue:
                 req = self.queue.popleft()
                 self._mark_admitted(req, i)
-                nxt0, one = self._run_prefill(req, i)
+                nxt0, _, one = self._run_prefill(req, i)
                 self.cache = self._insert(self.cache, one, i)
                 self._activate(req, i, nxt0)
 
@@ -600,28 +890,142 @@ class Engine:
             if i is None:
                 return
             req = self.queue[0]
-            need = self._page_count(req.bucket)
+            # prefix caching: find the longest cached chain of the padded
+            # prompt's pages and take references on the hits immediately —
+            # a referenced page can't be reclaimed out from under us below
+            keys, hits, tail_logits = self._prefix_probe(req)
+            self.allocator.share(hits)
+            need = self._page_count(req.bucket) - len(hits)
+            short = need + self._growth_reserve() - self.allocator.available
+            if short > 0 and self.prefix_cache:
+                self._reclaim_pages(short)
             if self.allocator.available < need + self._growth_reserve():
+                self.allocator.free(hits)  # back out the probe references
                 return                 # pool pressure: admit when pages free up
-            pages = self.allocator.alloc(need)
+            pages = hits + self.allocator.alloc(need)
             self.queue.popleft()
             self._slot_pages[i] = pages
             self.page_table_np[i, :] = 0
             self.page_table_np[i, :len(pages)] = pages
             self._mark_admitted(req, i)
+            hit_tokens = min(len(hits) * self.ecfg.page_size, req.bucket)
+            req._prefix_keys, req._prefix_hit = keys, len(hits)
+            if self.prefix_cache:
+                if hit_tokens:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += hit_tokens
+                else:
+                    self.prefix_misses += 1
+            if hit_tokens == req.bucket:
+                # full-prompt hit: every page (including a partially-filled
+                # tail) is shared and the cached last-position logits stand
+                # in for the skipped forward pass — zero prefill compute
+                s = req.sampling or GREEDY
+                nxt0 = self._hit_sample(
+                    tail_logits, jnp.asarray(req._key),
+                    jnp.int32(req.bucket - 1), jnp.float32(s.temperature),
+                    jnp.int32(s.top_k), jnp.float32(s.top_p))
+                self.prefix_full_hits += 1
+                self._activate(req, i, nxt0)
             # prompts longer than one chunk prefill incrementally; at or
             # below a chunk, one-shot is strictly cheaper (one dispatch)
-            if self.ecfg.prefill_chunk and \
+            elif self.ecfg.prefill_chunk and \
                     req.bucket > self.ecfg.prefill_chunk:
                 req.state = "prefilling"
-                req._chunk_cursor = 0
+                # hits land on chunk boundaries (the probe rounds down), so
+                # the tick resumes exactly at the first unshared chunk
+                req._chunk_cursor = hit_tokens // self.ecfg.prefill_chunk
                 self._prefilling[i] = req
+            elif hit_tokens:
+                nxt0 = self._run_suffix_prefill(req, i, hit_tokens)
+                self._activate(req, i, nxt0)
             else:
-                nxt0, one = self._run_prefill(req, i)
+                nxt0, logits, one = self._run_prefill(req, i)
                 self.pool = self._page_insert(
                     self.pool, one["k"], one["v"],
                     jnp.asarray(pages, jnp.int32))
+                self._register_prefix(req, i, logits)
                 self._activate(req, i, nxt0)
+
+    # ------------------------------------------------------- prefix caching
+
+    def _prefix_probe(self, req: Request):
+        """Longest usable cached prefix for ``req``'s padded prompt.
+
+        Returns ``(keys, hit_pages, tail_logits)``: the prompt's page chain
+        keys, the pages of the longest cached chain prefix (no allocator
+        references taken yet), and — for a complete-prompt hit only — the
+        cached last-position prefill logits. A complete-chain hit without
+        cached logits is trimmed by one page so the suffix forward can
+        produce the first token; chunked-prefill engines round partial hits
+        down to a chunk boundary (the tick's traced chunk length is fixed).
+        """
+        if not self.prefix_cache:
+            return None, [], None
+        keys = self.prefix_index.keys_for(self._padded_prompt(req))
+        pages = self.prefix_index.lookup(keys)
+        tail_logits = None
+        if len(pages) == len(keys):
+            tail_logits = self.prefix_index.tail_logits(keys[-1])
+            if tail_logits is None:
+                pages = pages[:-1]
+        chunk = self.ecfg.prefill_chunk
+        if chunk and req.bucket > chunk and len(pages) < len(keys):
+            per_chunk = chunk // self.ecfg.page_size
+            pages = pages[:(len(pages) // per_chunk) * per_chunk]
+        return keys, pages, tail_logits
+
+    def _register_prefix(self, req: Request, i: int, last_logits) -> None:
+        """Publish ``req``'s freshly prefilled prompt pages into the index
+        (the index takes one allocator reference per new entry, so cached
+        pages outlive the request). The final chain key also retains the
+        prefill's last-position logits, enabling full-prompt hits. Pages the
+        request itself obtained from the cache are already registered."""
+        if not self.prefix_cache or req._prefix_keys is None:
+            return
+        keys = req._prefix_keys
+        for j in range(req._prefix_hit, len(keys)):
+            page = self._slot_pages[i][j]
+            if self.prefix_index.register(keys[j], page):
+                self.allocator.share([page])
+        if last_logits is not None:
+            self.prefix_index.attach_logits(keys[-1], last_logits[0])
+
+    def _run_suffix_prefill(self, req: Request, i: int, offset: int):
+        """Prefill positions ``[offset, bucket)`` — the part of the prompt
+        the prefix cache did not cover — gathering the shared pages as
+        context, then register the fresh pages. Returns the first token."""
+        ps = self.ecfg.page_size
+        n_hit = offset // ps
+        fn = self.plan_cache.get_or_build(
+            self._fkey + ("suffix_prefill", req.bucket, offset),
+            lambda: self._build_suffix_prefill(req.bucket, offset))
+        width = self._gather_bucket(n_hit)
+        row = self.page_table_np[i][:width]
+        ids = self._slot_pages[i][n_hit:]
+        toks = self._padded_prompt(req)[offset:]
+        s = req.sampling or GREEDY
+        nxt, logits, self.pool = fn(
+            self.params, self.pool, jnp.asarray(row),
+            jnp.asarray(toks)[None, :], jnp.asarray(ids, jnp.int32),
+            jnp.asarray(req._key), jnp.float32(s.temperature),
+            jnp.int32(s.top_k), jnp.float32(s.top_p))
+        self._register_prefix(req, i, logits)
+        return nxt
+
+    def _reclaim_pages(self, n: int) -> int:
+        """Recycle up to ``n`` cached pages nobody maps (refcount 1 — held
+        only by the index), LRU-first. Returns the count actually freed;
+        pages still shared with live slots are never touched."""
+        freed = 0
+        while freed < n:
+            page = self.prefix_index.pop_reclaimable(self.allocator)
+            if page is None:
+                break
+            self.allocator.free([page])
+            freed += 1
+            self.prefix_reclaimed += 1
+        return freed
 
     def _prefill_tick(self) -> None:
         """Advance chunked prefill: every prefilling slot moves one chunk per
@@ -648,7 +1052,7 @@ class Engine:
             # masked (kpos < offset) anyway, so streams are unchanged.
             width = self._gather_bucket(off // self.ecfg.page_size)
             row = self.page_table_np[i][:width]
-            nxt, self.pool = self._chunk_prefill(
+            nxt, logits, self.pool = self._chunk_prefill(
                 self.params, self.pool, jnp.asarray(row),
                 jnp.asarray(toks)[None, :], jnp.int32(off),
                 jnp.asarray(ids, jnp.int32), jnp.asarray(req._key),
@@ -658,6 +1062,7 @@ class Engine:
             self.prefill_chunks += 1
             if off + chunk >= req.bucket:
                 del self._prefilling[i]
+                self._register_prefix(req, i, logits)
                 self._activate(req, i, nxt)
 
     def _gather_bucket(self, ctx_pages: int) -> int:
@@ -674,12 +1079,32 @@ class Engine:
 
     # ------------------------------------------------------ paged page flow
 
+    def _alloc_one_pressured(self, i: int, req: Request) -> Optional[int]:
+        """One page for slot ``i`` under pool pressure: reclaim unreferenced
+        prefix-cached pages first, then evict the newest-admitted request
+        (recompute-on-readmit). Returns None when ``req`` itself became the
+        victim; raises only in the unreachable nothing-left case."""
+        while True:
+            got = self.allocator.alloc(1)
+            if got is not None:
+                return got[0]
+            if self.prefix_cache and self._reclaim_pages(1):
+                continue
+            if not self._evict_newest():
+                raise RuntimeError(
+                    "paged KV pool exhausted with no evictable "
+                    "sequence")  # unreachable: admission caps size
+            if self.slots_req[i] is not req:
+                return None            # this slot itself was the victim
+
     def _ensure_pages(self) -> None:
         """Before decode, every active slot about to write position ``pos``
         (through ``pos + lookahead_k`` in speculative mode) must own the
-        pages covering it. Allocation failures trigger eviction of the
-        newest-admitted active request (recompute-on-readmit), oldest
-        requests always make progress — liveness under overcommit."""
+        pages covering it — *privately*. Missing pages are allocated
+        (reclaiming cached pages, then evicting the newest-admitted request,
+        under pressure; oldest requests always make progress — liveness
+        under overcommit), and prefix-shared pages in the write span are
+        duplicated copy-on-write so the cached original stays pristine."""
         order = sorted((i for i in range(self.ecfg.slots)
                         if self.slots_req[i] is not None),
                        key=lambda i: self.slots_req[i]._admit_seq)
@@ -689,17 +1114,42 @@ class Engine:
                 continue               # evicted while growing an older slot
             while (self.pos[i] + self._slack) // self.ecfg.page_size \
                     >= len(self._slot_pages[i]):
-                got = self.allocator.alloc(1)
-                if got is None:
-                    if not self._evict_newest():
-                        raise RuntimeError(
-                            "paged KV pool exhausted with no evictable "
-                            "sequence")  # unreachable: admission caps size
-                    if self.slots_req[i] is not req:
-                        break          # this slot itself was the victim
+                page = self._alloc_one_pressured(i, req)
+                if page is None:
+                    break              # this slot itself was the victim
+                self._slot_pages[i].append(page)
+                self.page_table_np[i, len(self._slot_pages[i]) - 1] = page
+        if self.prefix_cache:
+            self._cow_tick()
+
+    def _cow_tick(self) -> None:
+        """Copy-on-write: any shared page a slot is about to write — the
+        pages covering ``[pos, pos + lookahead_k]``, in practice the
+        partially-filled tail page of a fully-hit prompt — is duplicated
+        into a private copy first (``cache_copy_pages``), the page table is
+        repointed, and the shared original keeps serving its other readers
+        (and the prefix index) byte-identical."""
+        ps = self.ecfg.page_size
+        for i in range(self.ecfg.slots):
+            req = self.slots_req[i]
+            if req is None:
+                continue
+            row = self._slot_pages[i]
+            first = int(self.pos[i]) // ps
+            last = (int(self.pos[i]) + self._slack) // ps
+            for j in range(first, min(last + 1, len(row))):
+                if self.allocator.refcount(row[j]) <= 1:
                     continue
-                self._slot_pages[i].append(got[0])
-                self.page_table_np[i, len(self._slot_pages[i]) - 1] = got[0]
+                page = self._alloc_one_pressured(i, req)
+                if page is None:
+                    break              # slot evicted hunting for a copy
+                self.pool = self._page_copy(
+                    self.pool, jnp.asarray([row[j]], jnp.int32),
+                    jnp.asarray([page], jnp.int32))
+                self.allocator.free([row[j]])
+                row[j] = page
+                self.page_table_np[i, j] = page
+                self.cow_copies += 1
 
     def _evict_newest(self) -> bool:
         victims = [r for r in self.slots_req if r is not None]
@@ -720,6 +1170,7 @@ class Engine:
         req._first_tok = None
         req._remaining = 0
         req._chunk_cursor = 0
+        req._prefix_keys, req._prefix_hit = None, 0  # re-probed on readmit
         req.tokens_out = []
         self.eos_np[i] = -1
         self.temps_np[i] = 0.0
@@ -1000,6 +1451,12 @@ class Engine:
         self.prefill_tokens = 0
         self.peak_concurrent = 0
         self.peak_pages = 0
+        self.prefix_hits = 0
+        self.prefix_full_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_reclaimed = 0
+        self.cow_copies = 0
         self._occupancy_sum = 0
         self.elapsed_s = 0.0
 
@@ -1036,6 +1493,17 @@ class Engine:
                 "peak_pages": self.peak_pages,
                 "evictions": self.evictions,
                 "prefill_chunks": self.prefill_chunks,
+            })
+        if self.prefix_cache:
+            out.update({
+                "prefix_hits": self.prefix_hits,
+                "prefix_full_hits": self.prefix_full_hits,
+                "prefix_misses": self.prefix_misses,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "prefix_reclaimed": self.prefix_reclaimed,
+                "cow_copies": self.cow_copies,
+                "prefix_cached_pages": len(self.prefix_index),
+                "shared_pages": self.allocator.shared_pages,
             })
         if self.spec_cfg is not None:
             out.update({

@@ -29,6 +29,7 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  mesh=None, plan_cache: Optional[PlanCache] = None,
                  trace: Optional[list] = None,
                  page_geometry: Optional[Tuple[int, int, int]] = None,
+                 prefix_sharing: bool = False,
                  spec_decode: Optional[Tuple[str, int]] = None
                  ) -> LoweredPlan:
     """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
@@ -39,14 +40,17 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     (the hit is visible in ``plan_cache.stats()``). ``page_geometry``
     switches the decode program to the paged-KV layout — the geometry is
     fingerprinted, so paged and dense plans (and different page sizes) never
-    collide in the cache. ``spec_decode=(draft_name, k)`` builds the
-    speculative *verify* program instead of the plain decode step; the
-    pairing fingerprints via ``caps(spec_verify(k) draft(name))``.
+    collide in the cache. ``prefix_sharing=True`` marks the paged pool as
+    prefix-shared (``mm(shared_prefix)`` + share/cow MemOps), which also
+    fingerprints. ``spec_decode=(draft_name, k)`` builds the speculative
+    *verify* program instead of the plain decode step; the pairing
+    fingerprints via ``caps(spec_verify(k) draft(name))``.
     """
     from ..core.plans import build_program
     cache = plan_cache if plan_cache is not None else default_plan_cache()
     mesh_shape = tuple(mesh.shape.items()) if mesh is not None else None
     prog = build_program(cfg, shape, page_geometry=page_geometry,
+                         prefix_sharing=prefix_sharing,
                          spec_decode=spec_decode)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)

@@ -45,12 +45,21 @@ from .sampling import sample_tokens, spec_accept
 
 @dataclasses.dataclass(frozen=True)
 class SpecConfig:
-    """Draft/verify engine mode knobs.
+    """Draft/verify engine mode knobs (``EngineConfig.spec_decode``).
 
-    ``draft_config`` is any same-vocabulary, non-encoder-decoder family (a
-    smaller sibling of the target, or the target itself for self-
-    speculation); ``lookahead_k`` is the number of tokens the draft proposes
-    per engine step — each step emits between 1 and ``k+1`` tokens per slot.
+    * ``draft_config`` — any same-vocabulary, non-encoder-decoder
+      :class:`~repro.configs.base.ArchConfig` (a smaller sibling of the
+      target, or the target itself for self-speculation). The draft's
+      *name* is rendered into the verify program's canonical text as
+      ``caps(... draft(name))``, so a verify plan compiled for one
+      draft/target pairing can never be served from the PlanCache for
+      another.
+    * ``lookahead_k`` — tokens the draft proposes per engine step; each step
+      emits between 1 and ``k+1`` tokens per slot. ``k`` fingerprints as
+      ``caps(spec_verify(k) ...)``, widens ``in/tokens`` to the ``k+1``
+      verify chunk, and adds ``k`` slack rows/pages to every cache layout —
+      all three enter the compiled-artifact keys, so spec and plain engines
+      of the same geometry never share jitted steps.
     """
 
     draft_config: ArchConfig
@@ -106,6 +115,7 @@ class SpeculativeDecoder:
                           ecfg.max_seq, ecfg.slots),
             backend=ecfg.backend, plan_cache=engine.plan_cache,
             trace=engine.trace, page_geometry=page_geom,
+            prefix_sharing=engine.prefix_cache,
             spec_decode=(dcfg.name, self.k))
         # the draft rides its own (plain dense decode) plan + cache entries
         self.draft_plan = server.serving_plan(

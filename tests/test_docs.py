@@ -1,0 +1,88 @@
+"""Docs drift gate: the `docs/` subsystem is testable documentation.
+
+* Every example program embedded in ``docs/UPIR_TEXT.md`` must match a
+  fresh render of its generator in ``docs/upir_examples.py`` **byte for
+  byte** — the spec describes the exact text the PlanCache fingerprints, so
+  a printer or planner change that moves the text must also regenerate the
+  spec (``PYTHONPATH=src python docs/upir_examples.py --write``).
+* Every ``mm(...)`` / ``caps(...)`` key the printer can render must be
+  documented, so new fingerprinting knobs can't land undocumented.
+* Paths named in ``docs/ARCHITECTURE.md`` and the README's docs links must
+  exist, so the architecture tour can't point at moved files.
+"""
+import importlib.util
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
+
+
+@pytest.fixture(scope="module")
+def examples():
+    spec = importlib.util.spec_from_file_location(
+        "upir_examples", DOCS / "upir_examples.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_upir_text_examples_match_generators(examples):
+    problems = examples.drift((DOCS / "UPIR_TEXT.md").read_text())
+    assert not problems, (
+        f"docs/UPIR_TEXT.md drifted from its generators: {problems} — "
+        f"regenerate with `PYTHONPATH=src python docs/upir_examples.py "
+        f"--write` (and review the diff: the program text is the PlanCache "
+        f"fingerprint surface)")
+
+
+def test_upir_text_examples_cover_the_features_they_claim(examples):
+    """The chosen examples must keep exercising what the prose around them
+    explains, whatever config details shift underneath."""
+    rendered = examples.render_all()
+    dense = rendered["dense-decode"]
+    assert "upir.kernel @decode_step" in dense and "caps(pageable)" in dense
+    paged = rendered["paged-prefix-decode"]
+    for needle in ("allocator(paged_kv_alloc)", "shared_prefix",
+                   "upir.memory_alloc", "upir.memory_dealloc",
+                   "upir.memory_share", "upir.memory_cow", "mm(page_map)"):
+        assert needle in paged, needle
+    verify = rendered["spec-verify"]
+    assert "upir.kernel @spec_verify" in verify
+    assert re.search(r"caps\(pageable spec_verify\(\d+\) draft\(", verify)
+    train = rendered["train-step"]
+    assert "upir.kernel @train_step" in train
+    assert "upir.sync allreduce" in train
+
+
+def test_every_fingerprinted_mm_and_cap_key_is_documented():
+    from repro.core.printer import CAP_EXT_KEYS, MM_EXT_KEYS
+    spec_text = (DOCS / "UPIR_TEXT.md").read_text()
+    for key in MM_EXT_KEYS + CAP_EXT_KEYS:
+        assert f"`{key}" in spec_text, (
+            f"printer key '{key}' participates in the program fingerprint "
+            f"but is not documented in docs/UPIR_TEXT.md")
+
+
+def test_memop_kinds_documented():
+    spec_text = (DOCS / "UPIR_TEXT.md").read_text()
+    for kind in ("alloc", "dealloc", "share", "cow"):
+        assert kind in spec_text
+
+
+def test_architecture_doc_paths_exist():
+    arch = (DOCS / "ARCHITECTURE.md").read_text()
+    paths = set(re.findall(r"`((?:src|tests|benchmarks|docs)/[\w/.-]+)`",
+                           arch))
+    assert len(paths) >= 10, "the layer map should name real files"
+    missing = [p for p in sorted(paths) if not (ROOT / p).exists()]
+    assert not missing, f"ARCHITECTURE.md names files that moved: {missing}"
+
+
+def test_readme_links_docs():
+    readme = (ROOT / "README.md").read_text()
+    for doc in ("docs/ARCHITECTURE.md", "docs/UPIR_TEXT.md"):
+        assert doc in readme, f"README must link {doc}"
+        assert (ROOT / doc).exists()

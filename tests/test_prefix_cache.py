@@ -1,0 +1,330 @@
+"""Prefix caching with copy-on-write pages (paged engine).
+
+The contract under test, in order of importance:
+
+1. **Sharing is bitwise-invisible.** Greedy token streams with
+   ``prefix_cache=True`` equal the sharing-disabled paged engine (and the
+   dense engine) exactly — unchunked, chunked, sampled, and speculative.
+2. **Shared pages are never recycled while referenced.** Ref-counting is an
+   allocator invariant (`free` only returns refcount-1 pages to the free
+   list), so eviction-by-recompute and index reclaim can never corrupt
+   another sequence's KV.
+3. **Hits skip prefill compute.** Prefix hits map cached pages instead of
+   re-prefilling them; a full-prompt hit runs no forward pass at all (the
+   cached last-position logits produce the first token).
+4. **Copy-on-write.** A slot writing into a shared partially-filled tail
+   page duplicates it first; the cached original keeps serving later hits.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import ShapeCfg, smoke_config
+from repro.core.lower import PlanCache, plan_from_program
+from repro.core.passes import run_pipeline
+from repro.core.plans import build_program
+from repro.core.printer import program_fingerprint, to_mlir
+from repro.models import api
+from repro.runtime.engine import (Engine, EngineConfig, PagedKVAllocator,
+                                  PrefixIndex)
+from repro.runtime.sampling import SamplingParams
+
+CFG = smoke_config("tinyllama-1.1b")
+BUCKET = 8
+TOKENS = 6
+MAX_SEQ = BUCKET + TOKENS
+PAGE = 4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def shared_prefix_workload(n=6, prefix_len=6, identical=2, seed=3):
+    """A shared system prefix + short unique suffixes, plus a few byte-
+    identical full prompts (the full-hit / CoW path)."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(0, CFG.vocab, size=prefix_len).tolist()
+    work = [(sys_prefix
+             + rng.integers(0, CFG.vocab, size=BUCKET - prefix_len).tolist(),
+             TOKENS) for _ in range(n)]
+    work += [(sys_prefix + [1] * (BUCKET - prefix_len), TOKENS)] * identical
+    return work
+
+
+def engine_for(params, *, prefix_cache=False, page_size=PAGE, num_pages=0,
+               prefill_chunk=0, slots=2, spec=None, draft_params=None,
+               plan_cache=None):
+    return Engine(CFG, EngineConfig(slots=slots, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ, kv_layout="paged",
+                                    page_size=page_size, num_pages=num_pages,
+                                    prefill_chunk=prefill_chunk,
+                                    prefix_cache=prefix_cache,
+                                    spec_decode=spec),
+                  params=params, draft_params=draft_params,
+                  plan_cache=plan_cache or PlanCache())
+
+
+def serve(engine, workload, sampling=None):
+    reqs = [engine.make_request(p, n, sampling=sampling) for p, n in workload]
+    engine.run(reqs)
+    return [engine.finalize_request(r) for r in reqs], reqs
+
+
+# ----------------------------------------------------- ref-counted allocator
+
+
+def test_allocator_share_and_free_refcounts():
+    a = PagedKVAllocator(4)
+    pages = a.alloc(2)
+    assert a.refcount(pages[0]) == 1
+    a.share(pages)
+    assert a.refcount(pages[0]) == 2
+    assert a.in_use == 2               # unique pages, aliases count once
+    assert a.shared_pages == 2
+    a.free(pages)                      # drop one holder: pages stay live
+    assert a.in_use == 2 and a.available == 2
+    assert a.shared_pages == 0
+    a.free(pages)                      # last holder: recycled
+    assert a.in_use == 0 and a.available == 4
+    with pytest.raises(ValueError):
+        a.free(pages)                  # double free still loud
+
+
+def test_allocator_share_of_free_page_raises():
+    a = PagedKVAllocator(2)
+    with pytest.raises(ValueError):
+        a.share([1])
+    page = a.alloc(1)
+    a.free(page)
+    with pytest.raises(ValueError):
+        a.share(page)
+
+
+@given(st.lists(st.integers(min_value=-6, max_value=6), min_size=1,
+                max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_allocator_properties_under_sharing(ops):
+    """available + unique-in-use == total at every step; a page reaches the
+    free list only when its last reference is dropped."""
+    total = 10
+    a = PagedKVAllocator(total)
+    refs: list = []                    # one entry per held reference
+    for op in ops:
+        if op > 4 and refs:            # 5, 6: share an existing reference
+            grp = refs[op % len(refs)]
+            a.share(grp)
+            refs.append(list(grp))
+        elif op > 0:
+            got = a.alloc(op)
+            if got is None:
+                assert a.available < op
+            else:
+                refs.append(got)
+        elif op < 0 and refs:
+            a.free(refs.pop(op % len(refs)))
+        unique = {p for g in refs for p in g}
+        assert a.in_use == len(unique)
+        assert a.available + a.in_use == total
+        for p in unique:
+            assert a.refcount(p) == sum(g.count(p) for g in refs)
+    for g in refs:
+        a.free(g)
+    assert a.available == total and a.shared_pages == 0
+
+
+# ------------------------------------------------------------ chain hashing
+
+
+def test_prefix_index_chain_keys():
+    idx = PrefixIndex(4, salt="s")
+    toks = np.arange(10, dtype=np.int32)
+    keys = idx.keys_for(toks)
+    assert len(keys) == 3              # 4 + 4 + partial 2
+    # deterministic, prefix-stable chains
+    assert idx.keys_for(toks)[:2] == keys[:2]
+    assert idx.keys_for(toks[:8]) == keys[:2]
+    # a partial tail digests fewer bytes: it can never collide with the
+    # full page of a longer prompt sharing the same leading tokens
+    assert idx.keys_for(toks[:6])[1] != keys[1]
+    # different salt (geometry / model fingerprint) => disjoint key space
+    assert PrefixIndex(4, salt="t").keys_for(toks) != keys
+    # divergence at any position changes every later key
+    other = toks.copy()
+    other[1] = 99
+    assert idx.keys_for(other)[0] != keys[0]
+    assert idx.keys_for(other)[2] != keys[2]
+
+
+# ---------------------------------------------- stream equality (the gate)
+
+
+def test_prefix_sharing_greedy_bitwise(params):
+    work = shared_prefix_workload()
+    dense = Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                     max_seq=MAX_SEQ),
+                   params=params, plan_cache=PlanCache())
+    want, _ = serve(dense, work)
+    base, _ = serve(engine_for(params), work)
+    shared_engine = engine_for(params, prefix_cache=True)
+    got, reqs = serve(shared_engine, work)
+    assert want == base == got
+    assert all(r.state == "done" for r in reqs)
+    st_ = shared_engine.stats()
+    assert st_["prefix_hits"] > 0
+    assert st_["prefix_hit_tokens"] > 0
+    assert st_["prefix_misses"] >= 1   # the very first prompt misses
+
+
+def test_prefix_sharing_chunked_bitwise(params):
+    work = shared_prefix_workload(seed=11)
+    base, _ = serve(engine_for(params, prefill_chunk=PAGE), work)
+    eng = engine_for(params, prefix_cache=True, prefill_chunk=PAGE)
+    got, _ = serve(eng, work)
+    assert base == got
+    st_ = eng.stats()
+    assert st_["prefix_hits"] > 0
+    # hit chunks are skipped outright: fewer chunk dispatches than a cold
+    # engine would need for the same workload
+    cold = engine_for(params, prefill_chunk=PAGE)
+    serve(cold, work)
+    assert st_["prefill_chunks"] < cold.stats()["prefill_chunks"]
+
+
+def test_prefix_full_hit_skips_prefill_entirely(params):
+    eng = engine_for(params, prefix_cache=True)
+    one = [(list(range(1, BUCKET + 1)), TOKENS)]
+    first, _ = serve(eng, one)
+    again, _ = serve(eng, one)
+    assert first == again
+    st_ = eng.stats()
+    assert st_["prefix_full_hits"] >= 1
+    # the repeat admission ran no forward pass: its whole padded prompt is
+    # counted as skipped prefill compute
+    assert st_["prefix_hit_tokens"] >= BUCKET
+
+
+def test_cow_duplicates_partially_filled_tail_page(params):
+    """page_size > bucket: the prompt fills only the head of its single
+    page, the page is cached at registration, and decode's first write must
+    copy-on-write — the cached original keeps serving later hits."""
+    work = [(list(range(2, BUCKET + 2)), TOKENS)] * 3
+    # pool sized so every CoW copy fits without eviction pressure (the
+    # pressure path is covered by test_prefix_pressure_reclaims_then_replays)
+    base, _ = serve(engine_for(params, page_size=16, num_pages=6), work)
+    eng = engine_for(params, prefix_cache=True, page_size=16, num_pages=6)
+    got, _ = serve(eng, work)
+    assert base == got
+    st_ = eng.stats()
+    assert st_["cow_copies"] >= 2       # every full hit writes via a copy
+    assert st_["prefix_full_hits"] == 2
+    # the cached page survived all three requests byte-identical: a fresh
+    # request still fully hits and still matches
+    again, _ = serve(eng, work[:1])
+    assert again == base[:1]
+
+
+def test_prefix_sampled_equality_and_replay(params):
+    sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9, seed=5)
+    work = shared_prefix_workload(seed=13)
+    base, _ = serve(engine_for(params), work, sampling=sp)
+    e1 = engine_for(params, prefix_cache=True)
+    s1, _ = serve(e1, work, sampling=sp)
+    s2, _ = serve(engine_for(params, prefix_cache=True), work, sampling=sp)
+    assert base == s1 == s2
+    assert e1.stats()["prefix_hits"] > 0
+
+
+def test_prefix_speculative_bitwise(params):
+    import dataclasses
+
+    from repro.runtime.speculative import SpecConfig
+    spec = SpecConfig(draft_config=dataclasses.replace(
+        CFG, name=CFG.name + "-draft"), lookahead_k=2)
+    work = shared_prefix_workload(n=4, identical=2, seed=17)
+    plain, _ = serve(engine_for(params), work)
+    spec_base, _ = serve(engine_for(params, spec=spec, draft_params=params),
+                         work)
+    eng = engine_for(params, prefix_cache=True, spec=spec,
+                     draft_params=params)
+    spec_shared, _ = serve(eng, work)
+    assert plain == spec_base == spec_shared
+    assert eng.stats()["prefix_hits"] > 0
+
+
+# ------------------------------------------- pressure: eviction and reclaim
+
+
+def test_prefix_pressure_reclaims_then_replays(params):
+    """A pool far below worst-case demand: cached pages are reclaimed
+    LRU-first (never pages a live slot maps), eviction-by-recompute replays
+    through re-probed prefix hits, and streams never move."""
+    work = shared_prefix_workload(n=6, identical=2, seed=19)
+    base, _ = serve(engine_for(params, slots=4, num_pages=11), work)
+    eng = engine_for(params, prefix_cache=True, slots=4, num_pages=11)
+    got, reqs = serve(eng, work)
+    assert base == got
+    assert all(r.state == "done" for r in reqs)
+    st_ = eng.stats()
+    assert st_["prefix_reclaimed"] + st_["evictions"] > 0
+    assert st_["peak_pages"] <= eng.num_pages
+    # drained: only the index holds pages, each exactly once
+    assert eng.allocator.in_use == st_["prefix_cached_pages"]
+    assert eng.allocator.available + eng.allocator.in_use == eng.num_pages
+    assert eng.allocator.shared_pages == 0
+
+
+def test_prefix_sharing_reduces_pool_pressure(params):
+    """The pool-concurrency win: at equal KV memory, the sharing engine
+    serves the shared-prefix workload with strictly fewer evictions."""
+    work = shared_prefix_workload(n=8, identical=0, seed=23)
+    base = engine_for(params, slots=4, num_pages=11)
+    serve(base, work)
+    eng = engine_for(params, prefix_cache=True, slots=4, num_pages=11)
+    serve(eng, work)
+    assert eng.stats()["evictions"] < base.stats()["evictions"]
+
+
+# ----------------------------------------------------- core IR / validation
+
+
+def test_prefix_sharing_program_fingerprint_and_plan():
+    shape = ShapeCfg("engine_b2", "decode", MAX_SEQ, 2)
+    geom = (15, PAGE, 4)
+    plain = build_program(CFG, shape, page_geometry=geom)
+    shared = build_program(CFG, shape, page_geometry=geom,
+                           prefix_sharing=True)
+    assert program_fingerprint(plain) != program_fingerprint(shared)
+    text = to_mlir(shared)
+    assert "shared_prefix" in text
+    assert "upir.memory_share" in text and "upir.memory_cow" in text
+    assert "upir.memory_share" not in to_mlir(plain)
+    plan = plan_from_program(run_pipeline(shared))
+    assert plan.prefix_sharing and plan.page_geometry == geom
+    assert not plan_from_program(run_pipeline(plain)).prefix_sharing
+
+
+def test_prefix_cache_requires_paged(params):
+    with pytest.raises(ValueError, match="paged"):
+        Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                 max_seq=MAX_SEQ, prefix_cache=True),
+               params=params, plan_cache=PlanCache())
+
+
+def test_prefix_stats_reset_keeps_cache(params):
+    eng = engine_for(params, prefix_cache=True)
+    serve(eng, shared_prefix_workload(n=3, identical=1, seed=29))
+    st_ = eng.stats()
+    for k in ("prefix_hits", "prefix_full_hits", "prefix_misses",
+              "prefix_hit_tokens", "prefix_reclaimed", "cow_copies",
+              "prefix_cached_pages", "shared_pages"):
+        assert k in st_
+    cached = st_["prefix_cached_pages"]
+    assert cached > 0
+    eng.reset_stats()
+    st2 = eng.stats()
+    assert st2["prefix_hits"] == 0 and st2["cow_copies"] == 0
+    # the cache itself (pages + index) survives a stats reset
+    assert st2["prefix_cached_pages"] == cached
