@@ -75,6 +75,24 @@ counters; greedy streams must be bitwise identical with sharing on and off
 (CI gate — prefix hits must not perturb streams). ``--json5`` writes the
 metrics — CI emits ``BENCH_5.json``.
 
+Section 6 — SLO-aware scheduling (``EngineConfig.scheduling``) on a
+two-class workload: a head of low-priority long generations with a few
+high-priority short requests buried late in the arrival order, served by
+
+  * fifo     — arrival order (the pre-policy engine, bitwise-gated against
+    the sequential reference);
+  * priority — high class admits first, FIFO within a class.
+
+Reports per-class p99 TTFT and SLO attainment; the CI gates are (a) fifo
+streams equal the sequential reference bitwise, (b) priority serves the
+same streams (admission order must not move greedy tokens), (c) priority
+cuts high-class p99 TTFT >= 2x vs fifo at comparable aggregate decode
+throughput. A second leg runs a shared-prefix workload where strangers
+evict the cached prefix between hits: the ``prefix_affinity`` modifier
+must convert those misses back into hits (more ``prefix_hit_tokens`` than
+fifo, streams unchanged). ``--json6`` writes the metrics — CI emits
+``BENCH_6.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -706,6 +724,226 @@ def bench_prefix(json_path=None):
     return results
 
 
+# ------------------------------------------------- SLO-aware scheduling
+
+SCHED_ARCH = "tinyllama-1.1b"
+S6_BUCKET = 16
+S6_SLOTS = 2
+S6_LOW_TOKENS = 24
+S6_HIGH_TOKENS = 8
+S6_REQUESTS = 16
+S6_HIGH_POSITIONS = (6, 9, 12, 15)   # high class arrives behind the herd
+S6_HIGH_CLASS = 5
+S6_DEADLINE_MS = 120_000.0           # observational SLO, not load-bearing
+
+# prefix-affinity leg: one slot over a pool small enough that each stranger
+# prompt evicts the cached shared prefix before the next hit arrives
+S6_PAGE = 64
+S6_SYSTEM = 192                      # 3 full shared pages
+S6_SUFFIX = 32
+S6_PFX_BUCKET = 256
+S6_PFX_TOKENS = 8
+S6_PFX_PAGES = 6
+S6_PFX_REQUESTS = 5                  # shared, stranger, shared, stranger, ...
+
+
+def _sched_specs(vocab):
+    from repro.runtime.engine import RequestSpec
+    import numpy as np
+    rng = np.random.default_rng(41)
+    specs = []
+    for i in range(S6_REQUESTS):
+        prompt = rng.integers(0, vocab, size=S6_BUCKET).tolist()
+        if i in S6_HIGH_POSITIONS:
+            specs.append(RequestSpec(prompt=prompt,
+                                     max_new_tokens=S6_HIGH_TOKENS,
+                                     priority_class=S6_HIGH_CLASS,
+                                     deadline_ms=S6_DEADLINE_MS))
+        else:
+            specs.append(RequestSpec(prompt=prompt,
+                                     max_new_tokens=S6_LOW_TOKENS))
+    return specs
+
+
+def _sched_serve(cfg, params, policy, specs):
+    import numpy as np
+
+    from repro.runtime.engine import Engine, EngineConfig
+
+    ecfg = EngineConfig(slots=S6_SLOTS, prompt_buckets=(S6_BUCKET,),
+                        max_seq=S6_BUCKET + S6_LOW_TOKENS,
+                        max_queue=2 * S6_REQUESTS, scheduling=policy)
+    engine = Engine(cfg, ecfg, params=params)
+    engine.run(specs)                    # warm (jit compile)
+    # throughput run: async hot loop, aggregate decode tokens/s
+    engine.reset_stats()
+    engine.run(specs)
+    tput = engine.stats()
+    # latency run: per-step device sync so TTFT timestamps are wall-clock
+    engine.reset_stats()
+    reqs = engine.run(specs, sync_per_step=True)
+    st = engine.stats()
+    streams = [engine.finalize_request(r) for r in reqs]
+
+    def p99_ttft(cls):
+        done = [r for r in reqs if r.state == "done"
+                and r.priority_class == cls]
+        return float(np.percentile(
+            np.asarray([r.t_first - r.t_submit for r in done]), 99) * 1e3)
+
+    return {
+        "policy": st["policy"],
+        "tokens_per_s": tput["tokens_per_s"],
+        "completed": st["completed"],
+        "preemptions": st["preemptions"],
+        "high_p99_ttft_ms": p99_ttft(S6_HIGH_CLASS),
+        "low_p99_ttft_ms": p99_ttft(0),
+        "slo_attainment": st["slo_attainment"],
+        "slo_by_class": {str(k): v for k, v in st["slo_by_class"].items()},
+    }, streams
+
+
+def _pfx_affinity_serve(cfg, params, policy, specs):
+    from repro.runtime.engine import Engine, EngineConfig
+
+    ecfg = EngineConfig(slots=1, prompt_buckets=(S6_PFX_BUCKET,),
+                        max_seq=S6_PFX_BUCKET + S6_PFX_TOKENS,
+                        kv_layout="paged", page_size=S6_PAGE,
+                        num_pages=S6_PFX_PAGES, prefix_cache=True,
+                        max_queue=2 * S6_PFX_REQUESTS, scheduling=policy)
+    engine = Engine(cfg, ecfg, params=params)
+    # cold run on purpose: the gate is a hit counter, not a timing, and a
+    # warm pass would pre-populate the prefix index the leg is about
+    reqs = engine.run(specs)
+    st = engine.stats()
+    return {
+        "policy": st["policy"],
+        "prefix_hit_tokens": st.get("prefix_hit_tokens", 0),
+        "prefix_hits": st.get("prefix_hits", 0),
+        "evictions": st.get("evictions", 0),
+    }, [engine.finalize_request(r) for r in reqs]
+
+
+def bench_scheduling(json_path=None):
+    """Declarative scheduling policies vs FIFO admission (section 6).
+
+    Priority must cut high-class p99 TTFT >= 2x without moving any greedy
+    token stream or losing aggregate throughput; prefix_affinity must turn
+    evicted-prefix misses back into hits. All three are CI gates.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import RequestSpec, serve_sequential
+    from repro.runtime.scheduling import FIFO, SchedulingPolicy
+
+    cfg = smoke_config(SCHED_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    specs = _sched_specs(cfg.vocab)
+
+    results = {}
+    streams = {}
+    policies = {
+        "fifo": FIFO,
+        "priority": SchedulingPolicy(kind="priority", preempt=True),
+    }
+    for name, policy in policies.items():
+        results[name], streams[name] = _sched_serve(cfg, params, policy,
+                                                    specs)
+
+    # the sequential reference materializes specs with the same rids (i+1)
+    seq = serve_sequential(cfg, params, specs,
+                           max_seq=S6_BUCKET + S6_LOW_TOKENS,
+                           prompt_buckets=(S6_BUCKET,), warmup=False)
+    seq_streams = [seq["tokens"][i + 1] for i in range(len(specs))]
+    fifo_match = streams["fifo"] == seq_streams
+    order_invariant = streams["priority"] == streams["fifo"]
+
+    ttft_gain = (results["fifo"]["high_p99_ttft_ms"]
+                 / max(results["priority"]["high_p99_ttft_ms"], 1e-9))
+    tput_ratio = (results["priority"]["tokens_per_s"]
+                  / max(results["fifo"]["tokens_per_s"], 1e-9))
+
+    # prefix-affinity leg: shared prefix interleaved with cache-evicting
+    # strangers; affinity admits the hits before the strangers trash them
+    rng = np.random.default_rng(43)
+    system = rng.integers(0, cfg.vocab, size=S6_SYSTEM).tolist()
+    pfx_specs = []
+    for i in range(S6_PFX_REQUESTS):
+        if i % 2 == 0:
+            prompt = system + rng.integers(0, cfg.vocab,
+                                           size=S6_SUFFIX).tolist()
+        else:
+            prompt = rng.integers(0, cfg.vocab,
+                                  size=S6_SYSTEM + S6_SUFFIX).tolist()
+        pfx_specs.append(RequestSpec(prompt=prompt,
+                                     max_new_tokens=S6_PFX_TOKENS))
+    pfx = {}
+    pfx_streams = {}
+    for name, policy in (("fifo", FIFO),
+                         ("affinity", SchedulingPolicy(prefix_affinity=True))):
+        pfx[name], pfx_streams[name] = _pfx_affinity_serve(cfg, params,
+                                                           policy, pfx_specs)
+    affinity_gain = (pfx["affinity"]["prefix_hit_tokens"]
+                     - pfx["fifo"]["prefix_hit_tokens"])
+    pfx_match = pfx_streams["affinity"] == pfx_streams["fifo"]
+
+    print("# serve_bench_sched: policy,requests,slots,completed,tok_s,"
+          "high_p99_ttft_ms,low_p99_ttft_ms,preemptions,slo_attainment")
+    for name, r in results.items():
+        print(f"{r['policy']},{S6_REQUESTS},{S6_SLOTS},{r['completed']},"
+              f"{r['tokens_per_s']:.1f},{r['high_p99_ttft_ms']:.1f},"
+              f"{r['low_p99_ttft_ms']:.1f},{r['preemptions']},"
+              f"{r['slo_attainment']}")
+    print(f"# priority admission: {ttft_gain:.2f}x high-class p99 TTFT vs "
+          f"fifo at {tput_ratio:.2f}x its decode tokens/s; prefix_affinity "
+          f"recovered {affinity_gain} hit tokens "
+          f"({pfx['fifo']['prefix_hit_tokens']} -> "
+          f"{pfx['affinity']['prefix_hit_tokens']}); streams identical: "
+          f"fifo_vs_sequential={fifo_match}, "
+          f"priority_vs_fifo={order_invariant}, affinity={pfx_match}")
+
+    if json_path:
+        payload = {
+            "bench": "slo_aware_scheduling",
+            "arch": cfg.name,
+            "requests": S6_REQUESTS,
+            "slots": S6_SLOTS,
+            "high_positions": list(S6_HIGH_POSITIONS),
+            "policies": results,
+            "high_p99_ttft_gain": ttft_gain,
+            "priority_vs_fifo_tokens_per_s": tput_ratio,
+            "prefix_affinity": pfx,
+            "prefix_affinity_hit_token_gain": affinity_gain,
+            "fifo_matches_sequential": fifo_match,
+            "priority_streams_match_fifo": order_invariant,
+            "affinity_streams_match_fifo": pfx_match,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+
+    if not (fifo_match and order_invariant and pfx_match):
+        # CI gate: a scheduling policy reorders admission, never tokens
+        raise SystemExit(f"serve_bench_sched: stream divergence "
+                         f"(fifo_vs_sequential={fifo_match}, "
+                         f"priority_vs_fifo={order_invariant}, "
+                         f"affinity={pfx_match})")
+    if ttft_gain < 2.0 or tput_ratio < 0.7:
+        # CI gate: the headline SLO claim — priority admission must pay off
+        # for the high class without tanking aggregate throughput
+        raise SystemExit(f"serve_bench_sched: priority gate failed "
+                         f"(high-class p99 TTFT gain {ttft_gain:.2f}x < 2.0x "
+                         f"or throughput ratio {tput_ratio:.2f} < 0.7)")
+    if affinity_gain <= 0:
+        # CI gate: prefix_affinity exists to win back evicted-prefix hits
+        raise SystemExit(f"serve_bench_sched: prefix_affinity recovered no "
+                         f"hit tokens (gain {affinity_gain})")
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -717,12 +955,15 @@ def main() -> None:
                     help="write speculative-decode metrics to this JSON file")
     ap.add_argument("--json5", default=None,
                     help="write prefix-caching metrics to this JSON file")
+    ap.add_argument("--json6", default=None,
+                    help="write scheduling metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
     bench_unified(json_path=args.json3)
     bench_spec(json_path=args.json4)
     bench_prefix(json_path=args.json5)
+    bench_scheduling(json_path=args.json6)
 
 
 if __name__ == "__main__":

@@ -80,6 +80,20 @@ def spec_verify() -> str:
         spec_decode=("tinyllama-1.1b-draft1", 3)))
 
 
+def sched_decode() -> str:
+    """A scheduled decode program: the engine's admission policy rendered as
+    ``sched(...)`` on the cache data attribute, next to ``mm``/``caps`` —
+    scheduling participates in plan identity like page geometry does."""
+    from repro.core.plans import build_program
+    from repro.core.printer import to_mlir
+    from repro.runtime.scheduling import SchedulingPolicy
+    policy = SchedulingPolicy(kind="priority", prefix_affinity=True)
+    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                                 page_geometry=(15, 4, 4),
+                                 prefix_sharing=True,
+                                 scheduling=policy.ext()))
+
+
 def train_step() -> str:
     """A training program: taskloop microbatching, the grads allreduce,
     state/grads data attributes."""
@@ -92,6 +106,7 @@ EXAMPLES: Dict[str, Callable[[], str]] = {
     "dense-decode": dense_decode,
     "paged-prefix-decode": paged_prefix_decode,
     "spec-verify": spec_verify,
+    "sched-decode": sched_decode,
     "train-step": train_step,
 }
 

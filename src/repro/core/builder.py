@@ -63,6 +63,21 @@ class PlanBuilder:
             extensions=ir.ext(**extensions))
         return self
 
+    def sched(self, symbol: str, **keys: Any) -> "PlanBuilder":
+        """Attach admission-scheduling annotation keys (rendered by the
+        printer as ``sched(...)`` — see ``printer.SCHED_EXT_KEYS``) to an
+        already-declared data attribute: scheduling policy rides on the
+        decode cache's attr next to ``mm(...)``/``caps(...)``, so it
+        participates in the program fingerprint the same way."""
+        attr = self._data.get(symbol)
+        if attr is None:
+            raise KeyError(f"sched() needs a prior data({symbol!r}) "
+                           f"declaration to annotate")
+        self._data[symbol] = ir.DataAttr(
+            **{**_asdict_shallow(attr),
+               "extensions": ir.ext_set(attr.extensions, **keys)})
+        return self
+
     def symbol(self, name: str, shape: Optional[Sequence[int]], dtype: str) -> "PlanBuilder":
         self._symbols[name] = (tuple(shape) if shape is not None else None, dtype)
         return self

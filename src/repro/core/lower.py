@@ -90,6 +90,11 @@ class LoweredPlan:
     # draft/target pairing (draft_arch_name, lookahead_k) when this is a
     # speculative verify plan (caps spec_verify/draft extensions), else None
     spec_decode: Optional[Tuple[str, int]] = None
+    # admission-scheduling annotation carried by the decode cache's data attr
+    # (runtime.scheduling -> core.plans -> printer sched(...) rendering), as
+    # canonical sorted (key, value) pairs; None when the program declares no
+    # policy (pre-scheduling programs keep their fingerprints)
+    scheduling: Optional[Tuple[Tuple[str, Any], ...]] = None
 
     # ------------------------------------------------------------------ meshes
 
@@ -187,9 +192,10 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
                 ir.ext_get(attr.extensions, "shared_prefix", False))
             break
 
-    from .printer import CAP_EXT_KEYS
+    from .printer import CAP_EXT_KEYS, SCHED_EXT_KEYS
     capabilities: Tuple[str, ...] = ()
     spec_decode = None
+    scheduling = None
     for attr in ir.find_all(prog, ir.DataAttr):
         if attr.symbol == "cache":
             capabilities = tuple(k for k in CAP_EXT_KEYS
@@ -198,6 +204,12 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
             if k is not None:
                 spec_decode = (str(ir.ext_get(attr.extensions, "draft", "")),
                                int(k))
+            sched_pairs = tuple(
+                (key, ir.ext_get(attr.extensions, key))
+                for key in SCHED_EXT_KEYS
+                if ir.ext_get(attr.extensions, key) is not None)
+            if sched_pairs:
+                scheduling = sched_pairs
             break
 
     batch_axes: list = []
@@ -239,7 +251,8 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         grad_reduce=grad_reduce, zero=zero, compression=compression,
         collectives=syncs, page_geometry=page_geometry,
         prefix_sharing=prefix_sharing,
-        capabilities=capabilities, spec_decode=spec_decode)
+        capabilities=capabilities, spec_decode=spec_decode,
+        scheduling=scheduling)
 
 
 # ----------------------------------------------------- explicit sync lowering

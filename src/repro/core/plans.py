@@ -174,7 +174,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   microbatches: Optional[int] = None,
                   page_geometry: Optional[Tuple[int, int, int]] = None,
                   prefix_sharing: bool = False,
-                  spec_decode: Optional[Tuple[str, int]] = None
+                  spec_decode: Optional[Tuple[str, int]] = None,
+                  scheduling: Optional[Dict[str, Any]] = None
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
 
@@ -201,6 +202,14 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     (``caps(spec_verify(k) draft(name))`` in the printed dialect) — so the
     verify plan fingerprints apart from the plain decode plan and the
     PlanCache never conflates them.
+
+    ``scheduling`` (decode only) attaches an admission-scheduling annotation
+    — ``runtime.scheduling.SchedulingPolicy.ext()`` — to the decode cache's
+    data attribute, rendered as ``sched(...)`` next to ``mm(...)`` /
+    ``caps(...)``: the order requests are admitted and preempted is a
+    declarative execution decision, so engines running different policies
+    fingerprint (and plan-cache) apart. ``None`` (the default) emits no
+    annotation and leaves every pre-scheduling fingerprint unchanged.
     """
     axes = mesh_axes(multi_pod)
     dp = dp_axis(multi_pod)
@@ -209,6 +218,14 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     paged = page_geometry is not None and shape.kind == "decode"
     spec = spec_decode if (spec_decode is not None
                            and shape.kind == "decode") else None
+    sched: Dict[str, Any] = {}
+    if scheduling is not None and shape.kind == "decode":
+        from .printer import SCHED_EXT_KEYS
+        bad = [k for k in scheduling if k not in SCHED_EXT_KEYS]
+        if bad:
+            raise ValueError(f"unknown scheduling annotation keys {bad}; "
+                             f"printable keys are {SCHED_EXT_KEYS}")
+        sched = dict(scheduling)
 
     b = PlanBuilder(f"{cfg.name}@{shape.name}")
     b.mesh(axes, teams=("pod",) if multi_pod else (),
@@ -282,6 +299,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                 mm["shared_prefix"] = True
             b.data("cache", mapping="tofrom", access="read-write",
                    allocator="paged_kv_alloc", **mm, **caps)
+            if sched:
+                b.sched("cache", **sched)
             # the page table IS the explicit data-movement plan: logical
             # position -> physical page, shipped to the device every step
             b.data("cache/page_table", mapping="to", access="read-only",
@@ -306,6 +325,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                 b.cow("cache/v_pages", allocator="paged_kv_alloc")
         elif shape.kind == "decode":
             b.data("cache", mapping="tofrom", access="read-write", **caps)
+            if sched:
+                b.sched("cache", **sched)
             if caps.get("needs_encoder_memory"):
                 # the per-slot encoder-memory buffer is an explicit decode
                 # input: filled once at admission, read-only every step

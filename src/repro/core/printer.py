@@ -89,6 +89,9 @@ class _Printer:
         caps = _cap_fields(a.extensions)
         if caps:
             fields.append(caps)
+        sched = _sched_fields(a.extensions)
+        if sched:
+            fields.append(sched)
         self.lines.append(
             f"  {name} = upir.parallel_data_info({', '.join(fields)})")
 
@@ -234,6 +237,29 @@ def _cap_fields(extensions) -> str:
             continue
         parts.append(key if v is True else f"{key}({v})")
     return f"caps({' '.join(parts)})" if parts else ""
+
+
+# Admission-scheduling keys (runtime.scheduling.SchedulingPolicy.ext())
+# rendered into the canonical text: the order requests are admitted to decode
+# slots — and which running sequence is preempted under pool pressure — is a
+# parallel execution decision like any other, so it is declared in the program
+# rather than hard-coded in the engine, and two engines with different
+# policies (fifo vs priority, different tenant weights) fingerprint apart in
+# the PlanCache. ``policy`` is the base discipline (fifo|priority|fair|sjf);
+# ``prefix_affinity`` marks prefix-cache-aware admission; ``preempt`` marks
+# priority preemption via eviction-by-recompute; ``tenants`` carries the
+# canonical (sorted) ``name:weight`` list for fair scheduling.
+SCHED_EXT_KEYS = ("policy", "prefix_affinity", "preempt", "tenants")
+
+
+def _sched_fields(extensions) -> str:
+    parts = []
+    for key in SCHED_EXT_KEYS:
+        v = ir.ext_get(extensions, key)
+        if v is None or v is False:
+            continue
+        parts.append(key if v is True else f"{key}({v})")
+    return f"sched({' '.join(parts)})" if parts else ""
 
 
 def _sanitize(s: str) -> str:

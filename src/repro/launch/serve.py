@@ -19,6 +19,14 @@ weights — greedy streams stay bitwise identical either way.
 All lowering + jit artifacts come from the process-wide PlanCache, so repeated
 launches in one process never re-run the pass pipeline.
 
+``--policy`` selects the admission scheduling policy (``fifo`` | ``priority``
+| ``fair`` | ``sjf``, see ``runtime.scheduling``); ``--priority`` cycles
+integer priority classes over the requests, ``--tenant`` cycles tenant names
+(``name`` or ``name:weight`` entries — weights feed the ``fair`` policy), and
+``--deadline-ms`` attaches a TTFT SLO so the engine reports per-class
+attainment. ``--prefix-affinity`` (with ``--prefix-cache``) admits requests
+whose prompt pages are already cached first.
+
 ``--sequential`` also runs the old one-request-at-a-time path for comparison.
 On the CPU container use --smoke.
 """
@@ -61,6 +69,22 @@ def main():
                          "identical prompt prefixes share ref-counted KV "
                          "pages copy-on-write and skip prefill compute; "
                          "token streams are unchanged bitwise")
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "priority", "fair", "sjf"),
+                    help="admission scheduling policy (runtime.scheduling)")
+    ap.add_argument("--prefix-affinity", action="store_true",
+                    help="admit requests whose prompt pages are already "
+                         "prefix-cached first (requires --prefix-cache)")
+    ap.add_argument("--tenant", default="default",
+                    help="comma-separated tenant names cycled over requests; "
+                         "'name:weight' entries set fair-policy weights")
+    ap.add_argument("--priority", default="0",
+                    help="comma-separated priority classes cycled over "
+                         "requests (higher admits first under --policy "
+                         "priority)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="TTFT SLO attached to every request (0 = none); "
+                         "attainment is reported per class")
     ap.add_argument("--sequential", action="store_true",
                     help="also time the pre-engine one-at-a-time path")
     args = ap.parse_args()
@@ -73,8 +97,10 @@ def main():
 
     from ..configs import config, smoke_config
     from ..models import api
-    from ..runtime.engine import Engine, EngineConfig, serve_sequential
+    from ..runtime.engine import (Engine, EngineConfig, RequestSpec,
+                                  serve_sequential)
     from ..runtime.sampling import SamplingParams
+    from ..runtime.scheduling import SchedulingPolicy
     from ..runtime.speculative import SpecConfig
 
     cfg = smoke_config(args.arch) if args.smoke else config(args.arch)
@@ -106,6 +132,22 @@ def main():
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (prefix sharing is page "
                  "aliasing)")
+    if args.prefix_affinity and not args.prefix_cache:
+        ap.error("--prefix-affinity requires --prefix-cache (affinity admits "
+                 "against the prefix index)")
+
+    tenants, weights = [], {}
+    for entry in args.tenant.split(","):
+        name, _, w = entry.strip().partition(":")
+        tenants.append(name)
+        if w:
+            weights[name] = float(w)
+    classes = [int(c) for c in args.priority.split(",")]
+    policy = SchedulingPolicy(
+        kind=args.policy, prefix_affinity=args.prefix_affinity,
+        tenant_weights=tuple(weights.items())
+        if args.policy == "fair" else ())
+
     engine = Engine(cfg, EngineConfig(slots=args.slots,
                                       prompt_buckets=(bucket,),
                                       max_seq=max_seq,
@@ -113,7 +155,8 @@ def main():
                                       else "dense",
                                       page_size=args.page_size,
                                       prefix_cache=args.prefix_cache,
-                                      spec_decode=spec_decode),
+                                      spec_decode=spec_decode,
+                                      scheduling=policy),
                     params=params, draft_params=draft_params)
 
     rng = np.random.default_rng(0)
@@ -124,20 +167,24 @@ def main():
         return (rng.normal(size=(cfg.encdec.enc_seq, cfg.d_model))
                 * 0.02).astype(np.float32)
 
-    def mk(prompt, tokens):
-        return engine.make_request(prompt, tokens, sampling=sampling,
-                                   eos_id=eos_id, encoder_input=frames())
+    def mk(prompt, tokens, i=0):
+        return RequestSpec(
+            prompt=tuple(prompt), max_new_tokens=tokens, sampling=sampling,
+            eos_id=eos_id, encoder_input=frames(),
+            tenant=tenants[i % len(tenants)],
+            priority_class=classes[i % len(classes)],
+            deadline_ms=args.deadline_ms or None)
 
-    requests = [
+    specs = [
         mk(rng.integers(0, cfg.vocab, size=args.prompt_len).tolist(),
-           args.tokens)
-        for _ in range(args.requests)]
+           args.tokens, i)
+        for i in range(args.requests)]
 
     # warm up (jit compile) outside the measured run
     engine.run([mk([1] * args.prompt_len, 2) for _ in range(args.slots)])
     engine.reset_stats()
 
-    engine.run(requests)
+    requests = engine.run(specs)
     st = engine.stats()
     mode = f"sampled(T={args.temperature},k={args.top_k},p={args.top_p})" \
         if sampling else "greedy"
@@ -146,10 +193,15 @@ def main():
                 f"k={spec_decode.lookahead_k})"
     print(f"engine: arch={cfg.name} caps={','.join(st['capabilities']) or '-'} "
           f"requests={args.requests} slots={args.slots} "
-          f"prompt={args.prompt_len} tokens={args.tokens} mode={mode}")
+          f"prompt={args.prompt_len} tokens={args.tokens} mode={mode} "
+          f"policy={st['policy']}")
     print(f"  completed={st['completed']} eos_finished={st['eos_finished']} "
           f"rejected={st['rejected']} decode_steps={st['decode_steps']} "
-          f"recycles={st['recycles']}")
+          f"recycles={st['recycles']} preemptions={st['preemptions']}")
+    if st.get("slo_attainment") is not None:
+        by = " ".join(f"class{c}={v:.2f}"
+                      for c, v in st["slo_by_class"].items())
+        print(f"  slo_attainment={st['slo_attainment']:.2f} {by}")
     if spec_decode:
         print(f"  spec_steps={st['spec_steps']} "
               f"acceptance_rate={st['acceptance_rate']:.2f} "

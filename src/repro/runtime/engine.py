@@ -83,8 +83,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
+import warnings
 from collections import OrderedDict, deque
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -97,15 +98,70 @@ from ..models.api import KernelSpec
 from ..models.layers import cache_copy_pages, cache_write_pages
 from .sampling import (GREEDY, SamplingParams, decode_select, request_key,
                        sample_tokens)
+from .scheduling import (FIFO, SchedulerState, SchedulingPolicy, select_index,
+                         victim as policy_victim, wants_preemption)
 from .speculative import SpecConfig, SpeculativeDecoder
 
 # ----------------------------------------------------------------- requests
 
 
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """What the caller wants generated — the validated, immutable half of a
+    request, with no engine state attached.
+
+    This is the single front door: ``Engine.submit(spec)`` (and
+    :func:`serve_sequential`) materialize a :class:`Request` from it, running
+    the engine-dependent checks (vocab range, encoder-input capability,
+    speculative-mode restrictions) at that point. The legacy
+    ``Engine.make_request(prompt, max_new_tokens, ...)`` kwarg pile survives
+    as a deprecated shim over this class.
+
+    Scheduling fields (consumed by ``runtime.scheduling``):
+
+    * ``tenant`` — fairness accounting bucket for the ``fair`` policy
+      (weighted per-tenant service); any non-empty string.
+    * ``priority_class`` — integer class for the ``priority`` policy; higher
+      admits first and may preempt strictly-lower running classes.
+    * ``deadline_ms`` — TTFT service-level objective in milliseconds; purely
+      observational (the engine reports per-class SLO attainment, it does not
+      drop late requests).
+    """
+
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+    sampling: Optional[SamplingParams] = None
+    eos_id: Optional[int] = None
+    encoder_input: Any = None
+    tenant: str = "default"
+    priority_class: int = 0
+    deadline_ms: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt",
+                           tuple(int(t) for t in self.prompt))
+        if not self.prompt:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {self.max_new_tokens}")
+        if not isinstance(self.tenant, str) or not self.tenant:
+            raise ValueError(f"tenant must be a non-empty string, "
+                             f"got {self.tenant!r}")
+        if not isinstance(self.priority_class, int):
+            raise ValueError(f"priority_class must be an int, "
+                             f"got {self.priority_class!r}")
+        if self.deadline_ms is not None and not self.deadline_ms > 0:
+            raise ValueError(f"deadline_ms must be > 0, "
+                             f"got {self.deadline_ms}")
+
+
 @dataclasses.dataclass
 class Request:
-    """One generation request; build via :meth:`Engine.make_request` (which
-    validates) rather than directly. ``tokens_out`` is filled by the engine.
+    """One generation request; build via :meth:`Engine.submit` with a
+    :class:`RequestSpec` (which validates) rather than directly.
+    ``tokens_out`` is filled by the engine.
 
     User-facing fields:
 
@@ -139,6 +195,9 @@ class Request:
     sampling: Optional[SamplingParams] = None   # None = greedy
     eos_id: Optional[int] = None   # stop (device-side) on this token
     encoder_input: Any = None      # [enc_seq, D] frames (needs_encoder_memory)
+    tenant: str = "default"        # fair-scheduling accounting bucket
+    priority_class: int = 0        # priority policy class (higher = sooner)
+    deadline_ms: Optional[float] = None   # TTFT SLO (observational)
     state: str = "new"             # new | queued | prefilling | active | done | rejected
     reason: str = ""               # rejection reason / "eos" completion
     bucket: int = 0                # padded prompt length
@@ -161,6 +220,10 @@ class Request:
     # when its last chunk lands
     _prefix_keys: Any = None
     _prefix_hit: int = 0
+    # content-addressed page chain keys cached for prefix-affinity admission
+    # probes; a pure function of the padded prompt + engine salt, so never
+    # reset (unlike _prefix_keys, whose hit count is admission state)
+    _chain_keys: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,6 +276,13 @@ class EngineConfig:
       (:class:`~repro.runtime.speculative.SpecConfig`); the verify program
       fingerprints the draft/target pairing, and every cache layout carries
       ``lookahead_k`` slack rows.
+    * ``scheduling`` *[plan key]* — declarative admission policy
+      (:class:`~repro.runtime.scheduling.SchedulingPolicy`); rendered into
+      the decode program as ``sched(...)``, so engines with different
+      policies fingerprint apart. The default (``fifo``) is bitwise-
+      compatible with the pre-policy engine. ``prefix_affinity`` requires
+      ``prefix_cache=True``; ``priority`` preemption engages only on the
+      paged layout (dense slots hold no pages to release).
     """
 
     slots: int = 4                     # fixed decode batch width
@@ -236,6 +306,8 @@ class EngineConfig:
     prefix_cache: bool = False         # paged only: share prompt-prefix pages
     # ---- speculative decoding (draft/verify mode; runtime.speculative)
     spec_decode: Optional[SpecConfig] = None
+    # ---- declarative admission scheduling (runtime.scheduling)
+    scheduling: SchedulingPolicy = FIFO
 
 
 # --------------------------------------------------------- free-list allocator
@@ -370,6 +442,20 @@ class PrefixIndex:
             pages.append(e["page"])
         return pages
 
+    def peek(self, keys: Sequence[bytes]) -> int:
+        """Length of the cached chain prefix WITHOUT touching LRU order.
+
+        The scheduler's ``prefix_affinity`` probe calls this on every queued
+        request each admission round; mutating recency there would let a
+        merely-probed (never admitted) chain crowd out genuinely reused ones.
+        """
+        n = 0
+        for k in keys:
+            if k not in self._entries:
+                break
+            n += 1
+        return n
+
     def tail_logits(self, key: bytes):
         """Cached last-position prefill logits for a complete-prompt key."""
         e = self._entries.get(key)
@@ -396,6 +482,106 @@ class PrefixIndex:
         if victim is None:
             return None
         return self._entries.pop(victim)["page"]
+
+
+# -------------------------------------------------------------------- stats
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Typed snapshot of the engine's counters (``Engine.stats()``).
+
+    Replaces the former ad-hoc dict. Sections that don't apply to the
+    engine's configuration — paged-KV, prefix-cache, speculative — leave
+    their fields ``None``. A read-only mapping view (``keys`` /
+    ``__getitem__`` / ``get`` / ``items`` / ``in`` / ``**unpacking``) is
+    provided for backward compatibility and skips ``None`` fields, so
+    ``dict(stats)`` looks exactly like the old dict did.
+
+    ``tokens_per_s`` is decode-only throughput: ``tokens_generated`` counts
+    decode-loop tokens (each request's first token comes from prefill logits
+    and is tallied in ``prefill_tokens`` instead).
+    """
+
+    # ---- always present
+    queue_depth: int = 0
+    active_slots: int = 0
+    slots: int = 0
+    kv_layout: str = "dense"
+    capabilities: List[str] = dataclasses.field(default_factory=list)
+    policy: str = "fifo"
+    decode_steps: int = 0
+    prefills: int = 0
+    recycles: int = 0
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    eos_finished: int = 0
+    rejected: int = 0
+    preemptions: int = 0
+    batch_occupancy: float = 0.0
+    peak_concurrent: int = 0
+    tokens_generated: int = 0
+    prefill_tokens: int = 0
+    elapsed_s: float = 0.0
+    tokens_per_s: float = 0.0
+    queue_depth_by_class: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    slo_attained: int = 0
+    slo_missed: int = 0
+    slo_attainment: Optional[float] = None     # None until a deadline ends
+    slo_by_class: Dict[int, float] = dataclasses.field(default_factory=dict)
+    plan_cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # ---- paged section
+    page_size: Optional[int] = None
+    num_pages: Optional[int] = None
+    pages_in_use: Optional[int] = None
+    peak_pages: Optional[int] = None
+    evictions: Optional[int] = None
+    prefill_chunks: Optional[int] = None
+    # ---- prefix-cache section
+    prefix_hits: Optional[int] = None
+    prefix_full_hits: Optional[int] = None
+    prefix_misses: Optional[int] = None
+    prefix_hit_tokens: Optional[int] = None
+    prefix_reclaimed: Optional[int] = None
+    cow_copies: Optional[int] = None
+    prefix_cached_pages: Optional[int] = None
+    shared_pages: Optional[int] = None
+    # ---- speculative section
+    spec_steps: Optional[int] = None
+    lookahead_k: Optional[int] = None
+    draft_arch: Optional[str] = None
+    draft_proposed: Optional[int] = None
+    draft_accepted: Optional[int] = None
+    acceptance_rate: Optional[float] = None
+
+    # ---- mapping view (backward compatibility with the former dict)
+    def keys(self) -> List[str]:
+        return [f.name for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None]
+
+    def __getitem__(self, key: str) -> Any:
+        try:
+            v = getattr(self, key)
+        except AttributeError:
+            raise KeyError(key) from None
+        if v is None:
+            raise KeyError(key)
+        return v
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.keys()
+
+    def get(self, key: str, default: Any = None) -> Any:
+        v = getattr(self, key, None)
+        return default if v is None else v
+
+    def items(self):
+        return [(k, getattr(self, k)) for k in self.keys()]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(self.items())
 
 
 # ------------------------------------------------------------------- engine
@@ -428,6 +614,16 @@ class Engine:
             raise ValueError("prefix_cache requires kv_layout='paged': "
                              "prefix sharing is page aliasing, and the dense "
                              "layout has no pages to alias")
+        self.policy = ecfg.scheduling
+        if not isinstance(self.policy, SchedulingPolicy):
+            raise ValueError(f"scheduling must be a SchedulingPolicy, "
+                             f"got {self.policy!r}")
+        if self.policy.prefix_affinity and not self.prefix_cache:
+            raise ValueError("prefix_affinity scheduling requires "
+                             "prefix_cache=True: affinity admits requests "
+                             "whose page chains hit the PrefixIndex first, "
+                             "and without the index there is nothing to hit")
+        self._sched_state = SchedulerState(self.policy)
         # speculative mode: the verify step writes K/V up to lookahead_k
         # positions past the last accepted token, so every cache layout
         # carries that many slack rows past the admission horizon
@@ -471,11 +667,15 @@ class Engine:
         from . import server
         self.shape = ShapeCfg(f"engine_b{ecfg.slots}", "decode",
                               ecfg.max_seq, ecfg.slots)
+        # the admission policy is part of the program: sched(...) renders
+        # next to mm()/caps() and participates in the fingerprint, so two
+        # engines differing only in scheduling never share a PlanCache entry
         self.plan = server.serving_plan(cfg, self.shape, backend=ecfg.backend,
                                         plan_cache=self.plan_cache,
                                         trace=self.trace,
                                         page_geometry=page_geom,
-                                        prefix_sharing=self.prefix_cache)
+                                        prefix_sharing=self.prefix_cache,
+                                        scheduling=self.policy.ext())
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
@@ -549,6 +749,12 @@ class Engine:
         self.topks_np = np.zeros((ecfg.slots,), np.int32)
         self.topps_np = np.ones((ecfg.slots,), np.float32)
         self.eos_np = np.full((ecfg.slots,), -1, np.int32)
+        self.presence_np = np.zeros((ecfg.slots,), np.float32)
+        self.frequency_np = np.zeros((ecfg.slots,), np.float32)
+        # per-slot on-device emission counts backing repetition penalties;
+        # reset at (re)admission, so eviction-by-recompute rebuilds the same
+        # counts trajectory and penalized streams replay exactly
+        self.counts = jnp.zeros((ecfg.slots, cfg.vocab), jnp.int32)
         self._policy_dev = None        # device copy, rebuilt only when dirty
         self.queue: Deque[Request] = deque()
         self.slots_req: List[Optional[Request]] = [None] * ecfg.slots
@@ -569,28 +775,37 @@ class Engine:
         cfg = self.cfg
 
         def step(params, cache, tokens, pos, keys, temps, topks, topps, eos,
-                 fin):
+                 fin, counts, presence, frequency):
             logits, cache = api.decode_step(cfg, params, cache,
                                             {"tokens": tokens, "pos": pos})
+            # the step's input token is the previously emitted one (prefill's
+            # first token on the first step): count it before selecting, so
+            # the penalty at position p sees every token emitted before p
+            counts = counts.at[jnp.arange(counts.shape[0]),
+                               tokens[:, 0]].add(1)
             nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
-                                     eos, fin, top_ps=topps)
-            return nxt, fin, cache
+                                     eos, fin, top_ps=topps, counts=counts,
+                                     presence=presence, frequency=frequency)
+            return nxt, fin, cache, counts
 
-        return jax.jit(step, donate_argnums=(1,))
+        return jax.jit(step, donate_argnums=(1, 10))
 
     def _build_decode_paged(self):
         cfg, kernel = self.cfg, self._kernel
 
         def step(params, pool, page_table, tokens, pos, keys, temps, topks,
-                 topps, eos, fin):
+                 topps, eos, fin, counts, presence, frequency):
             logits, pool = api.decode_step_paged(
                 cfg, params, pool, page_table,
                 {"tokens": tokens, "pos": pos}, kernel=kernel)
+            counts = counts.at[jnp.arange(counts.shape[0]),
+                               tokens[:, 0]].add(1)
             nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
-                                     eos, fin, top_ps=topps)
-            return nxt, fin, pool
+                                     eos, fin, top_ps=topps, counts=counts,
+                                     presence=presence, frequency=frequency)
+            return nxt, fin, pool, counts
 
-        return jax.jit(step, donate_argnums=(1,))
+        return jax.jit(step, donate_argnums=(1, 11))
 
     def _build_encode(self):
         cfg = self.cfg
@@ -733,19 +948,31 @@ class Engine:
     def make_request(self, prompt: Sequence[int], max_new_tokens: int, *,
                      sampling: Optional[SamplingParams] = None,
                      eos_id: Optional[int] = None,
-                     encoder_input=None) -> Request:
-        """Build a validated request. Degenerate inputs raise ``ValueError``
-        here, loudly, instead of being admitted into the slot loop."""
-        prompt = list(prompt)
-        if not prompt:
-            raise ValueError("empty prompt: a request must carry at least "
-                             "one prompt token")
-        if max_new_tokens < 1:
-            raise ValueError(f"max_new_tokens must be >= 1, "
-                             f"got {max_new_tokens}")
-        if eos_id is not None and not 0 <= eos_id < self.cfg.vocab:
-            raise ValueError(f"eos_id {eos_id} outside vocab "
+                     encoder_input=None, tenant: str = "default",
+                     priority_class: int = 0,
+                     deadline_ms: Optional[float] = None) -> Request:
+        """Deprecated shim over :class:`RequestSpec` — build a spec and call
+        :meth:`submit` with it instead; this kwarg pile only materializes
+        one for you."""
+        warnings.warn("Engine.make_request is deprecated; build a "
+                      "RequestSpec and Engine.submit(spec) it instead",
+                      DeprecationWarning, stacklevel=2)
+        return self._materialize(RequestSpec(
+            prompt=tuple(prompt), max_new_tokens=max_new_tokens,
+            sampling=sampling, eos_id=eos_id, encoder_input=encoder_input,
+            tenant=tenant, priority_class=priority_class,
+            deadline_ms=deadline_ms))
+
+    def _materialize(self, spec: RequestSpec) -> Request:
+        """RequestSpec -> validated Request: the engine-dependent half of
+        validation (vocab range, capability checks, speculative-mode
+        restrictions) plus rid assignment and the PRNG key snapshot.
+        Degenerate inputs raise ``ValueError`` here, loudly, instead of
+        being admitted into the slot loop."""
+        if spec.eos_id is not None and not 0 <= spec.eos_id < self.cfg.vocab:
+            raise ValueError(f"eos_id {spec.eos_id} outside vocab "
                              f"[0, {self.cfg.vocab})")
+        encoder_input = spec.encoder_input
         if self.spec.needs_encoder_memory:
             if encoder_input is None:
                 raise ValueError(
@@ -760,19 +987,41 @@ class Engine:
         elif encoder_input is not None:
             raise ValueError(f"family '{self.spec.key}' does not take "
                              f"encoder_input")
+        if self.spec_cfg is not None and spec.sampling is not None \
+                and spec.sampling.penalized:
+            raise ValueError(
+                "repetition penalties are not supported in speculative "
+                "mode: the verify step scores k+1 positions against one "
+                "count snapshot, which breaks the per-position penalty law")
         self._rid += 1
-        return Request(rid=self._rid, prompt=prompt,
-                       max_new_tokens=max_new_tokens, sampling=sampling,
-                       eos_id=eos_id, encoder_input=encoder_input,
-                       _key=request_key(sampling or GREEDY, self._rid))
+        return Request(rid=self._rid, prompt=list(spec.prompt),
+                       max_new_tokens=spec.max_new_tokens,
+                       sampling=spec.sampling, eos_id=spec.eos_id,
+                       encoder_input=encoder_input, tenant=spec.tenant,
+                       priority_class=spec.priority_class,
+                       deadline_ms=spec.deadline_ms,
+                       _key=request_key(spec.sampling or GREEDY, self._rid))
 
-    def submit(self, req: Request) -> bool:
-        """Admission control: bounded queue + horizon check. False = rejected.
+    def submit(self, req: Union[Request, RequestSpec]):
+        """Admission control: bounded queue + horizon check.
+
+        The structured entry point: given a :class:`RequestSpec`, the engine
+        materializes and enqueues a :class:`Request` and returns it (inspect
+        ``req.state``/``req.reason`` for rejection). The legacy path — an
+        already-materialized ``Request`` — returns ``bool``
+        (False = rejected), unchanged.
 
         Paged mode admits on the *prompt* footprint (overcommit) — the only
         hard caps are the per-sequence horizon and the request alone fitting
         the pool; transient exhaustion is handled later by eviction.
         """
+        if isinstance(req, RequestSpec):
+            mat = self._materialize(req)
+            self._submit(mat)
+            return mat
+        return self._submit(req)
+
+    def _submit(self, req: Request) -> bool:
         req.t_submit = time.perf_counter()
         self.submitted += 1
         bucket = next((b for b in sorted(self.ecfg.prompt_buckets)
@@ -821,6 +1070,11 @@ class Engine:
         self._admit_counter += 1
         req._admit_seq = self._admit_counter
         req.slot = i
+        self.admitted += 1
+        # fair scheduling charges the tenant's normalized service here, at
+        # admission — re-admission after eviction charges again, which is
+        # correct: the recompute consumes real service
+        self._sched_state.charge(req)
         # slot decode policy: PRNG key snapshot + sampling params + EOS id
         s = req.sampling or GREEDY
         self.keys_np[i] = req._key
@@ -828,6 +1082,10 @@ class Engine:
         self.topks_np[i] = s.top_k
         self.topps_np[i] = s.top_p
         self.eos_np[i] = -1 if req.eos_id is None else req.eos_id
+        self.presence_np[i] = s.presence_penalty
+        self.frequency_np[i] = s.frequency_penalty
+        # zeroed at (re)admission: eviction replay rebuilds the same counts
+        self.counts = self.counts.at[i].set(0)
         self._policy_dev = None
         self.trace.append({"event": "admit", "rid": req.rid, "slot": i,
                            "recycled": recycled})
@@ -864,12 +1122,31 @@ class Engine:
                 # the draft needs its own prompt KV before it can propose
                 self._spec.prefill_slot(self._padded_prompt(req), i)
 
+    def _next_index(self) -> Optional[int]:
+        """The admission policy's pick from the queue (None = empty). FIFO
+        always returns the head — exactly the old ``popleft`` order."""
+        probe = self._affinity_probe \
+            if self.policy.prefix_affinity and self.prefix_cache else None
+        return select_index(self.policy, self.queue,
+                            state=self._sched_state, prefix_hit=probe)
+
+    def _affinity_probe(self, req: Request) -> bool:
+        """Does this queued request's page chain currently hit the prefix
+        index? Non-mutating (no LRU promotion) — probing must not reorder
+        the cache the admission itself will consult."""
+        if req._chain_keys is None:
+            req._chain_keys = self.prefix_index.keys_for(
+                self._padded_prompt(req))
+        return self.prefix_index.peek(req._chain_keys) > 0
+
     def _admit_into_free_slots(self) -> None:
         if self.paged:
             return self._admit_paged()
         for i in range(self.ecfg.slots):
             while self.slots_req[i] is None and self.queue:
-                req = self.queue.popleft()
+                idx = self._next_index()
+                req = self.queue[idx]
+                del self.queue[idx]
                 self._mark_admitted(req, i)
                 nxt0, _, one = self._run_prefill(req, i)
                 self.cache = self._insert(self.cache, one, i)
@@ -882,14 +1159,37 @@ class Engine:
         return sum(1 for r in self.slots_req if r is not None) \
             + len(self._prefilling)
 
+    def _maybe_preempt(self, cand: Request) -> bool:
+        """Priority preemption: evict the policy's victim — the lowest-class
+        newest-admitted running request — to make room (slot and pages) for
+        a strictly higher-class queued candidate. Returns True when an
+        eviction happened (the caller retries admission). Only the paged
+        layout can preempt: eviction-by-recompute frees *pages*; a dense
+        slot's horizon reservation has nothing to hand back."""
+        if not self.paged:
+            return False
+        running = [r for r in self.slots_req if r is not None]
+        if not wants_preemption(self.policy, cand, running):
+            return False
+        if self._evict_victim():
+            self.preemptions += 1
+            return True
+        return False
+
     def _admit_paged(self) -> None:
         while self.queue:
+            idx = self._next_index()
+            req = self.queue[idx]
             i = next((s for s in range(self.ecfg.slots)
                       if self.slots_req[s] is None
                       and s not in self._prefilling), None)
             if i is None:
+                # every slot busy: a higher-priority candidate may preempt
+                # the lowest-class running request (the victim requeues at
+                # the head and the freed slot is retried immediately)
+                if self._maybe_preempt(req):
+                    continue
                 return
-            req = self.queue[0]
             # prefix caching: find the longest cached chain of the padded
             # prompt's pages and take references on the hits immediately —
             # a referenced page can't be reclaimed out from under us below
@@ -901,9 +1201,13 @@ class Engine:
                 self._reclaim_pages(short)
             if self.allocator.available < need + self._growth_reserve():
                 self.allocator.free(hits)  # back out the probe references
-                return                 # pool pressure: admit when pages free up
+                # pool pressure: priority may evict a lower class for its
+                # pages; anyone else waits for pages to free up
+                if self._maybe_preempt(req):
+                    continue
+                return
             pages = hits + self.allocator.alloc(need)
-            self.queue.popleft()
+            del self.queue[idx]
             self._slot_pages[i] = pages
             self.page_table_np[i, :] = 0
             self.page_table_np[i, :len(pages)] = pages
@@ -1090,7 +1394,7 @@ class Engine:
                 return got[0]
             if self.prefix_cache and self._reclaim_pages(1):
                 continue
-            if not self._evict_newest():
+            if not self._evict_victim():
                 raise RuntimeError(
                     "paged KV pool exhausted with no evictable "
                     "sequence")  # unreachable: admission caps size
@@ -1151,11 +1455,15 @@ class Engine:
                 self.page_table_np[i, j] = page
                 self.cow_copies += 1
 
-    def _evict_newest(self) -> bool:
+    def _evict_victim(self) -> bool:
+        """Evict one running request (recompute-on-readmit). The victim is
+        policy-chosen: newest-admitted under fifo/fair/sjf, lowest class
+        (newest within it) under priority — so preemption never sacrifices a
+        higher class to seat a lower one."""
         victims = [r for r in self.slots_req if r is not None]
         if not victims:
             return False
-        req = max(victims, key=lambda r: r._admit_seq)
+        req = policy_victim(self.policy, victims)
         i = req.slot
         # flush the device token log so the victim's partial stream can be
         # dropped (it will be recomputed identically on re-admission)
@@ -1175,6 +1483,8 @@ class Engine:
         self.eos_np[i] = -1
         self.temps_np[i] = 0.0
         self.topps_np[i] = 1.0
+        self.presence_np[i] = 0.0
+        self.frequency_np[i] = 0.0
         self._policy_dev = None
         # req._key is NOT reset: recompute-on-readmit replays the same
         # fold_in(key, pos) schedule, so sampled streams reproduce exactly
@@ -1221,6 +1531,18 @@ class Engine:
         if reason == "eos":
             req.reason = "eos"
             self.eos_finished += 1
+        if req.deadline_ms is not None and req.t_submit:
+            # the SLO clock measures time-to-first-token: admission latency is
+            # what scheduling controls (decode speed is the model's business)
+            tf = req.t_first or req.t_done
+            ok = (tf - req.t_submit) * 1e3 <= req.deadline_ms
+            if ok:
+                self.slo_attained += 1
+            else:
+                self.slo_missed += 1
+            by = self.slo_by_class.setdefault(req.priority_class,
+                                              [0, 0])
+            by[0 if ok else 1] += 1
         # the first token comes from prefill logits; only the decode loop's
         # tokens count toward decode throughput. EOS-finished requests count
         # the decode steps actually executed, not the max_new_tokens budget.
@@ -1234,6 +1556,8 @@ class Engine:
             self.eos_np[req.slot] = -1
             self.temps_np[req.slot] = 0.0
             self.topps_np[req.slot] = 1.0
+            self.presence_np[req.slot] = 0.0
+            self.frequency_np[req.slot] = 0.0
             self._policy_dev = None
         self.trace.append({"event": "finish", "rid": req.rid,
                            "slot": req.slot, "reason": reason})
@@ -1283,19 +1607,24 @@ class Engine:
                 self._policy_dev = (
                     jnp.asarray(self.keys_np), jnp.asarray(self.temps_np),
                     jnp.asarray(self.topks_np), jnp.asarray(self.topps_np),
-                    jnp.asarray(self.eos_np))
+                    jnp.asarray(self.eos_np), jnp.asarray(self.presence_np),
+                    jnp.asarray(self.frequency_np))
             if self._spec is not None:
                 self._spec_step(active)
             else:
-                policy = self._policy_dev + (self.finished,)
+                keys, temps, topks, topps, eos, presence, frequency = \
+                    self._policy_dev
                 if self.paged:
-                    nxt, self.finished, self.pool = self._decode(
+                    nxt, self.finished, self.pool, self.counts = self._decode(
                         self.params, self.pool, self._device_page_table(),
-                        self.tokens, jnp.asarray(self.pos), *policy)
+                        self.tokens, jnp.asarray(self.pos), keys, temps,
+                        topks, topps, eos, self.finished, self.counts,
+                        presence, frequency)
                 else:
-                    nxt, self.finished, self.cache = self._decode(
+                    nxt, self.finished, self.cache, self.counts = self._decode(
                         self.params, self.cache, self.tokens,
-                        jnp.asarray(self.pos), *policy)
+                        jnp.asarray(self.pos), keys, temps, topks, topps,
+                        eos, self.finished, self.counts, presence, frequency)
                 self.tokens = nxt[:, None]
                 rids = tuple(self.slots_req[i].rid
                              if self.slots_req[i] is not None
@@ -1329,7 +1658,8 @@ class Engine:
         multi-token emission), commits per-slot emissions clamped to each
         request's budget, handles EOS inline, and rolls back the paged tail
         so only accepted tokens stay committed."""
-        keys, temps, topks, topps, _eos = self._policy_dev
+        keys, temps, topks, topps, _eos, _presence, _frequency = \
+            self._policy_dev
         pos_dev = jnp.asarray(self.pos)
         if self.paged:
             out, n_acc, self.pool, self._spec.cache = self._spec._step(
@@ -1367,16 +1697,23 @@ class Engine:
                 self._rollback_pages(i)
         self.tokens = jnp.asarray(toks_np)
 
-    def run(self, requests: Sequence[Request] = (), *,
+    def run(self, requests: Sequence[Union[Request, RequestSpec]] = (), *,
             max_steps: int = 1_000_000,
             sync_per_step: bool = False) -> List[Request]:
-        """Submit ``requests`` and drive the engine until drained.
+        """Submit ``requests`` (``RequestSpec`` or already-materialized
+        ``Request``) and drive the engine until drained; returns the
+        materialized ``Request`` objects in submission order.
 
         ``sync_per_step`` blocks on the device each step so per-request
         timestamps (TTFT) are wall-clock-accurate — benchmark latency mode;
         throughput runs leave it off (the hot loop never syncs)."""
+        mats: List[Request] = []
         for r in requests:
-            self.submit(r)
+            if isinstance(r, RequestSpec):
+                mats.append(self.submit(r))
+            else:
+                self.submit(r)
+                mats.append(r)
         self._sync_each_step = sync_per_step
         t0 = time.perf_counter()
         steps = 0
@@ -1391,7 +1728,7 @@ class Engine:
         self._collect_tokens()
         self.trace.append({"event": "stats", **self.stats()})
         self._bound_state()
-        return list(requests)
+        return mats
 
     def _bound_state(self) -> None:
         """Keep a long-lived engine's memory flat: evict the oldest
@@ -1444,9 +1781,14 @@ class Engine:
         self.recycles = 0
         self.rejected = 0
         self.submitted = 0
+        self.admitted = 0
         self.completed = 0
         self.eos_finished = 0
         self.evictions = 0
+        self.preemptions = 0
+        self.slo_attained = 0
+        self.slo_missed = 0
+        self.slo_by_class: Dict[int, List[int]] = {}
         self.tokens_generated = 0
         self.prefill_tokens = 0
         self.peak_concurrent = 0
@@ -1460,79 +1802,98 @@ class Engine:
         self._occupancy_sum = 0
         self.elapsed_s = 0.0
 
-    def stats(self) -> Dict[str, Any]:
+    def stats(self) -> EngineStats:
+        """Typed counter snapshot (``EngineStats``). The mapping view keeps
+        the old dict-style reads (``stats()["decode_steps"]``) working."""
         occ = (self._occupancy_sum / self.decode_steps / self.ecfg.slots
                if self.decode_steps else 0.0)
-        out = {
-            "queue_depth": len(self.queue),
-            "active_slots": sum(1 for r in self.slots_req if r is not None),
-            "slots": self.ecfg.slots,
-            "kv_layout": self.ecfg.kv_layout,
-            "capabilities": list(self.spec.capabilities),
-            "decode_steps": self.decode_steps,
-            "prefills": self.prefills,
-            "recycles": self.recycles,
-            "submitted": self.submitted,
-            "completed": self.completed,
-            "eos_finished": self.eos_finished,
-            "rejected": self.rejected,
-            "batch_occupancy": occ,
-            "peak_concurrent": self.peak_concurrent,
-            "tokens_generated": self.tokens_generated,
-            "prefill_tokens": self.prefill_tokens,
-            "elapsed_s": self.elapsed_s,
-            "tokens_per_s": (self.tokens_generated / self.elapsed_s
-                             if self.elapsed_s else 0.0),
-            "plan_cache": self.plan_cache.stats(),
-        }
+        depth_by_class: Dict[int, int] = {}
+        for r in self.queue:
+            depth_by_class[r.priority_class] = \
+                depth_by_class.get(r.priority_class, 0) + 1
+        slo_total = self.slo_attained + self.slo_missed
+        out = EngineStats(
+            queue_depth=len(self.queue),
+            active_slots=sum(1 for r in self.slots_req if r is not None),
+            slots=self.ecfg.slots,
+            kv_layout=self.ecfg.kv_layout,
+            capabilities=list(self.spec.capabilities),
+            policy=self.policy.describe(),
+            decode_steps=self.decode_steps,
+            prefills=self.prefills,
+            recycles=self.recycles,
+            submitted=self.submitted,
+            admitted=self.admitted,
+            completed=self.completed,
+            eos_finished=self.eos_finished,
+            rejected=self.rejected,
+            preemptions=self.preemptions,
+            batch_occupancy=occ,
+            peak_concurrent=self.peak_concurrent,
+            tokens_generated=self.tokens_generated,
+            prefill_tokens=self.prefill_tokens,
+            elapsed_s=self.elapsed_s,
+            tokens_per_s=(self.tokens_generated / self.elapsed_s
+                          if self.elapsed_s else 0.0),
+            queue_depth_by_class=depth_by_class,
+            slo_attained=self.slo_attained,
+            slo_missed=self.slo_missed,
+            slo_attainment=(self.slo_attained / slo_total
+                            if slo_total else None),
+            slo_by_class={c: ok / (ok + miss)
+                          for c, (ok, miss) in sorted(
+                              self.slo_by_class.items())},
+            plan_cache=self.plan_cache.stats(),
+        )
         if self.paged:
-            out.update({
-                "page_size": self.ecfg.page_size,
-                "num_pages": self.num_pages,
-                "pages_in_use": self.allocator.in_use,
-                "peak_pages": self.peak_pages,
-                "evictions": self.evictions,
-                "prefill_chunks": self.prefill_chunks,
-            })
+            out.page_size = self.ecfg.page_size
+            out.num_pages = self.num_pages
+            out.pages_in_use = self.allocator.in_use
+            out.peak_pages = self.peak_pages
+            out.evictions = self.evictions
+            out.prefill_chunks = self.prefill_chunks
         if self.prefix_cache:
-            out.update({
-                "prefix_hits": self.prefix_hits,
-                "prefix_full_hits": self.prefix_full_hits,
-                "prefix_misses": self.prefix_misses,
-                "prefix_hit_tokens": self.prefix_hit_tokens,
-                "prefix_reclaimed": self.prefix_reclaimed,
-                "cow_copies": self.cow_copies,
-                "prefix_cached_pages": len(self.prefix_index),
-                "shared_pages": self.allocator.shared_pages,
-            })
+            out.prefix_hits = self.prefix_hits
+            out.prefix_full_hits = self.prefix_full_hits
+            out.prefix_misses = self.prefix_misses
+            out.prefix_hit_tokens = self.prefix_hit_tokens
+            out.prefix_reclaimed = self.prefix_reclaimed
+            out.cow_copies = self.cow_copies
+            out.prefix_cached_pages = len(self.prefix_index)
+            out.shared_pages = self.allocator.shared_pages
         if self.spec_cfg is not None:
-            out.update({
-                "spec_steps": self.spec_steps,
-                "lookahead_k": self.spec_cfg.lookahead_k,
-                "draft_arch": self.spec_cfg.draft_config.name,
-                "draft_proposed": self.draft_proposed,
-                "draft_accepted": self.draft_accepted,
-                "acceptance_rate": (self.draft_accepted / self.draft_proposed
-                                    if self.draft_proposed else 0.0),
-            })
+            out.spec_steps = self.spec_steps
+            out.lookahead_k = self.spec_cfg.lookahead_k
+            out.draft_arch = self.spec_cfg.draft_config.name
+            out.draft_proposed = self.draft_proposed
+            out.draft_accepted = self.draft_accepted
+            out.acceptance_rate = (self.draft_accepted / self.draft_proposed
+                                   if self.draft_proposed else 0.0)
         return out
 
 
 # ------------------------------------------------------- sequential baseline
 
 
-def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
+def serve_sequential(cfg: ArchConfig, params,
+                     requests: Sequence[Union[Request, RequestSpec]], *,
                      max_seq: int, prompt_buckets: Tuple[int, ...] = (16, 32, 64),
                      warmup: bool = True) -> Dict[str, Any]:
     """The pre-engine path: one request at a time, B=1 prefill + B=1 decode
     loop. Pads prompts to the same buckets as the engine so token streams are
     comparable; ``warmup`` compiles both steps before the timed region.
 
+    Accepts :class:`RequestSpec` entries (materialized here with
+    ``rid = position + 1`` — exactly the rids a fresh :class:`Engine` would
+    assign the same sequence, so PRNG key schedules line up) or
+    already-materialized ``Request`` objects.
+
     Speaks the same decode API as the engine — per-request
-    ``SamplingParams`` / ``eos_id`` through the shared ``sample_tokens`` key
-    schedule, and encoder-decoder requests via their ``encoder_input``
-    frames — so it doubles as the reference for engine stream equality,
-    greedy *and* sampled.
+    ``SamplingParams`` / ``eos_id`` (including repetition penalties, via the
+    same input-token count-then-select order as the engine's decode step)
+    through the shared ``sample_tokens`` key schedule, and encoder-decoder
+    requests via their ``encoder_input`` frames — so it doubles as the
+    reference for engine stream equality, greedy *and* sampled.
 
     Mirrors engine accounting: over-horizon requests are marked rejected and
     excluded from throughput (not silently served as empty), and
@@ -1540,6 +1901,19 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
     request comes from prefill logits and is tallied in ``prefill_tokens``).
     Returns per-request tokens + aggregate throughput."""
     spec = api.family_spec(cfg)
+    mats: List[Request] = []
+    for i, r in enumerate(requests):
+        if isinstance(r, RequestSpec):
+            mats.append(Request(
+                rid=i + 1, prompt=list(r.prompt),
+                max_new_tokens=r.max_new_tokens, sampling=r.sampling,
+                eos_id=r.eos_id, encoder_input=r.encoder_input,
+                tenant=r.tenant, priority_class=r.priority_class,
+                deadline_ms=r.deadline_ms,
+                _key=request_key(r.sampling or GREEDY, i + 1)))
+        else:
+            mats.append(r)
+    requests = mats
 
     def pre(params, batch, key, temp, topk, topp):
         logits, cache = api.prefill(cfg, params, batch, s_max=max_seq)
@@ -1548,15 +1922,22 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
                             temp[None], topk[None], topp[None])
         return nxt, cache
 
-    def dec(params, cache, tokens, pos, key, temp, topk, topp):
+    def dec(params, cache, tokens, pos, key, temp, topk, topp, counts,
+            presence, frequency):
         logits, cache = api.decode_step(cfg, params, cache,
                                         {"tokens": tokens, "pos": pos})
+        # count the step's input token (the previous emission) before
+        # selecting — the same order as the engine's decode step, so
+        # penalized streams agree bitwise
+        counts = counts.at[jnp.arange(1), tokens[:, 0]].add(1)
         nxt = sample_tokens(logits[:, -1], key[None], pos,
-                            temp[None], topk[None], topp[None])
-        return nxt, cache
+                            temp[None], topk[None], topp[None],
+                            counts=counts, presence=presence[None],
+                            frequency=frequency[None])
+        return nxt, cache, counts
 
     prefill_fn = jax.jit(pre)
-    decode_fn = jax.jit(dec, donate_argnums=(1,))
+    decode_fn = jax.jit(dec, donate_argnums=(1, 8))
 
     def batch_for(tokens_row, req):
         batch = {"tokens": jnp.asarray(tokens_row)[None, :]}
@@ -1568,7 +1949,9 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
         s = req.sampling or GREEDY
         key = req._key if req._key is not None else request_key(s, req.rid)
         return (jnp.asarray(key), jnp.float32(s.temperature),
-                jnp.int32(s.top_k), jnp.float32(s.top_p))
+                jnp.int32(s.top_k), jnp.float32(s.top_p),
+                jnp.float32(s.presence_penalty),
+                jnp.float32(s.frequency_penalty))
 
     if warmup and requests:
         by_bucket = {}
@@ -1578,11 +1961,14 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             if b is not None:
                 by_bucket.setdefault(b, r)
         for b, r in by_bucket.items():
-            k, t, tk, tp = policy(r)
+            k, t, tk, tp, pp, fp = policy(r)
             nxt, cache = prefill_fn(params, batch_for(np.zeros(b, np.int32), r),
                                     k, t, tk, tp)
-            nxt, cache = decode_fn(params, cache, nxt[:, None],
-                                   jnp.full((1,), b, jnp.int32), k, t, tk, tp)
+            nxt, cache, _ = decode_fn(params, cache, nxt[:, None],
+                                      jnp.full((1,), b, jnp.int32), k, t,
+                                      tk, tp,
+                                      jnp.zeros((1, cfg.vocab), jnp.int32),
+                                      pp, fp)
             jax.block_until_ready(nxt)
 
     outputs: Dict[int, List[int]] = {}
@@ -1606,9 +1992,10 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
             continue
         toks = np.zeros((bucket,), np.int32)
         toks[:len(req.prompt)] = np.asarray(req.prompt, np.int32)
-        k, t, tk, tp = policy(req)
+        k, t, tk, tp, pp, fp = policy(req)
         nxt, cache = prefill_fn(params, batch_for(toks, req), k, t, tk, tp)
         gen = [nxt]
+        counts = jnp.zeros((1, cfg.vocab), jnp.int32)
         # the sequential path syncs per token only when a request opts into
         # EOS (it must know when to stop); the engine never has to
         hit_eos = req.eos_id is not None and \
@@ -1616,8 +2003,9 @@ def serve_sequential(cfg: ArchConfig, params, requests: Sequence[Request], *,
         if not hit_eos:
             for i in range(req.max_new_tokens - 1):
                 pos = jnp.full((1,), bucket + i, jnp.int32)
-                nxt, cache = decode_fn(params, cache, gen[-1][:, None], pos,
-                                       k, t, tk, tp)
+                nxt, cache, counts = decode_fn(params, cache, gen[-1][:, None],
+                                               pos, k, t, tk, tp, counts,
+                                               pp, fp)
                 gen.append(nxt)
                 if req.eos_id is not None and \
                         int(np.asarray(nxt)[0]) == req.eos_id:

@@ -38,13 +38,21 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
     """Per-request decode policy. ``temperature <= 0`` means greedy (then
-    ``top_k``/``top_p`` are ignored); ``top_k == 0`` samples the full
-    vocabulary; ``top_p == 1.0`` disables the nucleus filter."""
+    ``top_k``/``top_p`` are ignored, but repetition penalties still apply —
+    penalized greedy is the argmax of the penalized logits); ``top_k == 0``
+    samples the full vocabulary; ``top_p == 1.0`` disables the nucleus
+    filter. ``presence_penalty`` subtracts a flat penalty from every token
+    the request has already emitted; ``frequency_penalty`` subtracts
+    proportionally to each token's emission count (both applied to the raw
+    logits before temperature/top-k/top-p, backed by the engine's per-slot
+    on-device count buffer)."""
 
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    presence_penalty: float = 0.0
+    frequency_penalty: float = 0.0
 
     def __post_init__(self):
         if self.temperature < 0:
@@ -53,10 +61,18 @@ class SamplingParams:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        for name in ("presence_penalty", "frequency_penalty"):
+            v = getattr(self, name)
+            if not -2.0 <= v <= 2.0:
+                raise ValueError(f"{name} must be in [-2, 2], got {v}")
 
     @property
     def greedy(self) -> bool:
         return self.temperature <= 0
+
+    @property
+    def penalized(self) -> bool:
+        return self.presence_penalty != 0.0 or self.frequency_penalty != 0.0
 
 
 GREEDY = SamplingParams()
@@ -129,18 +145,45 @@ def masked_probs(logits, temps, top_ks, top_ps=None):
     return jnp.where((temps <= 0)[:, None], greedy, p)
 
 
-def sample_tokens(logits, keys, pos, temps, top_ks, top_ps=None):
+def apply_penalties(lg, counts, presence, frequency):
+    """Repetition-penalized logits: f32 [B, V].
+
+    ``counts`` [B, V] int32 per-row emission counts (the engine's per-slot
+    on-device buffer), ``presence``/``frequency`` [B] f32. Standard additive
+    form: ``lg - presence * 1[count > 0] - frequency * count``, applied to
+    the raw logits before temperature scaling and top-k/top-p masking — so
+    penalties reshape the greedy argmax too. Batches with both penalties off
+    everywhere (the default) skip the arithmetic through a ``lax.cond`` and
+    return ``lg`` bitwise-unchanged.
+    """
+    def penalize(x):
+        c = counts.astype(jnp.float32)
+        return (x - presence[:, None] * (c > 0).astype(jnp.float32)
+                - frequency[:, None] * c)
+
+    return jax.lax.cond(
+        jnp.all((presence == 0.0) & (frequency == 0.0)),
+        lambda x: x, penalize, lg)
+
+
+def sample_tokens(logits, keys, pos, temps, top_ks, top_ps=None,
+                  counts=None, presence=None, frequency=None):
     """Select one token per row. All inputs are per-row (batch-major):
 
     logits [B, V] (any float dtype), keys [B, 2] uint32, pos [B] int32,
     temps [B] float32, top_ks [B] int32, top_ps [B] float32 or None.
-    Returns int32 [B].
+    Optional repetition penalties: counts [B, V] int32 emission counts with
+    presence/frequency [B] f32 (see :func:`apply_penalties`); all three must
+    be given together or not at all. Returns int32 [B].
 
     Rows with ``temps <= 0`` take the greedy argmax (bitwise the pre-sampling
-    path); others sample from temperature-scaled, top-k/top-p-masked logits
-    via the Gumbel-max trick keyed by ``fold_in(key, pos)``.
+    path when penalties are off); others sample from temperature-scaled,
+    top-k/top-p-masked logits via the Gumbel-max trick keyed by
+    ``fold_in(key, pos)``.
     """
     lg = logits.astype(jnp.float32)
+    if counts is not None:
+        lg = apply_penalties(lg, counts, presence, frequency)
     gtok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     V = lg.shape[-1]
 
@@ -158,15 +201,19 @@ def sample_tokens(logits, keys, pos, temps, top_ks, top_ps=None):
 
 
 def decode_select(logits, keys, pos, temps, top_ks, eos_ids, finished,
-                  top_ps=None):
+                  top_ps=None, counts=None, presence=None, frequency=None):
     """One hot-loop selection step: sample, then fold the EOS finished mask.
 
     ``eos_ids`` [B] int32 with -1 meaning "no EOS for this row"; ``finished``
-    [B] bool. A finished row keeps emitting its EOS token (the stream is
-    frozen device-side; the host truncates at finalize), and a row that just
-    emitted its EOS becomes finished. Returns (tokens int32 [B], finished).
+    [B] bool; ``counts``/``presence``/``frequency`` the optional repetition-
+    penalty inputs of :func:`sample_tokens` (the caller owns the counts
+    buffer and its updates). A finished row keeps emitting its EOS token (the
+    stream is frozen device-side; the host truncates at finalize), and a row
+    that just emitted its EOS becomes finished. Returns
+    (tokens int32 [B], finished).
     """
-    nxt = sample_tokens(logits, keys, pos, temps, top_ks, top_ps)
+    nxt = sample_tokens(logits, keys, pos, temps, top_ks, top_ps,
+                        counts=counts, presence=presence, frequency=frequency)
     fill = jnp.where(eos_ids >= 0, eos_ids, 0).astype(jnp.int32)
     nxt = jnp.where(finished, fill, nxt)
     finished = finished | ((eos_ids >= 0) & (nxt == eos_ids))

@@ -30,7 +30,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  trace: Optional[list] = None,
                  page_geometry: Optional[Tuple[int, int, int]] = None,
                  prefix_sharing: bool = False,
-                 spec_decode: Optional[Tuple[str, int]] = None
+                 spec_decode: Optional[Tuple[str, int]] = None,
+                 scheduling: Optional[Dict[str, Any]] = None
                  ) -> LoweredPlan:
     """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
     LoweredPlan, via the PlanCache.
@@ -45,13 +46,17 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     fingerprints. ``spec_decode=(draft_name, k)`` builds the speculative
     *verify* program instead of the plain decode step; the pairing
     fingerprints via ``caps(spec_verify(k) draft(name))``.
+    ``scheduling`` (a ``SchedulingPolicy.ext()`` dict) annotates the decode
+    program with its admission policy — rendered as ``sched(...)`` and
+    fingerprinted, so engines with different policies never share a plan.
     """
     from ..core.plans import build_program
     cache = plan_cache if plan_cache is not None else default_plan_cache()
     mesh_shape = tuple(mesh.shape.items()) if mesh is not None else None
     prog = build_program(cfg, shape, page_geometry=page_geometry,
                          prefix_sharing=prefix_sharing,
-                         spec_decode=spec_decode)
+                         spec_decode=spec_decode,
+                         scheduling=scheduling)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)
 

@@ -52,15 +52,19 @@ def test_upir_text_examples_cover_the_features_they_claim(examples):
     verify = rendered["spec-verify"]
     assert "upir.kernel @spec_verify" in verify
     assert re.search(r"caps\(pageable spec_verify\(\d+\) draft\(", verify)
+    sched = rendered["sched-decode"]
+    assert "sched(policy(priority) prefix_affinity preempt)" in sched
+    assert "caps(pageable), sched(" in sched   # sched renders after caps
     train = rendered["train-step"]
     assert "upir.kernel @train_step" in train
     assert "upir.sync allreduce" in train
 
 
 def test_every_fingerprinted_mm_and_cap_key_is_documented():
-    from repro.core.printer import CAP_EXT_KEYS, MM_EXT_KEYS
+    from repro.core.printer import (CAP_EXT_KEYS, MM_EXT_KEYS,
+                                    SCHED_EXT_KEYS)
     spec_text = (DOCS / "UPIR_TEXT.md").read_text()
-    for key in MM_EXT_KEYS + CAP_EXT_KEYS:
+    for key in MM_EXT_KEYS + CAP_EXT_KEYS + SCHED_EXT_KEYS:
         assert f"`{key}" in spec_text, (
             f"printer key '{key}' participates in the program fingerprint "
             f"but is not documented in docs/UPIR_TEXT.md")

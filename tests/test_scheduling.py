@@ -1,0 +1,417 @@
+"""SchedulingPolicy: declarative admission scheduling + RequestSpec/EngineStats.
+
+Pure property tests (``_hyp``: hypothesis or its deterministic fallback) over
+``select_index``/``victim`` — fifo head-of-queue, priority never reordering
+within a class, fair starvation-freedom — plus engine-in-the-loop checks:
+fifo streams bitwise-identical to the sequential reference, priority
+preemption replaying evicted sampled/penalized streams exactly, prefix
+affinity converting re-prefills into page shares, and the policy
+fingerprinting into the UPIR program text.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import ShapeCfg, smoke_config
+from repro.core.lower import PlanCache
+from repro.core.plans import build_program
+from repro.core.printer import program_fingerprint, to_mlir
+from repro.models import api
+from repro.runtime.engine import (Engine, EngineConfig, EngineStats,
+                                  RequestSpec, serve_sequential)
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.scheduling import (FIFO, SchedulerState, SchedulingPolicy,
+                                      select_index, victim, wants_preemption)
+
+CFG = smoke_config("tinyllama-1.1b")
+BUCKET = 8
+TOKENS = 6
+MAX_SEQ = 16
+PAGE = 4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def prompts(n, length=BUCKET, seed=0):
+    rng = np.random.default_rng(seed)
+    return [tuple(rng.integers(0, CFG.vocab, size=length).tolist())
+            for _ in range(n)]
+
+
+# ------------------------------------------------------------- policy spec
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="kind"):
+        SchedulingPolicy(kind="lifo")
+    with pytest.raises(ValueError, match="tenant_weights"):
+        SchedulingPolicy(kind="fifo", tenant_weights=(("a", 1.0),))
+    with pytest.raises(ValueError, match="duplicate"):
+        SchedulingPolicy(kind="fair",
+                         tenant_weights=(("a", 1.0), ("a", 2.0)))
+    with pytest.raises(ValueError, match="finite"):
+        SchedulingPolicy(kind="fair", tenant_weights=(("a", 0.0),))
+    # canonicalization: weights sort by tenant name
+    p = SchedulingPolicy(kind="fair",
+                         tenant_weights=(("b", 2.0), ("a", 1.0)))
+    assert p.tenant_weights == (("a", 1.0), ("b", 2.0))
+    assert p.weight("a") == 1.0 and p.weight("zz") == 1.0
+
+
+def test_policy_ext_rendering():
+    assert SchedulingPolicy().ext() == {"policy": "fifo"}
+    assert SchedulingPolicy(kind="priority").ext() == \
+        {"policy": "priority", "preempt": True}
+    assert SchedulingPolicy(kind="priority", preempt=False).ext() == \
+        {"policy": "priority"}
+    fair = SchedulingPolicy(kind="fair", prefix_affinity=True,
+                            tenant_weights=(("b", 2.0), ("a", 1.5)))
+    assert fair.ext() == {"policy": "fair", "prefix_affinity": True,
+                          "tenants": "a:1.5,b:2"}
+    assert fair.describe() == "fair+tenants(a:1.5,b:2)+prefix_affinity"
+
+
+def test_requestspec_validation():
+    with pytest.raises(ValueError, match="empty prompt"):
+        RequestSpec(prompt=(), max_new_tokens=2)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        RequestSpec(prompt=(1,), max_new_tokens=0)
+    with pytest.raises(ValueError, match="tenant"):
+        RequestSpec(prompt=(1,), max_new_tokens=2, tenant="")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        RequestSpec(prompt=(1,), max_new_tokens=2, deadline_ms=0.0)
+    spec = RequestSpec(prompt=[3, 1.0, 2], max_new_tokens=2)
+    assert spec.prompt == (3, 1, 2)          # coerced to int tuple
+
+
+def test_sampling_penalty_validation():
+    with pytest.raises(ValueError, match="presence_penalty"):
+        SamplingParams(temperature=1.0, presence_penalty=3.0)
+    with pytest.raises(ValueError, match="frequency_penalty"):
+        SamplingParams(temperature=1.0, frequency_penalty=-2.5)
+    assert not SamplingParams(temperature=1.0).penalized
+    assert SamplingParams(temperature=1.0, presence_penalty=0.1).penalized
+
+
+# --------------------------------------------------- pure selection properties
+
+
+@dataclasses.dataclass
+class FakeReq:
+    rid: int
+    tenant: str = "default"
+    priority_class: int = 0
+    bucket: int = 8
+    max_new_tokens: int = 4
+    _admit_seq: int = 0
+
+
+fake_reqs = st.composite(lambda draw: [
+    FakeReq(rid=i,
+            tenant=draw(st.sampled_from(["a", "b", "c"])),
+            priority_class=draw(st.integers(min_value=0, max_value=3)),
+            bucket=draw(st.sampled_from([4, 8, 16])),
+            max_new_tokens=draw(st.integers(min_value=1, max_value=8)))
+    for i in range(draw(st.integers(min_value=1, max_value=9)))])()
+
+
+@settings(max_examples=25, deadline=None)
+@given(fake_reqs)
+def test_fifo_always_selects_head(queue):
+    assert select_index(FIFO, queue) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(fake_reqs)
+def test_priority_never_reorders_within_class(queue):
+    """Draining a static queue under ``priority`` admits each class's
+    requests in their original submission order (FIFO within class)."""
+    policy = SchedulingPolicy(kind="priority")
+    q = list(queue)
+    admitted = []
+    while q:
+        i = select_index(policy, q)
+        admitted.append(q.pop(i))
+    for cls in {r.priority_class for r in queue}:
+        want = [r.rid for r in queue if r.priority_class == cls]
+        got = [r.rid for r in admitted if r.priority_class == cls]
+        assert got == want, f"class {cls} reordered"
+    # and a static queue drains strictly by descending class
+    classes = [r.priority_class for r in admitted]
+    assert classes == sorted(classes, reverse=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(fake_reqs)
+def test_sjf_admits_shortest_bucket_first(queue):
+    policy = SchedulingPolicy(kind="sjf")
+    i = select_index(policy, queue)
+    shortest = min(r.bucket for r in queue)
+    assert queue[i].bucket == shortest
+    assert all(r.bucket != shortest for r in queue[:i])  # first of the ties
+
+
+@settings(max_examples=25, deadline=None)
+@given(fake_reqs, st.integers(min_value=1, max_value=3))
+def test_fair_is_starvation_free(queue, n_heavy):
+    """A lone request of an otherwise-idle tenant admits within
+    ``#distinct tenants`` rounds even while every other tenant keeps
+    submitting fresh work each round — cumulative normalized service makes
+    the idle tenant the minimum no later than that."""
+    policy = SchedulingPolicy(kind="fair",
+                              tenant_weights=(("victim", 1.0),))
+    state = SchedulerState(policy)
+    heavies = [f"h{j}" for j in range(n_heavy)]
+    q = [dataclasses.replace(r, tenant=heavies[r.rid % n_heavy])
+         for r in queue]
+    lone = FakeReq(rid=10_000, tenant="victim")
+    q.append(lone)
+    rid = 10_001
+    for round_no in range(n_heavy + 1):
+        i = select_index(policy, q, state=state)
+        chosen = q.pop(i)
+        state.charge(chosen)
+        if chosen is lone:
+            break
+        # adversarial arrival: every heavy tenant refills the queue
+        for h in heavies:
+            q.append(FakeReq(rid=rid, tenant=h))
+            rid += 1
+    else:
+        pytest.fail(f"victim starved for {n_heavy + 1} rounds")
+
+
+@settings(max_examples=25, deadline=None)
+@given(fake_reqs)
+def test_priority_victim_is_lowest_class_newest(running):
+    for seq, r in enumerate(running):
+        r._admit_seq = seq
+    policy = SchedulingPolicy(kind="priority")
+    v = victim(policy, running)
+    lowest = min(r.priority_class for r in running)
+    assert v.priority_class == lowest
+    assert v._admit_seq == max(r._admit_seq for r in running
+                               if r.priority_class == lowest)
+    # non-priority policies keep the pre-policy newest-admitted invariant
+    assert victim(FIFO, running)._admit_seq == \
+        max(r._admit_seq for r in running)
+    # preemption only for a strictly higher class
+    cand_hi = FakeReq(rid=99, priority_class=lowest + 1)
+    cand_eq = FakeReq(rid=98, priority_class=lowest)
+    assert wants_preemption(policy, cand_hi, running)
+    assert not wants_preemption(policy, cand_eq, running)
+    assert not wants_preemption(FIFO, cand_hi, running)
+
+
+# ----------------------------------------------------- program text + plans
+
+
+def decode_shape(batch=2):
+    return ShapeCfg("sched_b2", "decode", MAX_SEQ, batch)
+
+
+def test_policy_renders_and_fingerprints():
+    plain = build_program(CFG, decode_shape())
+    tagged = build_program(
+        CFG, decode_shape(),
+        scheduling=SchedulingPolicy(kind="priority").ext())
+    text = to_mlir(tagged)
+    assert "sched(policy(priority) preempt)" in text
+    assert "sched(" not in to_mlir(plain)
+    assert program_fingerprint(plain) != program_fingerprint(tagged)
+    # every distinct policy fingerprints apart
+    fps = {program_fingerprint(build_program(CFG, decode_shape(),
+                                             scheduling=p.ext()))
+           for p in (SchedulingPolicy(),
+                     SchedulingPolicy(kind="priority"),
+                     SchedulingPolicy(kind="priority", preempt=False),
+                     SchedulingPolicy(kind="sjf"),
+                     SchedulingPolicy(kind="fair",
+                                      tenant_weights=(("a", 2.0),)))}
+    assert len(fps) == 5
+
+
+def test_lowered_plan_extracts_scheduling():
+    cache = PlanCache()
+    sched = SchedulingPolicy(kind="fair", tenant_weights=(("a", 2.0),)).ext()
+    plan = cache.lowered_plan(build_program(CFG, decode_shape(),
+                                            scheduling=sched))
+    assert plan.scheduling == (("policy", "fair"), ("tenants", "a:2"))
+    plain = cache.lowered_plan(build_program(CFG, decode_shape()))
+    assert plain.scheduling is None
+    assert plan.fingerprint != plain.fingerprint
+
+
+def test_unknown_scheduling_key_rejected():
+    with pytest.raises(ValueError, match="unknown scheduling"):
+        build_program(CFG, decode_shape(), scheduling={"nice": 19})
+
+
+# ------------------------------------------------------------ engine behavior
+
+
+def mk_engine(params, policy=FIFO, slots=2, **kw):
+    kw.setdefault("max_seq", MAX_SEQ)
+    return Engine(CFG, EngineConfig(slots=slots, prompt_buckets=(BUCKET,),
+                                    scheduling=policy, **kw),
+                  params=params, plan_cache=PlanCache())
+
+
+def mk_paged(params, policy=FIFO, slots=2, **kw):
+    return mk_engine(params, policy, slots, kv_layout="paged",
+                     page_size=PAGE, **kw)
+
+
+def test_fifo_streams_bitwise_match_sequential(params):
+    """``policy=fifo`` is the pre-policy engine: same admission order, same
+    rids, same keys — greedy and sampled streams must agree bitwise with the
+    sequential reference."""
+    samp = SamplingParams(temperature=0.8, top_k=8, seed=7)
+    specs = [RequestSpec(prompt=p, max_new_tokens=TOKENS,
+                         sampling=samp if i % 2 else None)
+             for i, p in enumerate(prompts(4))]
+    engine = mk_engine(params, SchedulingPolicy())
+    reqs = engine.run(specs)
+    seq = serve_sequential(CFG, params, specs, max_seq=MAX_SEQ,
+                           prompt_buckets=(BUCKET,))
+    for r in reqs:
+        assert engine.finalize_request(r) == seq["tokens"][r.rid], r.rid
+    assert engine.stats()["policy"] == "fifo"
+
+
+def test_priority_preemption_replays_streams_exactly(params):
+    """Two low-class penalized+sampled requests fill both slots; a
+    high-class arrival preempts one (eviction-by-recompute). Every stream —
+    including the evicted one — must equal the sequential reference."""
+    samp = SamplingParams(temperature=0.8, top_k=8, presence_penalty=0.5,
+                          frequency_penalty=0.25)
+    engine = mk_paged(params, SchedulingPolicy(kind="priority"),
+                      max_seq=BUCKET + 16)
+    low_specs = [RequestSpec(prompt=p, max_new_tokens=14, sampling=samp,
+                             priority_class=0) for p in prompts(2, seed=5)]
+    hi_spec = RequestSpec(prompt=prompts(1, seed=6)[0], max_new_tokens=4,
+                          priority_class=3, deadline_ms=120_000.0)
+    low = [engine.submit(s) for s in low_specs]
+    for _ in range(4):
+        engine.step()
+    assert all(r.state == "active" for r in low)
+    hi = engine.submit(hi_spec)
+    engine.run([])          # drain
+    st_ = engine.stats()
+    assert st_["preemptions"] >= 1
+    assert st_["evictions"] >= 1
+    seq = serve_sequential(CFG, params, low_specs + [hi_spec],
+                           max_seq=BUCKET + 16, prompt_buckets=(BUCKET,))
+    for r in low + [hi]:
+        assert engine.finalize_request(r) == seq["tokens"][r.rid], r.rid
+    # the high-class TTFT SLO resolved and was attained
+    assert st_["slo_by_class"] == {3: 1.0}
+    assert st_["slo_attainment"] == 1.0
+
+
+def test_penalized_streams_match_sequential(params):
+    samp = SamplingParams(temperature=0.9, top_k=8, presence_penalty=0.7,
+                          frequency_penalty=0.3)
+    specs = [RequestSpec(prompt=p, max_new_tokens=TOKENS, sampling=samp)
+             for p in prompts(3, seed=9)]
+    engine = mk_engine(params)
+    reqs = engine.run(specs)
+    seq = serve_sequential(CFG, params, specs, max_seq=MAX_SEQ,
+                           prompt_buckets=(BUCKET,))
+    for r in reqs:
+        assert engine.finalize_request(r) == seq["tokens"][r.rid], r.rid
+
+
+def test_prefix_affinity_converts_misses_into_hits(params):
+    """Under pool pressure, FIFO admits the stranger first and reclaims the
+    cached prefix pages; affinity admits the prefix-hit request while its
+    pages are still cached. Streams are unchanged either way."""
+    shared = prompts(1, seed=11)[0]
+    stranger = prompts(1, seed=12)[0]
+    again = shared[:PAGE] + prompts(1, length=BUCKET - PAGE, seed=13)[0]
+
+    def run(policy):
+        # 4 pages: a finished request leaves its 2 prompt pages cached, so
+        # the stranger's 3-page footprint forces a reclaim of the chain head
+        # — unless the prefix-hit request is admitted to share them first
+        e = mk_paged(params, policy, slots=1, num_pages=4,
+                     prefix_cache=True)
+        first = e.run([RequestSpec(prompt=shared, max_new_tokens=2)])
+        later = e.run([RequestSpec(prompt=stranger, max_new_tokens=2),
+                       RequestSpec(prompt=again, max_new_tokens=2)])
+        outs = {r.rid: e.finalize_request(r) for r in first + later}
+        return e.stats(), outs
+
+    st_fifo, out_fifo = run(SchedulingPolicy())
+    st_aff, out_aff = run(SchedulingPolicy(prefix_affinity=True))
+    assert st_aff["prefix_hit_tokens"] > st_fifo["prefix_hit_tokens"]
+    assert out_aff == out_fifo          # scheduling never changes tokens
+    assert st_aff["policy"] == "fifo+prefix_affinity"
+
+
+def test_fair_and_sjf_drain_and_report(params):
+    fair = SchedulingPolicy(kind="fair", tenant_weights=(("a", 1.0),
+                                                         ("b", 2.0)))
+    engine = mk_engine(params, fair)
+    specs = [RequestSpec(prompt=p, max_new_tokens=3,
+                         tenant="a" if i < 3 else "b")
+             for i, p in enumerate(prompts(5, seed=14))]
+    reqs = engine.run(specs)
+    assert all(r.state == "done" for r in reqs)
+    assert engine.stats()["policy"] == "fair+tenants(a:1,b:2)"
+
+    engine = mk_engine(params, SchedulingPolicy(kind="sjf"))
+    reqs = engine.run([RequestSpec(prompt=p[:n], max_new_tokens=2)
+                       for n, p in zip((8, 2, 4), prompts(3, seed=15))])
+    assert all(r.state == "done" for r in reqs)
+
+
+def test_engine_policy_changes_plan_fingerprint(params):
+    e1 = mk_engine(params)
+    e2 = mk_engine(params, SchedulingPolicy(kind="priority"))
+    assert e1.plan.fingerprint != e2.plan.fingerprint
+    assert e1.plan.scheduling == (("policy", "fifo"),)
+    assert e2.plan.scheduling == (("policy", "priority"), ("preempt", True))
+
+
+def test_engine_stats_typed_and_mapping(params):
+    engine = mk_engine(params)
+    engine.run([RequestSpec(prompt=prompts(1)[0], max_new_tokens=2,
+                            priority_class=1, deadline_ms=60_000.0)])
+    st_ = engine.stats()
+    assert isinstance(st_, EngineStats)
+    assert st_.completed == 1 and st_["completed"] == 1
+    assert st_.admitted == 1
+    # dense engine: paged/prefix/spec sections are None and hidden from the
+    # mapping view, exactly like the old dict omitted them
+    assert st_.evictions is None
+    assert "evictions" not in st_
+    assert st_.get("evictions", 0) == 0
+    with pytest.raises(KeyError):
+        st_["evictions"]
+    d = {**st_}
+    assert d["policy"] == "fifo" and "prefix_hits" not in d
+    assert st_.slo_attainment == 1.0 and st_.slo_by_class == {1: 1.0}
+    assert st_.queue_depth_by_class == {}
+
+
+def test_invalid_policy_configs_rejected(params):
+    with pytest.raises(ValueError, match="SchedulingPolicy"):
+        Engine(CFG, EngineConfig(scheduling="fifo"), params=params)
+    with pytest.raises(ValueError, match="prefix_affinity"):
+        mk_paged(params, SchedulingPolicy(prefix_affinity=True))
+
+
+def test_make_request_shim_deprecated(params):
+    engine = mk_engine(params)
+    with pytest.warns(DeprecationWarning, match="RequestSpec"):
+        req = engine.make_request(list(prompts(1)[0]), 2)
+    assert engine.submit(req) is True
+    engine.run([])
+    assert engine.finalize_request(req)
