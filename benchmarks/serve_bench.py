@@ -93,6 +93,16 @@ must convert those misses back into hits (more ``prefix_hit_tokens`` than
 fifo, streams unchanged). ``--json6`` writes the metrics — CI emits
 ``BENCH_6.json``.
 
+Section 7 is fault tolerance: one greedy workload served under an injected
+``FaultPlan`` (NaN poisoning, a targeted prefill exception, a
+watchdog-tripping stall, forced allocator exhaustion) must drain with zero
+hangs and zero failures, with every recovered stream bitwise identical to
+the fault-free reference; a fault outliving ``max_retries`` must contain to
+one typed FAILED; bounded-queue overflow and expired deadlines must shed in
+the exact planned counts; and a mid-flight snapshot restored into a fresh
+engine must resume bitwise. All CI gates. ``--json7`` writes the metrics —
+CI emits ``BENCH_7.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -944,6 +954,261 @@ def bench_scheduling(json_path=None):
     return results
 
 
+# ------------------------------------------------------- fault tolerance
+
+S7_ARCH = "tinyllama-1.1b"
+S7_SLOTS = 2
+S7_BUCKET = 8
+S7_TOKENS = 12
+S7_REQUESTS = 8
+S7_PAGE = 4
+S7_PAGES = 24
+S7_MAX_SEQ = S7_BUCKET + S7_TOKENS
+S7_MAX_STEPS = 600                  # drain budget: the zero-hangs gate
+S7_FAIL_RID = 3
+S7_WATCHDOG_MS = 500.0              # >> warm step, << stall_s
+S7_STALL_S = 2.0
+
+
+def _s7_workload(vocab):
+    import numpy as np
+
+    from repro.runtime.engine import RequestSpec
+    rng = np.random.default_rng(11)
+    return [RequestSpec(prompt=rng.integers(0, vocab, size=S7_BUCKET).tolist(),
+                        max_new_tokens=int(rng.integers(6, S7_TOKENS + 1)))
+            for _ in range(S7_REQUESTS)]
+
+
+def _s7_ecfg(**kw):
+    from repro.runtime.engine import EngineConfig
+    return EngineConfig(slots=S7_SLOTS, prompt_buckets=(S7_BUCKET,),
+                        max_seq=S7_MAX_SEQ, kv_layout="paged",
+                        page_size=S7_PAGE, num_pages=S7_PAGES, **kw)
+
+
+def _s7_drain(cfg, params, ecfg, specs, **req_kw):
+    """Submit ``specs`` and step until every request is terminal — within the
+    ``S7_MAX_STEPS`` budget, which is the hang gate: a lost wakeup or a
+    recovery loop that never converges shows up as ``drained=False``, not as
+    a hung CI job. Engines warm through the shared PlanCache (a sibling
+    engine with the same fingerprint pre-compiled the steps), so measured
+    iterations never include compile time."""
+    import dataclasses
+
+    from repro.runtime.engine import Engine
+
+    engine = Engine(cfg, ecfg, params=params)
+    handles = [engine.submit(dataclasses.replace(s, **req_kw) if req_kw
+                             else s) for s in specs]
+    steps = 0
+    live = ("queued", "prefilling", "active")
+    while any(h.state in live for h in handles):
+        if steps >= S7_MAX_STEPS:
+            break
+        engine.step()
+        steps += 1
+    drained = not any(h.state in live for h in handles)
+    streams = {h.rid: engine.finalize_request(h)
+               for h in handles if h.state == "done"}
+    return engine, handles, streams, steps, drained
+
+
+def bench_faults(json_path=None):
+    """Fault-tolerant serving under an injected fault schedule (section 7).
+
+    Four legs against one greedy workload: (1) recovery — a FaultPlan mixing
+    NaN poisoning, a targeted prefill exception, a watchdog-tripping stall,
+    and forced allocator exhaustion must drain with zero failures and every
+    recovered stream bitwise identical to the fault-free reference; (2)
+    failure containment — a fault that outlives ``max_retries`` must produce
+    exactly one typed FAILED outcome while every other stream stays bitwise
+    intact; (3) load shedding — bounded-queue overflow and expired deadlines
+    must be typed rejections/sheds in the exact planned counts; (4)
+    snapshot/restore — a mid-flight engine snapshot restored into a fresh
+    engine must resume every stream bitwise. All four are CI gates, as is
+    draining within the step budget (zero hangs)."""
+    import time
+
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import Engine
+    from repro.runtime.faults import FaultPlan, FaultSpec
+
+    cfg = smoke_config(S7_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    specs = _s7_workload(cfg.vocab)
+
+    # fault-free reference (plain engine: same workload, no FT machinery)
+    warm = Engine(cfg, _s7_ecfg(), params=params)
+    warm.run(_s7_workload(cfg.vocab))
+    _, ref_handles, ref_streams, _, ref_drained = _s7_drain(
+        cfg, params, _s7_ecfg(), specs)
+
+    # leg 1: every fault kind fires, everything recovers, streams identical
+    plan = FaultPlan(faults=(
+        FaultSpec(kind="exception", site="prefill", rid=2, step=0),
+        FaultSpec(kind="nan", step=6, slot=0),
+        FaultSpec(kind="nan", step=14, slot=1),
+        FaultSpec(kind="alloc_fail", step=8, times=2),
+        FaultSpec(kind="stall", step=20, stall_s=S7_STALL_S),
+    ))
+    ft_ecfg = _s7_ecfg(fault_plan=plan, watchdog_ms=S7_WATCHDOG_MS,
+                       debug_checks=True)
+    warm_ft = Engine(cfg, ft_ecfg, params=params)
+    warm_ft.run(_s7_workload(cfg.vocab))
+    eng, handles, streams, steps, drained = _s7_drain(
+        cfg, params, ft_ecfg, specs)
+    st = eng.stats()
+    recovered_match = all(streams.get(h.rid) == ref_streams.get(h.rid)
+                          for h in handles)
+
+    # leg 2: retries exhausted -> exactly one typed FAILED, others intact
+    fail_plan = FaultPlan(faults=(
+        FaultSpec(kind="exception", site="prefill", rid=S7_FAIL_RID,
+                  step=0, times=99),))
+    eng2, handles2, streams2, steps2, drained2 = _s7_drain(
+        cfg, params, _s7_ecfg(fault_plan=fail_plan, max_retries=2), specs)
+    st2 = eng2.stats()
+    survivors_match = all(streams2.get(h.rid) == ref_streams.get(h.rid)
+                          for h in handles2 if h.rid != S7_FAIL_RID)
+    failed_typed = (st2["failed"] == 1 and len(st2["failures"]) == 1
+                    and st2["failures"][0].rid == S7_FAIL_RID
+                    and st2["failures"][0].kind == "exception"
+                    and not any(h.state == "done"
+                                for h in handles2 if h.rid == S7_FAIL_RID))
+
+    # leg 3: graceful degradation — typed queue-full rejections and
+    # deadline sheds in the exact planned counts
+    q_ecfg = _s7_ecfg(max_queue=4)
+    qeng = Engine(cfg, q_ecfg, params=params)
+    q_handles = [qeng.submit(s) for s in specs]
+    expect_rejected = S7_REQUESTS - 4
+    got_rejected = sum(1 for h in q_handles if h.state == "rejected")
+    while qeng.step():
+        pass
+
+    d_ecfg = _s7_ecfg(enforce_deadlines=True)
+    deng = Engine(cfg, d_ecfg, params=params)
+    import dataclasses as _dc
+    d_handles = [deng.submit(_dc.replace(s, deadline_ms=1.0)) for s in specs]
+    time.sleep(0.05)           # every queued deadline expires before step 1
+    dsteps = 0
+    while deng.step() or deng.queue:
+        dsteps += 1
+        if dsteps > S7_MAX_STEPS:
+            break
+    got_shed = deng.stats()["shed_deadline"]
+    shed_typed = all(h.state == "shed" for h in d_handles)
+
+    # leg 4: snapshot mid-flight, restore into a fresh engine, resume bitwise
+    a = Engine(cfg, _s7_ecfg(), params=params)
+    ha = [a.submit(s) for s in specs]
+    for _ in range(4):
+        a.step()
+    snap = a.snapshot()
+    while a.step() or a.queue:
+        pass
+    snap_ref = {h.rid: a.finalize_request(h) for h in ha}
+    b = Engine(cfg, _s7_ecfg(), params=params)
+    b.restore(snap)
+    hb = [r for r in list(b.slots_req) + list(b.queue) if r is not None]
+    bsteps = 0
+    while b.step() or b.queue:
+        bsteps += 1
+        if bsteps > S7_MAX_STEPS:
+            break
+    resumed = {h.rid: b.finalize_request(h) for h in hb}
+    resume_match = all(resumed[rid] == snap_ref[rid] for rid in resumed) \
+        and len(resumed) > 0
+
+    print("# serve_bench_faults: leg,requests,steps,drained,faults_injected,"
+          "quarantines,recovered,failed,watchdog_trips,bitwise")
+    print(f"recovery,{S7_REQUESTS},{steps},{drained},"
+          f"{st['faults_injected']},{st['quarantines']},{st['recovered']},"
+          f"{st['failed']},{st['watchdog_trips']},{recovered_match}")
+    print(f"failure,{S7_REQUESTS},{steps2},{drained2},"
+          f"{st2['faults_injected']},{st2['quarantines']},"
+          f"{st2['recovered']},{st2['failed']},{st2['watchdog_trips']},"
+          f"{survivors_match}")
+    print(f"# shedding: rejected_queue_full={got_rejected}/{expect_rejected} "
+          f"shed_deadline={got_shed}/{S7_REQUESTS} typed={shed_typed}; "
+          f"snapshot resume: streams={len(resumed)} bitwise={resume_match}")
+
+    if json_path:
+        payload = {
+            "bench": "fault_tolerance",
+            "arch": cfg.name,
+            "requests": S7_REQUESTS,
+            "slots": S7_SLOTS,
+            "fault_plan": plan.describe(),
+            "recovery": {
+                "steps": steps, "drained": drained,
+                "faults_injected": st["faults_injected"],
+                "quarantines": st["quarantines"],
+                "recovered": st["recovered"],
+                "failed": st["failed"],
+                "watchdog_trips": st["watchdog_trips"],
+                "streams_match_fault_free": recovered_match,
+            },
+            "failure": {
+                "steps": steps2, "drained": drained2,
+                "failed": st2["failed"],
+                "failed_rid": S7_FAIL_RID,
+                "survivor_streams_match": survivors_match,
+                "typed": failed_typed,
+            },
+            "shedding": {
+                "rejected_queue_full": got_rejected,
+                "expected_rejected": expect_rejected,
+                "shed_deadline": got_shed,
+                "expected_shed": S7_REQUESTS,
+                "typed": shed_typed,
+            },
+            "snapshot": {
+                "resumed_streams": len(resumed),
+                "bitwise": resume_match,
+            },
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+
+    if not (ref_drained and drained and drained2):
+        # CI gate: zero hangs — every leg must drain within the budget
+        raise SystemExit(f"serve_bench_faults: drain budget exceeded "
+                         f"(ref={ref_drained}, recovery={drained}, "
+                         f"failure={drained2})")
+    if not recovered_match or st["failed"] != 0 or st["recovered"] < 1 \
+            or st["faults_injected"] < len(plan):
+        # CI gate: recovery is replay-exact and exhaustive — every injected
+        # fault fired, nothing terminally failed, streams are bitwise
+        raise SystemExit(f"serve_bench_faults: recovery gate failed "
+                         f"(bitwise={recovered_match}, "
+                         f"failed={st['failed']}, "
+                         f"recovered={st['recovered']}, "
+                         f"injected={st['faults_injected']}/{len(plan)})")
+    if not failed_typed or not survivors_match:
+        # CI gate: failure containment — one typed FAILED, survivors intact
+        raise SystemExit(f"serve_bench_faults: failure gate "
+                         f"(typed={failed_typed}, "
+                         f"survivors={survivors_match})")
+    if got_rejected != expect_rejected or got_shed != S7_REQUESTS \
+            or not shed_typed:
+        # CI gate: shedding is typed and exactly as planned
+        raise SystemExit(f"serve_bench_faults: shedding gate "
+                         f"(rejected={got_rejected}/{expect_rejected}, "
+                         f"shed={got_shed}/{S7_REQUESTS}, "
+                         f"typed={shed_typed})")
+    if not resume_match:
+        # CI gate: crash-restart resume is bitwise
+        raise SystemExit("serve_bench_faults: snapshot/restore streams "
+                         "diverged from the uninterrupted run")
+    return {"recovery_steps": steps, "recovered": st["recovered"]}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -957,6 +1222,8 @@ def main() -> None:
                     help="write prefix-caching metrics to this JSON file")
     ap.add_argument("--json6", default=None,
                     help="write scheduling metrics to this JSON file")
+    ap.add_argument("--json7", default=None,
+                    help="write fault-tolerance metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
@@ -964,6 +1231,7 @@ def main() -> None:
     bench_spec(json_path=args.json4)
     bench_prefix(json_path=args.json5)
     bench_scheduling(json_path=args.json6)
+    bench_faults(json_path=args.json7)
 
 
 if __name__ == "__main__":

@@ -94,6 +94,18 @@ def sched_decode() -> str:
                                  scheduling=policy.ext()))
 
 
+def ft_decode() -> str:
+    """A fault-tolerant paged decode program: ``mm(... fault_tolerant)`` on
+    the cache data attribute plus ``upir.memory_snapshot``/``restore``
+    MemOps — the crash-recovery contract ``Engine.snapshot``/``restore``
+    realize, fingerprinted so FT and plain engines never share a plan."""
+    from repro.core.plans import build_program
+    from repro.core.printer import to_mlir
+    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                                 page_geometry=(15, 4, 4),
+                                 fault_tolerant=True))
+
+
 def train_step() -> str:
     """A training program: taskloop microbatching, the grads allreduce,
     state/grads data attributes."""
@@ -107,6 +119,7 @@ EXAMPLES: Dict[str, Callable[[], str]] = {
     "paged-prefix-decode": paged_prefix_decode,
     "spec-verify": spec_verify,
     "sched-decode": sched_decode,
+    "ft-decode": ft_decode,
     "train-step": train_step,
 }
 

@@ -119,6 +119,25 @@ class PlanBuilder:
                                    extensions=ir.ext(**extensions)))
         return self
 
+    def snapshot(self, symbol: str, allocator: str = "default_mem_alloc",
+                 **extensions: Any) -> "PlanBuilder":
+        """Device→host copy of the allocator's live state (fault-tolerant
+        engines: KV pool + page tables to host buffers for crash-restart
+        resume)."""
+        self._mems.append(ir.MemOp(kind="snapshot", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
+        return self
+
+    def restore(self, symbol: str, allocator: str = "default_mem_alloc",
+                **extensions: Any) -> "PlanBuilder":
+        """Host→device restore of a previously snapshotted state; the
+        inverse of :meth:`snapshot`."""
+        self._mems.append(ir.MemOp(kind="restore", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
+        return self
+
     # ---------------------------------------------------------------------- loops
 
     def loop(self, induction: str, upper: Any, *, lower: Any = 0, step: Any = 1,

@@ -117,17 +117,21 @@ class MoveOp:
 
 @dataclass(frozen=True)
 class MemOp:
-    """upir.memory_{alloc,dealloc,share,cow} — explicit memory management (§4.2).
+    """upir.memory_{alloc,dealloc,share,cow,snapshot,restore} — explicit
+    memory management (§4.2).
 
     ``alloc``/``dealloc`` bracket a buffer's lifetime; ``share`` marks a
     ref-counted aliasing of already-allocated storage (prefix-shared KV
-    pages), and ``cow`` marks the copy-on-write duplication that resolves a
-    write into shared storage. All four render into the canonical program
-    text, so an engine that manages memory differently (e.g. prefix sharing
-    on vs off) fingerprints — and plan-caches — differently.
+    pages), ``cow`` marks the copy-on-write duplication that resolves a
+    write into shared storage, and ``snapshot``/``restore`` are the
+    device↔host state movement a fault-tolerant engine uses for
+    crash-restart resume (``Engine.snapshot()``). All render into the
+    canonical program text, so an engine that manages memory differently
+    (e.g. prefix sharing or fault tolerance on vs off) fingerprints — and
+    plan-caches — differently.
     """
 
-    kind: str                 # "alloc" | "dealloc" | "share" | "cow"
+    kind: str      # "alloc" | "dealloc" | "share" | "cow" | "snapshot" | "restore"
     symbol: str
     allocator: str = "default_mem_alloc"
     extensions: Extensions = ()

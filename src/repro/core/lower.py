@@ -84,6 +84,10 @@ class LoweredPlan:
     # share/cow MemOps and the mm(shared_prefix) annotation, and the engine
     # runs ref-counted page aliasing with copy-on-write duplication
     prefix_sharing: bool = False
+    # True when the decode cache's memory contract is fault-tolerant: the
+    # program carries snapshot/restore MemOps and the mm(fault_tolerant)
+    # annotation, and the engine runs quarantine + replay-exact recovery
+    fault_tolerant: bool = False
     # ModelFamily capability flags carried by the decode cache's data attr
     # (models.api.FamilySpec -> core.plans -> printer caps(...) rendering)
     capabilities: Tuple[str, ...] = ()
@@ -196,10 +200,13 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
     capabilities: Tuple[str, ...] = ()
     spec_decode = None
     scheduling = None
+    fault_tolerant = False
     for attr in ir.find_all(prog, ir.DataAttr):
         if attr.symbol == "cache":
             capabilities = tuple(k for k in CAP_EXT_KEYS
                                  if ir.ext_get(attr.extensions, k) is True)
+            fault_tolerant = bool(
+                ir.ext_get(attr.extensions, "fault_tolerant", False))
             k = ir.ext_get(attr.extensions, "spec_verify")
             if k is not None:
                 spec_decode = (str(ir.ext_get(attr.extensions, "draft", "")),
@@ -250,7 +257,7 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         remat=ir.ext_get(prog.extensions, "remat", "none"),
         grad_reduce=grad_reduce, zero=zero, compression=compression,
         collectives=syncs, page_geometry=page_geometry,
-        prefix_sharing=prefix_sharing,
+        prefix_sharing=prefix_sharing, fault_tolerant=fault_tolerant,
         capabilities=capabilities, spec_decode=spec_decode,
         scheduling=scheduling)
 

@@ -175,7 +175,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   page_geometry: Optional[Tuple[int, int, int]] = None,
                   prefix_sharing: bool = False,
                   spec_decode: Optional[Tuple[str, int]] = None,
-                  scheduling: Optional[Dict[str, Any]] = None
+                  scheduling: Optional[Dict[str, Any]] = None,
+                  fault_tolerant: bool = False
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
 
@@ -210,12 +211,21 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     declarative execution decision, so engines running different policies
     fingerprint (and plan-cache) apart. ``None`` (the default) emits no
     annotation and leaves every pre-scheduling fingerprint unchanged.
+
+    ``fault_tolerant=True`` (decode only) marks the cache's memory contract
+    as fault-tolerant: the data attribute gains ``mm(fault_tolerant)`` and
+    the program carries ``snapshot``/``restore`` MemOps — the device↔host
+    state movement a recovering engine performs (``Engine.snapshot()`` for
+    crash-restart resume, quarantine + replay for poisoned slots) is part
+    of the memory-management contract, so an FT-enabled engine fingerprints
+    (and plan-caches) apart from a plain one of the same geometry.
     """
     axes = mesh_axes(multi_pod)
     dp = dp_axis(multi_pod)
     mb = microbatches if microbatches else _microbatches(cfg, shape, multi_pod)
     act, resident = _bytes_estimates(cfg, shape, multi_pod, mb)
     paged = page_geometry is not None and shape.kind == "decode"
+    ft = bool(fault_tolerant) and shape.kind == "decode"
     spec = spec_decode if (spec_decode is not None
                            and shape.kind == "decode") else None
     sched: Dict[str, Any] = {}
@@ -297,6 +307,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                                       pages_per_slot=pps)
             if prefix_sharing:
                 mm["shared_prefix"] = True
+            if ft:
+                mm["fault_tolerant"] = True
             b.data("cache", mapping="tofrom", access="read-write",
                    allocator="paged_kv_alloc", **mm, **caps)
             if sched:
@@ -323,10 +335,23 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                         shared_prefix=True)
                 b.cow("cache/k_pages", allocator="paged_kv_alloc")
                 b.cow("cache/v_pages", allocator="paged_kv_alloc")
+            if ft:
+                # fault tolerance: the pool (and page tables, carried by the
+                # engine alongside) can round-trip through host buffers for
+                # crash-restart resume — explicit d2h/h2d memory ops
+                b.snapshot("cache/k_pages", allocator="paged_kv_alloc")
+                b.snapshot("cache/v_pages", allocator="paged_kv_alloc")
+                b.restore("cache/k_pages", allocator="paged_kv_alloc")
+                b.restore("cache/v_pages", allocator="paged_kv_alloc")
         elif shape.kind == "decode":
-            b.data("cache", mapping="tofrom", access="read-write", **caps)
+            dense_mm = {"fault_tolerant": True} if ft else {}
+            b.data("cache", mapping="tofrom", access="read-write",
+                   **dense_mm, **caps)
             if sched:
                 b.sched("cache", **sched)
+            if ft:
+                b.snapshot("cache")
+                b.restore("cache")
             if caps.get("needs_encoder_memory"):
                 # the per-slot encoder-memory buffer is an explicit decode
                 # input: filled once at admission, read-only every step

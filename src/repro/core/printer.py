@@ -204,7 +204,7 @@ def _parallel(p) -> str:
 # an engine with prefix caching on manages memory differently from one with it
 # off, so the two must never share a fingerprint either.
 MM_EXT_KEYS = ("page_size", "num_pages", "pages_per_slot", "page_map",
-               "shared_prefix")
+               "shared_prefix", "fault_tolerant")
 
 
 def _mm_fields(extensions) -> str:

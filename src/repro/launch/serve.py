@@ -27,6 +27,16 @@ integer priority classes over the requests, ``--tenant`` cycles tenant names
 attainment. ``--prefix-affinity`` (with ``--prefix-cache``) admits requests
 whose prompt pages are already cached first.
 
+Fault tolerance (``runtime.faults``): ``--enforce-deadlines`` sheds queued
+requests whose ``--deadline-ms`` SLO already expired (typed ``SHED_DEADLINE``
+outcome instead of a late answer); ``--max-queue`` bounds the admission queue
+(overflow is a typed ``REJECTED_QUEUE_FULL`` rejection, never an unbounded
+pile-up); ``--watchdog-ms`` arms the per-iteration wall-clock watchdog;
+``--nan-guard`` arms the device-side finite guard on decode logits;
+``--debug-checks`` validates allocator/page-table invariants every tick; and
+``--fault-seed``/``--fault-count`` inject a seed-deterministic random
+``FaultPlan`` to demonstrate quarantine + replay-exact recovery end to end.
+
 ``--sequential`` also runs the old one-request-at-a-time path for comparison.
 On the CPU container use --smoke.
 """
@@ -85,6 +95,26 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="TTFT SLO attached to every request (0 = none); "
                          "attainment is reported per class")
+    ap.add_argument("--enforce-deadlines", action="store_true",
+                    help="shed queued requests whose --deadline-ms SLO "
+                         "already expired (typed SHED_DEADLINE outcome)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue; overflow submissions "
+                         "get a typed REJECTED_QUEUE_FULL (0 = unbounded)")
+    ap.add_argument("--watchdog-ms", type=float, default=0.0,
+                    help="per-iteration wall-clock watchdog: a step slower "
+                         "than this quarantines the policy victim (0 = off)")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="device-side finite guard on decode logits, polled "
+                         "on the EOS cadence (no extra hot-loop syncs)")
+    ap.add_argument("--debug-checks", action="store_true",
+                    help="validate allocator/page-table invariants every "
+                         "engine tick")
+    ap.add_argument("--fault-seed", type=int, default=-1,
+                    help="inject a seed-deterministic random FaultPlan "
+                         "(-1 = no injection)")
+    ap.add_argument("--fault-count", type=int, default=4,
+                    help="faults in the random FaultPlan (--fault-seed)")
     ap.add_argument("--sequential", action="store_true",
                     help="also time the pre-engine one-at-a-time path")
     args = ap.parse_args()
@@ -99,6 +129,7 @@ def main():
     from ..models import api
     from ..runtime.engine import (Engine, EngineConfig, RequestSpec,
                                   serve_sequential)
+    from ..runtime.faults import FaultPlan
     from ..runtime.sampling import SamplingParams
     from ..runtime.scheduling import SchedulingPolicy
     from ..runtime.speculative import SpecConfig
@@ -148,6 +179,22 @@ def main():
         tenant_weights=tuple(weights.items())
         if args.policy == "fair" else ())
 
+    if args.enforce_deadlines and not args.deadline_ms:
+        ap.error("--enforce-deadlines requires --deadline-ms (there is no "
+                 "SLO to enforce otherwise)")
+    fault_plan = None
+    if args.fault_seed >= 0:
+        # nan poisoning rides the plain decode step (spec engines verify
+        # drafts instead); alloc_fail needs a page pool to exhaust
+        kinds = ["exception", "stall"]
+        if spec_decode is None:
+            kinds.append("nan")
+        if args.paged:
+            kinds.append("alloc_fail")
+        fault_plan = FaultPlan.random(args.fault_seed, n=args.fault_count,
+                                      slots=args.slots, kinds=tuple(kinds))
+        print(f"fault plan: {fault_plan.describe()}")
+
     engine = Engine(cfg, EngineConfig(slots=args.slots,
                                       prompt_buckets=(bucket,),
                                       max_seq=max_seq,
@@ -156,7 +203,13 @@ def main():
                                       page_size=args.page_size,
                                       prefix_cache=args.prefix_cache,
                                       spec_decode=spec_decode,
-                                      scheduling=policy),
+                                      scheduling=policy,
+                                      fault_plan=fault_plan,
+                                      nan_guard=args.nan_guard,
+                                      watchdog_ms=args.watchdog_ms or None,
+                                      max_queue=args.max_queue or None,
+                                      debug_checks=args.debug_checks,
+                                      enforce_deadlines=args.enforce_deadlines),
                     params=params, draft_params=draft_params)
 
     rng = np.random.default_rng(0)
@@ -198,6 +251,17 @@ def main():
     print(f"  completed={st['completed']} eos_finished={st['eos_finished']} "
           f"rejected={st['rejected']} decode_steps={st['decode_steps']} "
           f"recycles={st['recycles']} preemptions={st['preemptions']}")
+    if st["shed_deadline"] or st["rejected_queue_full"]:
+        print(f"  shed_deadline={st['shed_deadline']} "
+              f"rejected_queue_full={st['rejected_queue_full']}")
+    if st.get("faults_injected") is not None:
+        print(f"  faults_injected={st['faults_injected']} "
+              f"quarantines={st['quarantines']} "
+              f"recovered={st['recovered']} failed={st['failed']} "
+              f"watchdog_trips={st['watchdog_trips']}")
+        for f in st["failures"]:
+            print(f"    FAILED rid={f.rid} kind={f.kind} "
+                  f"retries={f.retries}: {f.detail}")
     if st.get("slo_attainment") is not None:
         by = " ".join(f"class{c}={v:.2f}"
                       for c, v in st["slo_by_class"].items())

@@ -69,6 +69,29 @@ streams keep exact eviction-by-recompute replay, and each step emits 1 to
 k+1 tokens per slot. Speculative mode is the one engine path that syncs per
 step (the host must learn the acceptance counts to advance positions).
 
+**Fault tolerance** (``runtime.faults``): an engine built with a
+``fault_plan``, ``nan_guard``, or ``watchdog_ms`` runs in fault-tolerant
+mode. Detection is three-pronged — a device-side finite guard on decode
+logits (sticky ``poisoned`` mask, polled on the EOS cadence so the hot loop
+still never syncs), a per-iteration wall-clock watchdog that converts a
+stalled step into a fault, and allocator/page-table invariant checks each
+tick under ``debug_checks``. Recovery reuses eviction-by-recompute: a
+faulted request is quarantined (slot and pages released, partial stream
+dropped) and re-admitted with its PRNG key snapshot intact, so the replayed
+stream is bitwise the fault-free one; retries are bounded with exponential
+backoff in admission order, and exhaustion terminates the request ``failed``
+with a typed ``FailureInfo`` — never a crash. ``Engine.snapshot()`` /
+``restore()`` copy the full serving state (KV pool, page tables, allocator,
+requests, admission counters) to host buffers and back for crash-restart
+resume, rendered into the UPIR program as ``upir.memory_snapshot`` /
+``upir.memory_restore`` MemOps under ``mm(fault_tolerant)`` — FT plans
+fingerprint (and plan-cache) apart. Graceful degradation: ``max_queue``
+bounds admission with a typed ``REJECTED_QUEUE_FULL``, ``enforce_deadlines``
+sheds queued requests whose TTFT deadline already passed (typed
+``SHED_DEADLINE``), and a speculative engine under pool pressure drops its
+lookahead reservation (degraded mode, greedy workloads only — where spec and
+plain streams are bitwise identical) before resorting to eviction.
+
 All compiled artifacts route through ``core.lower.PlanCache``; the paged page
 geometry is part of the UPIR program (``paged_kv_alloc`` data attributes +
 ``alloc_pages``/``free_pages`` MemOps), so it participates in the canonical
@@ -80,6 +103,7 @@ entries that ``run_pipeline`` appends when the plan is first compiled.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import hashlib
 import time
@@ -96,9 +120,12 @@ from ..core.lower import PlanCache, default_plan_cache
 from ..models import api
 from ..models.api import KernelSpec
 from ..models.layers import cache_copy_pages, cache_write_pages
-from .sampling import (GREEDY, SamplingParams, decode_select, request_key,
-                       sample_tokens)
-from .scheduling import (FIFO, SchedulerState, SchedulingPolicy, select_index,
+from .faults import (EngineSnapshot, FailureInfo, FaultPlan, FaultSpec,
+                     InjectedFault)
+from .sampling import (GREEDY, SamplingParams, decode_select, poison_and_guard,
+                       request_key, sample_tokens)
+from .scheduling import (FIFO, SchedulerState, SchedulingPolicy,
+                         backoff_eligible, select_index,
                          victim as policy_victim, wants_preemption)
 from .speculative import SpecConfig, SpeculativeDecoder
 
@@ -198,8 +225,10 @@ class Request:
     tenant: str = "default"        # fair-scheduling accounting bucket
     priority_class: int = 0        # priority policy class (higher = sooner)
     deadline_ms: Optional[float] = None   # TTFT SLO (observational)
-    state: str = "new"             # new | queued | prefilling | active | done | rejected
+    state: str = "new"             # new | queued | prefilling | active | done
+    #                                | rejected | failed | shed
     reason: str = ""               # rejection reason / "eos" completion
+    failure: Optional[FailureInfo] = None   # set on terminal FAILED
     bucket: int = 0                # padded prompt length
     slot: int = -1                 # decode slot while active
     tokens_out: List[int] = dataclasses.field(default_factory=list)
@@ -224,6 +253,11 @@ class Request:
     # probes; a pure function of the padded prompt + engine salt, so never
     # reset (unlike _prefix_keys, whose hit count is admission state)
     _chain_keys: Any = None
+    # fault-tolerance bookkeeping: quarantine replays consumed, and the
+    # earliest engine tick at which re-admission is allowed (exponential
+    # backoff — 2**(retries-1) ticks per quarantine)
+    _retries: int = 0
+    _not_before: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,8 +273,10 @@ class EngineConfig:
 
     * ``slots`` *[plan key]* — fixed decode batch width; recycling a finished
       slot never re-jits because the batch shape never changes.
-    * ``max_queue`` — admission-control bound; submits beyond it are
-      rejected, not buffered.
+    * ``max_queue`` — admission-control bound; ``None`` (the default) leaves
+      the queue unbounded, an integer rejects submits beyond it with the
+      typed reason ``REJECTED_QUEUE_FULL`` (counted in
+      ``EngineStats.rejected_queue_full``), not buffered.
     * ``prompt_buckets`` — allowed padded prompt lengths; each bucket gets
       its own traced prefill (bounded retraces). Streams are a function of
       the *bucket-padded* prompt.
@@ -283,10 +319,28 @@ class EngineConfig:
       compatible with the pre-policy engine. ``prefix_affinity`` requires
       ``prefix_cache=True``; ``priority`` preemption engages only on the
       paged layout (dense slots hold no pages to release).
+    * ``fault_plan`` *[plan key]* — a validated
+      :class:`~repro.runtime.faults.FaultPlan` of injected faults (NaN logit
+      poisoning, raised exceptions, stalls, forced allocator exhaustion);
+      arms the engine's fault-tolerant mode.
+    * ``nan_guard`` *[plan key]* — fold the device-side finite guard into
+      the decode step even without injected faults (detects *real*
+      numerical faults); polled on the EOS cadence, so no new syncs.
+    * ``watchdog_ms`` *[plan key]* — per-iteration wall-clock bound;
+      a step exceeding it counts a ``watchdog_trips`` and quarantines the
+      policy victim (a hung sequence is recovered like any other fault).
+    * ``max_retries`` — quarantine replays a request may consume before it
+      terminates ``failed`` with a typed ``FailureInfo``.
+    * ``debug_checks`` — run allocator + page-table invariant checks every
+      tick (loud ``RuntimeError`` on accounting bugs).
+    * ``enforce_deadlines`` — actually shed queued requests whose
+      ``deadline_ms`` TTFT deadline has already passed (typed
+      ``SHED_DEADLINE``); off by default — ``deadline_ms`` stays
+      observational then, exactly as before.
     """
 
     slots: int = 4                     # fixed decode batch width
-    max_queue: int = 64                # admission-control queue bound
+    max_queue: Optional[int] = None    # admission bound (None = unbounded)
     prompt_buckets: Tuple[int, ...] = (16, 32, 64)
     max_seq: int = 128                 # per-sequence horizon
     backend: str = "jit"               # single-process jax.jit serving
@@ -308,6 +362,13 @@ class EngineConfig:
     spec_decode: Optional[SpecConfig] = None
     # ---- declarative admission scheduling (runtime.scheduling)
     scheduling: SchedulingPolicy = FIFO
+    # ---- fault tolerance (runtime.faults)
+    fault_plan: Optional[FaultPlan] = None   # injected-fault schedule
+    nan_guard: bool = False            # finite-guard decode logits
+    watchdog_ms: Optional[float] = None   # per-iteration wall-clock bound
+    max_retries: int = 3               # quarantine replays before FAILED
+    debug_checks: bool = False         # per-tick invariant checks
+    enforce_deadlines: bool = False    # shed past-deadline queued requests
 
 
 # --------------------------------------------------------- free-list allocator
@@ -386,6 +447,35 @@ class PagedKVAllocator:
                 self._free.append(p)
             else:
                 self._ref[p] = c - 1
+
+    def check_invariants(self) -> None:
+        """Validate the allocator's internal consistency; raises
+        ``RuntimeError`` on the first violation. O(pages) host work — cheap
+        enough that fault-tolerant engines run it every tick under
+        ``EngineConfig.debug_checks``. The invariants: the free list holds
+        each page at most once and only in-range pages, no page is both free
+        and live, every live refcount is >= 1, and free + live accounts for
+        the whole pool (nothing leaked, nothing double-counted)."""
+        if len(set(self._free)) != len(self._free):
+            dupes = sorted(p for p in set(self._free)
+                           if self._free.count(p) > 1)
+            raise RuntimeError(f"allocator free list holds duplicates "
+                               f"{dupes}")
+        bad = sorted(p for p in self._free if not 1 <= p <= self.total)
+        if bad:
+            raise RuntimeError(f"free pages {bad} outside [1, {self.total}]")
+        overlap = set(self._free) & set(self._ref)
+        if overlap:
+            raise RuntimeError(f"pages {sorted(overlap)} are both free and "
+                               f"live")
+        bad_ref = {p: c for p, c in self._ref.items()
+                   if c < 1 or not 1 <= p <= self.total}
+        if bad_ref:
+            raise RuntimeError(f"invalid live refcounts {bad_ref}")
+        if len(self._free) + len(self._ref) != self.total:
+            raise RuntimeError(
+                f"page accounting leak: {len(self._free)} free + "
+                f"{len(self._ref)} live != {self.total} total")
 
 
 class PrefixIndex:
@@ -531,6 +621,8 @@ class EngineStats:
     slo_missed: int = 0
     slo_attainment: Optional[float] = None     # None until a deadline ends
     slo_by_class: Dict[int, float] = dataclasses.field(default_factory=dict)
+    rejected_queue_full: int = 0   # typed REJECTED_QUEUE_FULL admissions
+    shed_deadline: int = 0         # typed SHED_DEADLINE load shedding
     plan_cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
     # ---- paged section
     page_size: Optional[int] = None
@@ -555,6 +647,16 @@ class EngineStats:
     draft_proposed: Optional[int] = None
     draft_accepted: Optional[int] = None
     acceptance_rate: Optional[float] = None
+    degraded_steps: Optional[int] = None     # plain-decode steps under
+    #                                          pressure-degraded mode
+    degraded_entries: Optional[int] = None   # times degraded mode engaged
+    # ---- fault-tolerance section (fault_plan / nan_guard / watchdog_ms)
+    faults_injected: Optional[int] = None
+    quarantines: Optional[int] = None
+    recovered: Optional[int] = None          # completed after >= 1 replay
+    failed: Optional[int] = None             # retries exhausted (terminal)
+    watchdog_trips: Optional[int] = None
+    failures: Optional[List[FailureInfo]] = None
 
     # ---- mapping view (backward compatibility with the former dict)
     def keys(self) -> List[str]:
@@ -629,6 +731,39 @@ class Engine:
         # carries that many slack rows past the admission horizon
         self.spec_cfg = ecfg.spec_decode
         self._slack = self.spec_cfg.lookahead_k if self.spec_cfg else 0
+        # fault tolerance: any of fault_plan / nan_guard / watchdog_ms arms
+        # the recovery machinery; the mode changes the program's memory
+        # contract (mm(fault_tolerant) + snapshot/restore MemOps), so FT
+        # engines fingerprint — and plan-cache — apart
+        self.fault_plan = ecfg.fault_plan
+        if self.fault_plan is not None \
+                and not isinstance(self.fault_plan, FaultPlan):
+            raise ValueError(f"fault_plan must be a FaultPlan, "
+                             f"got {self.fault_plan!r}")
+        if ecfg.watchdog_ms is not None and not ecfg.watchdog_ms > 0:
+            raise ValueError(f"watchdog_ms must be > 0 (or None), "
+                             f"got {ecfg.watchdog_ms}")
+        if ecfg.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, "
+                             f"got {ecfg.max_retries}")
+        if ecfg.max_queue is not None and ecfg.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 (or None = unbounded), "
+                             f"got {ecfg.max_queue}")
+        self.ft = (self.fault_plan is not None or ecfg.nan_guard
+                   or ecfg.watchdog_ms is not None)
+        self._nan_guard = ecfg.nan_guard or (
+            self.fault_plan is not None
+            and any(f.kind == "nan" for f in self.fault_plan.faults))
+        if self._nan_guard and self.spec_cfg is not None:
+            raise ValueError(
+                "nan faults / nan_guard require the plain decode loop: the "
+                "speculative verify step has no per-step finite-guard "
+                "output (exception and stall faults still cover spec "
+                "engines)")
+        for f in (self.fault_plan.faults if self.fault_plan else ()):
+            if f.kind == "nan" and f.slot >= ecfg.slots:
+                raise ValueError(f"nan fault targets slot {f.slot}; engine "
+                                 f"has {ecfg.slots} slots")
         # decode-kernel knobs live in EngineConfig and are validated once —
         # they no longer leak through every decode_step_paged call
         self._kernel = KernelSpec(attn_impl=ecfg.decode_kernel,
@@ -675,7 +810,8 @@ class Engine:
                                         trace=self.trace,
                                         page_geometry=page_geom,
                                         prefix_sharing=self.prefix_cache,
-                                        scheduling=self.policy.ext())
+                                        scheduling=self.policy.ext(),
+                                        fault_tolerant=self.ft)
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
@@ -755,6 +891,12 @@ class Engine:
         # reset at (re)admission, so eviction-by-recompute rebuilds the same
         # counts trajectory and penalized streams replay exactly
         self.counts = jnp.zeros((ecfg.slots, cfg.vocab), jnp.int32)
+        # fault tolerance: sticky device-side finite-guard mask, the host-
+        # staged poison vector the FaultPlan arms, and degraded-mode state
+        self.poisoned = jnp.zeros((ecfg.slots,), bool)
+        self._poison_np = np.zeros((ecfg.slots,), bool)
+        self._poison_dev = None
+        self.degraded = False
         self._policy_dev = None        # device copy, rebuilt only when dirty
         self.queue: Deque[Request] = deque()
         self.slots_req: List[Optional[Request]] = [None] * ecfg.slots
@@ -775,7 +917,7 @@ class Engine:
         cfg = self.cfg
 
         def step(params, cache, tokens, pos, keys, temps, topks, topps, eos,
-                 fin, counts, presence, frequency):
+                 fin, counts, presence, frequency, poison, bad):
             logits, cache = api.decode_step(cfg, params, cache,
                                             {"tokens": tokens, "pos": pos})
             # the step's input token is the previously emitted one (prefill's
@@ -783,10 +925,13 @@ class Engine:
             # the penalty at position p sees every token emitted before p
             counts = counts.at[jnp.arange(counts.shape[0]),
                                tokens[:, 0]].add(1)
-            nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
+            # fault injection + sticky finite guard; all-False poison is a
+            # bitwise identity, so non-FT engines pay only a fused mask op
+            lg, bad = poison_and_guard(logits[:, -1], poison, bad)
+            nxt, fin = decode_select(lg, keys, pos, temps, topks,
                                      eos, fin, top_ps=topps, counts=counts,
                                      presence=presence, frequency=frequency)
-            return nxt, fin, cache, counts
+            return nxt, fin, cache, counts, bad
 
         return jax.jit(step, donate_argnums=(1, 10))
 
@@ -794,16 +939,17 @@ class Engine:
         cfg, kernel = self.cfg, self._kernel
 
         def step(params, pool, page_table, tokens, pos, keys, temps, topks,
-                 topps, eos, fin, counts, presence, frequency):
+                 topps, eos, fin, counts, presence, frequency, poison, bad):
             logits, pool = api.decode_step_paged(
                 cfg, params, pool, page_table,
                 {"tokens": tokens, "pos": pos}, kernel=kernel)
             counts = counts.at[jnp.arange(counts.shape[0]),
                                tokens[:, 0]].add(1)
-            nxt, fin = decode_select(logits[:, -1], keys, pos, temps, topks,
+            lg, bad = poison_and_guard(logits[:, -1], poison, bad)
+            nxt, fin = decode_select(lg, keys, pos, temps, topks,
                                      eos, fin, top_ps=topps, counts=counts,
                                      presence=presence, frequency=frequency)
-            return nxt, fin, pool, counts
+            return nxt, fin, pool, counts, bad
 
         return jax.jit(step, donate_argnums=(1, 11))
 
@@ -1040,8 +1186,10 @@ class Engine:
             return self._reject(req, f"request needs "
                                      f"{self._page_count(bucket + req.max_new_tokens)} "
                                      f"pages; pool has {self.num_pages}")
-        if len(self.queue) >= self.ecfg.max_queue:
-            return self._reject(req, "queue full")
+        if self.ecfg.max_queue is not None \
+                and len(self.queue) >= self.ecfg.max_queue:
+            self.rejected_queue_full += 1
+            return self._reject(req, "REJECTED_QUEUE_FULL")
         req.bucket = bucket
         req.state = "queued"
         self.queue.append(req)
@@ -1102,6 +1250,10 @@ class Engine:
                 jnp.equal(nxt0[0], req.eos_id))
         else:
             self.finished = self.finished.at[i].set(False)
+        if self._nan_guard:
+            # a recycled slot must not inherit its previous occupant's
+            # sticky finite-guard bit
+            self.poisoned = self.poisoned.at[i].set(False)
         self.prefills += 1
         req.state = "active"
         req._first_tok = nxt0
@@ -1123,12 +1275,23 @@ class Engine:
                 self._spec.prefill_slot(self._padded_prompt(req), i)
 
     def _next_index(self) -> Optional[int]:
-        """The admission policy's pick from the queue (None = empty). FIFO
-        always returns the head — exactly the old ``popleft`` order."""
+        """The admission policy's pick from the queue (None = empty, or —
+        fault-tolerant engines — every queued request is still inside its
+        quarantine backoff). FIFO always returns the head — exactly the old
+        ``popleft`` order; backoff filtering hands the policy the eligible
+        subsequence, so within it the policy's order is unchanged."""
         probe = self._affinity_probe \
             if self.policy.prefix_affinity and self.prefix_cache else None
-        return select_index(self.policy, self.queue,
-                            state=self._sched_state, prefix_hit=probe)
+        elig = backoff_eligible(self.queue, self._tick)
+        if elig is None:       # fast path: no one is backing off
+            return select_index(self.policy, self.queue,
+                                state=self._sched_state, prefix_hit=probe)
+        if not elig:
+            return None
+        sub = [self.queue[j] for j in elig]
+        idx = select_index(self.policy, sub, state=self._sched_state,
+                           prefix_hit=probe)
+        return None if idx is None else elig[idx]
 
     def _affinity_probe(self, req: Request) -> bool:
         """Does this queued request's page chain currently hit the prefix
@@ -1145,10 +1308,19 @@ class Engine:
         for i in range(self.ecfg.slots):
             while self.slots_req[i] is None and self.queue:
                 idx = self._next_index()
+                if idx is None:
+                    return     # everyone queued is inside quarantine backoff
                 req = self.queue[idx]
                 del self.queue[idx]
                 self._mark_admitted(req, i)
-                nxt0, _, one = self._run_prefill(req, i)
+                try:
+                    self._maybe_raise("prefill", rid=req.rid)
+                    nxt0, _, one = self._run_prefill(req, i)
+                except Exception as e:   # noqa: BLE001 — FT quarantine
+                    if not self.ft:
+                        raise
+                    self._fault_unwind(req, i, "exception", str(e))
+                    continue
                 self.cache = self._insert(self.cache, one, i)
                 self._activate(req, i, nxt0)
 
@@ -1179,6 +1351,8 @@ class Engine:
     def _admit_paged(self) -> None:
         while self.queue:
             idx = self._next_index()
+            if idx is None:
+                return         # everyone queued is inside quarantine backoff
             req = self.queue[idx]
             i = next((s for s in range(self.ecfg.slots)
                       if self.slots_req[s] is None
@@ -1220,36 +1394,44 @@ class Engine:
                     self.prefix_hit_tokens += hit_tokens
                 else:
                     self.prefix_misses += 1
-            if hit_tokens == req.bucket:
-                # full-prompt hit: every page (including a partially-filled
-                # tail) is shared and the cached last-position logits stand
-                # in for the skipped forward pass — zero prefill compute
-                s = req.sampling or GREEDY
-                nxt0 = self._hit_sample(
-                    tail_logits, jnp.asarray(req._key),
-                    jnp.int32(req.bucket - 1), jnp.float32(s.temperature),
-                    jnp.int32(s.top_k), jnp.float32(s.top_p))
-                self.prefix_full_hits += 1
-                self._activate(req, i, nxt0)
-            # prompts longer than one chunk prefill incrementally; at or
-            # below a chunk, one-shot is strictly cheaper (one dispatch)
-            elif self.ecfg.prefill_chunk and \
-                    req.bucket > self.ecfg.prefill_chunk:
-                req.state = "prefilling"
-                # hits land on chunk boundaries (the probe rounds down), so
-                # the tick resumes exactly at the first unshared chunk
-                req._chunk_cursor = hit_tokens // self.ecfg.prefill_chunk
-                self._prefilling[i] = req
-            elif hit_tokens:
-                nxt0 = self._run_suffix_prefill(req, i, hit_tokens)
-                self._activate(req, i, nxt0)
-            else:
-                nxt0, logits, one = self._run_prefill(req, i)
-                self.pool = self._page_insert(
-                    self.pool, one["k"], one["v"],
-                    jnp.asarray(pages, jnp.int32))
-                self._register_prefix(req, i, logits)
-                self._activate(req, i, nxt0)
+            try:
+                self._maybe_raise("prefill", rid=req.rid)
+                if hit_tokens == req.bucket:
+                    # full-prompt hit: every page (including a partially-
+                    # filled tail) is shared and the cached last-position
+                    # logits stand in for the skipped forward pass — zero
+                    # prefill compute
+                    s = req.sampling or GREEDY
+                    nxt0 = self._hit_sample(
+                        tail_logits, jnp.asarray(req._key),
+                        jnp.int32(req.bucket - 1), jnp.float32(s.temperature),
+                        jnp.int32(s.top_k), jnp.float32(s.top_p))
+                    self.prefix_full_hits += 1
+                    self._activate(req, i, nxt0)
+                # prompts longer than one chunk prefill incrementally; at or
+                # below a chunk, one-shot is strictly cheaper (one dispatch)
+                elif self.ecfg.prefill_chunk and \
+                        req.bucket > self.ecfg.prefill_chunk:
+                    req.state = "prefilling"
+                    # hits land on chunk boundaries (the probe rounds down),
+                    # so the tick resumes exactly at the first unshared chunk
+                    req._chunk_cursor = hit_tokens // self.ecfg.prefill_chunk
+                    self._prefilling[i] = req
+                elif hit_tokens:
+                    nxt0 = self._run_suffix_prefill(req, i, hit_tokens)
+                    self._activate(req, i, nxt0)
+                else:
+                    nxt0, logits, one = self._run_prefill(req, i)
+                    self.pool = self._page_insert(
+                        self.pool, one["k"], one["v"],
+                        jnp.asarray(pages, jnp.int32))
+                    self._register_prefix(req, i, logits)
+                    self._activate(req, i, nxt0)
+            except Exception as e:   # noqa: BLE001 — FT quarantine
+                if not self.ft:
+                    raise
+                self._fault_unwind(req, i, "exception", str(e))
+                continue
 
     # ------------------------------------------------------- prefix caching
 
@@ -1344,6 +1526,13 @@ class Engine:
                        key=lambda kv: (kv[1].bucket - kv[1]._chunk_cursor * chunk,
                                        kv[1]._admit_seq))
         for i, req in order:
+            try:
+                self._maybe_raise("prefill", rid=req.rid)
+            except Exception as e:
+                if not self.ft:
+                    raise
+                self._fault_unwind(req, i, "exception", str(e))
+                continue
             off = req._chunk_cursor * chunk
             toks = self._padded_prompt(req)[off:off + chunk]
             ids = self._slot_pages[i][off // self.ecfg.page_size:
@@ -1387,9 +1576,13 @@ class Engine:
         """One page for slot ``i`` under pool pressure: reclaim unreferenced
         prefix-cached pages first, then evict the newest-admitted request
         (recompute-on-readmit). Returns None when ``req`` itself became the
-        victim; raises only in the unreachable nothing-left case."""
+        victim. An armed ``alloc_fail`` fault forces one attempt to come up
+        dry, driving this whole pressure path on demand."""
         while True:
-            got = self.allocator.alloc(1)
+            if self._fault_fires("alloc_fail") is not None:
+                got = None             # forced exhaustion: one dry attempt
+            else:
+                got = self.allocator.alloc(1)
             if got is not None:
                 return got[0]
             if self.prefix_cache and self._reclaim_pages(1):
@@ -1401,6 +1594,12 @@ class Engine:
             if self.slots_req[i] is not req:
                 return None            # this slot itself was the victim
 
+    def _write_slack(self) -> int:
+        """Decode-write lookahead in tokens: ``lookahead_k`` for speculative
+        engines, 0 in degraded mode (the degradation *is* dropping that
+        reservation) and for plain engines."""
+        return 0 if self.degraded else self._slack
+
     def _ensure_pages(self) -> None:
         """Before decode, every active slot about to write position ``pos``
         (through ``pos + lookahead_k`` in speculative mode) must own the
@@ -1408,7 +1607,11 @@ class Engine:
         (reclaiming cached pages, then evicting the newest-admitted request,
         under pressure; oldest requests always make progress — liveness
         under overcommit), and prefix-shared pages in the write span are
-        duplicated copy-on-write so the cached original stays pristine."""
+        duplicated copy-on-write so the cached original stays pristine. A
+        speculative engine whose pool has run dry first tries degraded mode
+        (drop the lookahead reservation, serve through the plain decode
+        loop) before anything is evicted — bitwise-invisible for greedy
+        workloads, so it is only engaged for them."""
         order = sorted((i for i in range(self.ecfg.slots)
                         if self.slots_req[i] is not None),
                        key=lambda i: self.slots_req[i]._admit_seq)
@@ -1416,8 +1619,10 @@ class Engine:
             req = self.slots_req[i]
             if req is None:
                 continue               # evicted while growing an older slot
-            while (self.pos[i] + self._slack) // self.ecfg.page_size \
+            while (self.pos[i] + self._write_slack()) // self.ecfg.page_size \
                     >= len(self._slot_pages[i]):
+                if self.allocator.available == 0 and self._maybe_degrade():
+                    continue           # re-test with the smaller write span
                 page = self._alloc_one_pressured(i, req)
                 if page is None:
                     break              # this slot itself was the victim
@@ -1440,7 +1645,7 @@ class Engine:
                 continue
             row = self._slot_pages[i]
             first = int(self.pos[i]) // ps
-            last = (int(self.pos[i]) + self._slack) // ps
+            last = (int(self.pos[i]) + self._write_slack()) // ps
             for j in range(first, min(last + 1, len(row))):
                 if self.allocator.refcount(row[j]) <= 1:
                     continue
@@ -1528,6 +1733,10 @@ class Engine:
         req.state = "done"
         req.t_done = time.perf_counter()
         self.completed += 1
+        if req._retries:
+            # quarantined at least once, yet completed: the replay-exact
+            # recovery actually delivered
+            self.recovered += 1
         if reason == "eos":
             req.reason = "eos"
             self.eos_finished += 1
@@ -1583,11 +1792,287 @@ class Engine:
             if fin[i]:
                 self._finish(self.slots_req[i], reason="eos")
 
+    # ------------------------------------------------------- fault tolerance
+
+    def _fault_fires(self, kind: str, *, site: Optional[str] = None,
+                     rid: Optional[int] = None,
+                     slot_active=None) -> Optional[FaultSpec]:
+        """The first armed ``FaultPlan`` entry of ``kind`` that fires now,
+        consuming one of its ``times`` — or None. A fault arms once the
+        engine tick reaches its ``step``; ``exception`` faults additionally
+        match site (and, if targeted, rid), and ``nan`` faults wait until
+        their slot actually holds an active request (``slot_active``)."""
+        if self.fault_plan is None:
+            return None
+        for idx, f in enumerate(self.fault_plan.faults):
+            if f.kind != kind or self._tick < f.step:
+                continue
+            if self._fault_fired.get(idx, 0) >= f.times:
+                continue
+            if kind == "exception":
+                if f.site != site:
+                    continue
+                if f.rid is not None and rid != f.rid:
+                    continue
+            if kind == "nan" and slot_active is not None \
+                    and not slot_active(f.slot):
+                continue
+            self._fault_fired[idx] = self._fault_fired.get(idx, 0) + 1
+            self.faults_injected += 1
+            self.trace.append({"event": "fault_inject", "kind": kind,
+                               "tick": self._tick, "site": site, "rid": rid,
+                               "slot": f.slot})
+            return f
+        return None
+
+    def _maybe_raise(self, site: str, rid: Optional[int] = None) -> None:
+        """Fire an armed ``exception`` fault at an engine boundary — before
+        the jit dispatch, exactly where a real runtime error would surface
+        (and before any buffer is donated, so unwinding is safe)."""
+        f = self._fault_fires("exception", site=site, rid=rid)
+        if f is not None:
+            raise InjectedFault(site, f"injected {site} fault "
+                                      f"(tick {self._tick}, rid {rid})")
+
+    def _arm_poison(self, active) -> Any:
+        """The decode step's poison input: all-False (a bitwise identity in
+        ``poison_and_guard``) except for the single tick an armed ``nan``
+        fault fires on a slot holding an active request. The device vector
+        is rebuilt only when the host staging changes."""
+        if self._poison_np.any():
+            self._poison_np[:] = False
+            self._poison_dev = None
+        f = self._fault_fires(
+            "nan", slot_active=lambda s: s in active
+            and self.slots_req[s] is not None)
+        if f is not None:
+            self._poison_np[f.slot] = True
+            self._poison_dev = None
+        if self._poison_dev is None:
+            self._poison_dev = jnp.asarray(self._poison_np)
+        return self._poison_dev
+
+    def _nan_poll(self, active) -> None:
+        """Read the sticky device-side finite-guard mask and quarantine
+        poisoned slots. Polled on the EOS cadence — plus whenever an active
+        request is about to finish, so a poisoned stream is never finalized
+        as done — and only on engines that armed the guard: everyone else
+        keeps the sync-free hot loop."""
+        if not self._nan_guard:
+            return
+        every = self.ecfg.eos_poll_every
+        due = bool(every) and self.decode_steps % every == 0
+        if not due and not any(
+                self.slots_req[i] is not None
+                and self.slots_req[i]._remaining <= 0 for i in active):
+            return
+        bad = np.asarray(self.poisoned)
+        for i in active:
+            req = self.slots_req[i]
+            if req is not None and bad[i]:
+                self._fault_unwind(req, i, "nan",
+                                   "non-finite decode logits")
+
+    def _fault_unwind(self, req: Request, i: int, kind: str,
+                      detail: str = "") -> None:
+        """Quarantine a faulted request: drop its partial stream, release
+        its slot (and pages), and either requeue it for a replay-exact
+        recompute — bounded retries, exponential backoff in admission
+        order — or terminate it ``failed``. This mirrors
+        :meth:`_evict_victim`'s cleanup: the PRNG key snapshot survives, so
+        the replayed stream is bitwise the fault-free one."""
+        self._collect_tokens()
+        self._pending_tokens.pop(req.rid, None)
+        if self.paged and self._slot_pages[i]:
+            self.allocator.free(self._slot_pages[i])
+            self._slot_pages[i] = []
+            self.page_table_np[i, :] = 0
+        self._prefilling.pop(i, None)
+        if self.slots_req[i] is req:
+            self.slots_req[i] = None
+        self.pos[i] = 0
+        self.eos_np[i] = -1
+        self.temps_np[i] = 0.0
+        self.topps_np[i] = 1.0
+        self.presence_np[i] = 0.0
+        self.frequency_np[i] = 0.0
+        self._policy_dev = None
+        self.finished = self.finished.at[i].set(False)
+        if self._nan_guard:
+            self.poisoned = self.poisoned.at[i].set(False)
+            self._poison_np[i] = False
+            self._poison_dev = None
+        req.slot = -1
+        req._first_tok = None
+        req._remaining = 0
+        req._chunk_cursor = 0
+        req._prefix_keys, req._prefix_hit = None, 0
+        req.tokens_out = []
+        # req._key is NOT reset — same argument as eviction-by-recompute
+        req._retries += 1
+        self.quarantines += 1
+        self.trace.append({"event": "quarantine", "rid": req.rid,
+                           "kind": kind, "slot": i,
+                           "retries": req._retries})
+        if req._retries > self.ecfg.max_retries:
+            self._fail(req, kind, detail)
+            return
+        req.state = "queued"
+        # exponential backoff in admission order: the replay waits
+        # 2**(retries-1) ticks before it is eligible again, so a
+        # persistently-faulting request cannot monopolize admission
+        req._not_before = self._tick + (1 << (req._retries - 1))
+        self.queue.appendleft(req)
+
+    def _fail(self, req: Request, kind: str, detail: str = "") -> None:
+        """Retries exhausted: terminal ``failed`` with a typed
+        ``FailureInfo`` — the engine keeps serving everyone else."""
+        info = FailureInfo(rid=req.rid, kind=kind,
+                           retries=req._retries - 1, detail=detail)
+        req.state, req.reason, req.failure = "failed", kind, info
+        req.t_done = time.perf_counter()
+        self.failed += 1
+        self.failures.append(info)
+        self.trace.append({"event": "fail", "rid": req.rid, "kind": kind,
+                           "retries": info.retries})
+
+    def _decode_fault(self, e: Exception) -> None:
+        """A decode/verify boundary raised: no tokens were committed this
+        step, but the step's outputs are untrusted — quarantine the policy
+        victim (the same attribution heuristic eviction uses, since a batch-
+        level fault has no single guilty slot) and replay it."""
+        victims = [r for r in self.slots_req if r is not None]
+        if not victims:
+            return
+        req = policy_victim(self.policy, victims)
+        self._fault_unwind(req, req.slot, "exception", str(e))
+
+    def _watchdog_trip(self, dt_ms: float) -> None:
+        """An engine iteration exceeded ``watchdog_ms``: count the trip and
+        quarantine the policy victim — a hung sequence is converted into a
+        fault and recovered like any other, instead of stalling the batch
+        forever."""
+        self.watchdog_trips += 1
+        self.trace.append({"event": "watchdog", "tick": self._tick,
+                           "ms": round(dt_ms, 1)})
+        victims = [r for r in self.slots_req if r is not None]
+        if victims:
+            req = policy_victim(self.policy, victims)
+            self._fault_unwind(
+                req, req.slot, "stall",
+                f"step took {dt_ms:.0f}ms > watchdog "
+                f"{self.ecfg.watchdog_ms:.0f}ms")
+
+    def _maybe_degrade(self) -> bool:
+        """Pressure-triggered degraded mode: before a speculative engine
+        starts evicting, drop the lookahead reservation and fall back to the
+        plain one-token decode loop. Only engaged when every live and queued
+        request is greedy — greedy spec and plain streams are bitwise
+        identical, so the mode switch is invisible; a sampled stream's draws
+        depend on which loop serves it, so sampled workloads keep the
+        eviction path instead."""
+        if self._spec is None or self.degraded:
+            return False
+        reqs = [r for r in self.slots_req if r is not None] \
+            + list(self.queue) + list(self._prefilling.values())
+        if any(r.sampling is not None and not r.sampling.greedy
+               for r in reqs):
+            return False
+        self.degraded = True
+        self.degraded_entries += 1
+        self.trace.append({"event": "degrade", "tick": self._tick})
+        return True
+
+    def _maybe_exit_degraded(self) -> None:
+        """Leave degraded mode once the pool again has headroom for every
+        active slot's lookahead reservation (one hysteresis page each, so
+        the mode doesn't flap at the boundary)."""
+        per = -(-self._slack // self.ecfg.page_size) + 1
+        occupied = sum(1 for r in self.slots_req if r is not None)
+        if self.allocator.available >= per * max(occupied, 1):
+            # flush plain-decode tokens before the spec loop appends to
+            # _pending_tokens directly again, or streams would interleave
+            self._collect_tokens()
+            self.degraded = False
+            self.trace.append({"event": "undegrade", "tick": self._tick})
+
+    def _shed_deadlines(self) -> None:
+        """Actual deadline enforcement (``enforce_deadlines=True``): a
+        queued request whose TTFT deadline has already passed can no longer
+        meet its SLO no matter what admission does — shed it now, typed
+        ``SHED_DEADLINE``, instead of burning prefill compute on dead work.
+        Active requests are never shed (their first token is already paid
+        for or imminent)."""
+        if not self.queue:
+            return
+        now = time.perf_counter()
+        kept: Deque[Request] = deque()
+        for r in self.queue:
+            if r.deadline_ms is not None \
+                    and (now - r.t_submit) * 1e3 > r.deadline_ms:
+                r.state, r.reason = "shed", "SHED_DEADLINE"
+                r.t_done = now
+                self.shed_deadline += 1
+                self.slo_missed += 1
+                by = self.slo_by_class.setdefault(r.priority_class, [0, 0])
+                by[1] += 1
+                self.trace.append({"event": "shed", "rid": r.rid,
+                                   "deadline_ms": r.deadline_ms})
+            else:
+                kept.append(r)
+        if len(kept) != len(self.queue):
+            self.queue = kept
+
+    def check_invariants(self) -> None:
+        """Debug-mode consistency check (``EngineConfig.debug_checks``), run
+        each tick: allocator invariants plus the engine's page-table view —
+        slot rows mirror ``_slot_pages``, mapped entries are live, rows fit
+        ``pages_per_slot``, and empty slots hold no pages. Dense engines
+        have no page state, so this is a no-op there."""
+        if not self.paged:
+            return
+        self.allocator.check_invariants()
+        for i in range(self.ecfg.slots):
+            row = self._slot_pages[i]
+            if len(row) > self.pages_per_slot:
+                raise RuntimeError(f"slot {i} holds {len(row)} pages > "
+                                   f"pages_per_slot {self.pages_per_slot}")
+            table = self.page_table_np[i]
+            if list(table[:len(row)]) != row:
+                raise RuntimeError(f"slot {i} page table "
+                                   f"{table[:len(row)].tolist()} != slot "
+                                   f"pages {row}")
+            if np.any(table[len(row):]):
+                raise RuntimeError(f"slot {i} page table maps entries past "
+                                   f"its {len(row)} pages")
+            dead = [p for p in row if self.allocator.refcount(p) < 1]
+            if dead:
+                raise RuntimeError(f"slot {i} maps dead pages {dead}")
+            if row and self.slots_req[i] is None \
+                    and i not in self._prefilling:
+                raise RuntimeError(f"empty slot {i} still holds pages {row}")
+
     def step(self) -> int:
         """One engine iteration: refill free slots (and, in chunked mode,
         advance one prefill chunk), then one decode step for the whole batch.
-        Returns the number of active slots decoded."""
+        Returns the number of active slots decoded.
+
+        Fault-tolerant engines additionally: shed past-deadline queued
+        requests (``enforce_deadlines``), run invariant checks
+        (``debug_checks``), fire armed faults from the ``FaultPlan``, poll
+        the device-side finite guard on the EOS cadence, and time the whole
+        iteration against the wall-clock watchdog."""
+        t_step = time.perf_counter() if self.ecfg.watchdog_ms else None
         self._activated = []
+        if self.degraded:
+            self._maybe_exit_degraded()
+        if self.ecfg.enforce_deadlines:
+            self._shed_deadlines()
+        if self.ecfg.debug_checks:
+            self.check_invariants()
+        stall = self._fault_fires("stall")
+        if stall is not None:
+            time.sleep(stall.stall_s)
         self._admit_into_free_slots()
         if self.paged:
             self._prefill_tick()
@@ -1609,36 +2094,67 @@ class Engine:
                     jnp.asarray(self.topks_np), jnp.asarray(self.topps_np),
                     jnp.asarray(self.eos_np), jnp.asarray(self.presence_np),
                     jnp.asarray(self.frequency_np))
-            if self._spec is not None:
-                self._spec_step(active)
+            if self._spec is not None and not self.degraded:
+                try:
+                    self._maybe_raise("verify")
+                    self._spec_step(active)
+                except Exception as e:   # noqa: BLE001 — FT quarantine
+                    if not self.ft:
+                        raise
+                    self._decode_fault(e)
             else:
                 keys, temps, topks, topps, eos, presence, frequency = \
                     self._policy_dev
-                if self.paged:
-                    nxt, self.finished, self.pool, self.counts = self._decode(
-                        self.params, self.pool, self._device_page_table(),
-                        self.tokens, jnp.asarray(self.pos), keys, temps,
-                        topks, topps, eos, self.finished, self.counts,
-                        presence, frequency)
+                poison = self._arm_poison(active)
+                try:
+                    self._maybe_raise("decode")
+                    if self.paged:
+                        out = self._decode(
+                            self.params, self.pool,
+                            self._device_page_table(), self.tokens,
+                            jnp.asarray(self.pos), keys, temps, topks,
+                            topps, eos, self.finished, self.counts,
+                            presence, frequency, poison, self.poisoned)
+                    else:
+                        out = self._decode(
+                            self.params, self.cache, self.tokens,
+                            jnp.asarray(self.pos), keys, temps, topks,
+                            topps, eos, self.finished, self.counts,
+                            presence, frequency, poison, self.poisoned)
+                except Exception as e:   # noqa: BLE001 — FT quarantine
+                    if not self.ft:
+                        raise
+                    # the injection raises *before* the jit dispatch, so no
+                    # donated buffer was consumed: state is intact
+                    self._decode_fault(e)
                 else:
-                    nxt, self.finished, self.cache, self.counts = self._decode(
-                        self.params, self.cache, self.tokens,
-                        jnp.asarray(self.pos), keys, temps, topks, topps,
-                        eos, self.finished, self.counts, presence, frequency)
-                self.tokens = nxt[:, None]
-                rids = tuple(self.slots_req[i].rid
-                             if self.slots_req[i] is not None
-                             else -1 for i in range(self.ecfg.slots))
-                self._toklog.append((nxt, rids))
-                self.decode_steps += 1
-                self._occupancy_sum += len(active)
-                for i in active:
-                    req = self.slots_req[i]
-                    self.pos[i] += 1
-                    req._remaining -= 1
-                    if req._remaining <= 0:
-                        self._finish(req)
-                self._eos_poll()
+                    nxt, self.finished, store, self.counts, self.poisoned = \
+                        out
+                    if self.paged:
+                        self.pool = store
+                    else:
+                        self.cache = store
+                    if self._spec is not None:
+                        self.degraded_steps += 1
+                    self.tokens = nxt[:, None]
+                    rids = tuple(self.slots_req[i].rid
+                                 if self.slots_req[i] is not None
+                                 else -1 for i in range(self.ecfg.slots))
+                    self._toklog.append((nxt, rids))
+                    self.decode_steps += 1
+                    self._occupancy_sum += len(active)
+                    for i in active:
+                        self.pos[i] += 1
+                        self.slots_req[i]._remaining -= 1
+                    # guard poll runs between the countdown and _finish: a
+                    # poisoned stream must be quarantined, never finalized
+                    self._nan_poll(active)
+                    for i in active:
+                        req = self.slots_req[i]
+                        if req is not None and req.state == "active" \
+                                and req._remaining <= 0:
+                            self._finish(req)
+                    self._eos_poll()
         if self._sync_each_step:
             jax.block_until_ready(self.tokens)
         if self._activated and not self._sync_each_step:
@@ -1648,6 +2164,11 @@ class Engine:
         self.peak_concurrent = max(self.peak_concurrent, len(active))
         if self.paged:
             self.peak_pages = max(self.peak_pages, self.allocator.in_use)
+        self._tick += 1
+        if t_step is not None:
+            dt_ms = (time.perf_counter() - t_step) * 1e3
+            if dt_ms > self.ecfg.watchdog_ms:
+                self._watchdog_trip(dt_ms)
         return len(active)
 
     def _spec_step(self, active) -> None:
@@ -1755,8 +2276,12 @@ class Engine:
     def finalize_request(self, req: Request) -> List[int]:
         """First token (from prefill logits) + decode-step tokens. Streams
         with an ``eos_id`` are truncated at the first EOS (inclusive) — any
-        frozen post-EOS fill tokens the device emitted are dropped here."""
+        frozen post-EOS fill tokens the device emitted are dropped here.
+        Finalization is a host-sync point anyway, so the device token log is
+        flushed first — callers driving ``step()`` by hand (instead of
+        ``run()``) get complete streams too."""
         if not req.tokens_out:
+            self._collect_tokens()
             out: List[int] = []
             if req._first_tok is not None:
                 out.append(int(np.asarray(req._first_tok)[0]))
@@ -1767,11 +2292,157 @@ class Engine:
             req.tokens_out = out
         return req.tokens_out
 
+    # -------------------------------------------------------- snapshot/restore
+
+    def snapshot(self) -> EngineSnapshot:
+        """Copy the engine's full serving state to host buffers — the
+        ``upir.memory_snapshot`` MemOp of a fault-tolerant plan, realized.
+
+        Captures everything a crash-restarted engine needs to resume every
+        in-flight stream bitwise: KV pool (or dense cache), page tables +
+        allocator accounting, per-slot decode policy and device masks, the
+        request objects (queue / slots / chunked prefills, deep-copied
+        *together* so shared identity survives) with their PRNG key
+        snapshots, prefix-index entries (with cached tail logits), and the
+        admission counters future rids/keys depend on. Stats and trace are
+        observability, not state, and are not captured. Speculative engines
+        are refused — the draft cache is not snapshotted."""
+        if self._spec is not None:
+            raise ValueError("snapshot does not support speculative "
+                             "engines: the draft cache is not captured")
+        self._collect_tokens()
+        host = lambda t: np.asarray(t)   # noqa: E731
+        kv = jax.tree_util.tree_map(host,
+                                    self.pool if self.paged else self.cache)
+        live: List[Request] = [r for r in self.slots_req if r is not None] \
+            + list(self.queue) + list(self._prefilling.values())
+        for r in live:
+            if r._first_tok is not None:
+                r._first_tok = np.asarray(r._first_tok)   # host-normalize
+        slots_c, queue_c, prefill_c = copy.deepcopy(
+            (list(self.slots_req), list(self.queue),
+             dict(self._prefilling)))
+        prefix_entries = None
+        if self.prefix_cache:
+            prefix_entries = [
+                (k, e["page"],
+                 None if e.get("logits") is None else host(e["logits"]))
+                for k, e in self.prefix_index._entries.items()]
+        snap = EngineSnapshot(
+            fingerprint=self.plan.fingerprint,
+            tick=self._tick,
+            rid=self._rid,
+            admit_counter=self._admit_counter,
+            kv=kv,
+            tokens=host(self.tokens),
+            pos=self.pos.copy(),
+            finished=host(self.finished),
+            poisoned=host(self.poisoned),
+            counts=host(self.counts),
+            policy_np={"keys": self.keys_np.copy(),
+                       "temps": self.temps_np.copy(),
+                       "topks": self.topks_np.copy(),
+                       "topps": self.topps_np.copy(),
+                       "eos": self.eos_np.copy(),
+                       "presence": self.presence_np.copy(),
+                       "frequency": self.frequency_np.copy()},
+            page_table=self.page_table_np.copy() if self.paged else None,
+            slot_pages=[list(r) for r in self._slot_pages]
+            if self.paged else None,
+            alloc_free=list(self.allocator._free) if self.paged else None,
+            alloc_ref=dict(self.allocator._ref) if self.paged else None,
+            slots_req=slots_c,
+            queue=queue_c,
+            prefilling=prefill_c,
+            pending_tokens={rid: list(v)
+                            for rid, v in self._pending_tokens.items()},
+            prefix_entries=prefix_entries,
+            enc_memory=host(self.enc_memory)
+            if self.spec.needs_encoder_memory else None,
+            slot_used=list(self._slot_used))
+        self.trace.append({"event": "snapshot", "tick": self._tick,
+                           "fingerprint": self.plan.fingerprint})
+        return snap
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Load a :meth:`snapshot` back into this engine — the
+        ``upir.memory_restore`` MemOp. The snapshot must come from the same
+        decode plan (fingerprint-pinned: geometry, scheduling, and the
+        fault-tolerance contract all participate); after restore the engine
+        resumes every in-flight stream bitwise where the snapshot left off.
+        The snapshot itself is not consumed — it deep-copies its request
+        objects back in, so one snapshot can seed several engines."""
+        if snap.fingerprint != self.plan.fingerprint:
+            raise ValueError(
+                f"snapshot was taken under plan {snap.fingerprint}, this "
+                f"engine runs {self.plan.fingerprint}: model/geometry/"
+                f"scheduling/fault-tolerance must match for bitwise resume")
+        if self._spec is not None:
+            raise ValueError("restore does not support speculative engines")
+        slots_c, queue_c, prefill_c = copy.deepcopy(
+            (snap.slots_req, snap.queue, snap.prefilling))
+        if self.paged:
+            self.pool = jax.tree_util.tree_map(jnp.asarray, snap.kv)
+            self.allocator = PagedKVAllocator(self.num_pages)
+            self.allocator._free = list(snap.alloc_free)
+            self.allocator._ref = dict(snap.alloc_ref)
+            self.page_table_np = snap.page_table.copy()
+            self._slot_pages = [list(r) for r in snap.slot_pages]
+            if self.prefix_cache:
+                # rebuild the index in snapshot (= LRU) order; the allocator
+                # refcounts restored above already include the index's
+                # references, so registration takes no new ones
+                self.prefix_index = PrefixIndex(
+                    self.ecfg.page_size,
+                    salt=f"{self.cfg.name}/{self.plan.fingerprint}")
+                for k, page, logits in snap.prefix_entries or []:
+                    self.prefix_index.register(k, page)
+                    if logits is not None:
+                        self.prefix_index.attach_logits(
+                            k, jnp.asarray(logits))
+        else:
+            self.cache = jax.tree_util.tree_map(jnp.asarray, snap.kv)
+        if self.spec.needs_encoder_memory and snap.enc_memory is not None:
+            self.enc_memory = jnp.asarray(snap.enc_memory)
+        self.tokens = jnp.asarray(snap.tokens)
+        self.pos = snap.pos.copy()
+        self.finished = jnp.asarray(snap.finished)
+        self.poisoned = jnp.asarray(snap.poisoned)
+        self.counts = jnp.asarray(snap.counts)
+        self.keys_np = snap.policy_np["keys"].copy()
+        self.temps_np = snap.policy_np["temps"].copy()
+        self.topks_np = snap.policy_np["topks"].copy()
+        self.topps_np = snap.policy_np["topps"].copy()
+        self.eos_np = snap.policy_np["eos"].copy()
+        self.presence_np = snap.policy_np["presence"].copy()
+        self.frequency_np = snap.policy_np["frequency"].copy()
+        self._policy_dev = None
+        self._poison_np[:] = False
+        self._poison_dev = None
+        self.slots_req = list(slots_c)
+        self.queue = deque(queue_c)
+        self._prefilling = dict(prefill_c)
+        self._slot_used = list(snap.slot_used
+                               if snap.slot_used is not None
+                               else [True] * self.ecfg.slots)
+        self._pending_tokens = {rid: list(v)
+                                for rid, v in snap.pending_tokens.items()}
+        self._toklog = []
+        self._rid = snap.rid
+        self._admit_counter = snap.admit_counter
+        self._tick = snap.tick
+        self.degraded = False
+        self.trace.append({"event": "restore", "tick": self._tick,
+                           "fingerprint": snap.fingerprint})
+
     # -------------------------------------------------------------- stats
 
     def reset_stats(self) -> None:
         """Zero the counters (keep compiled artifacts) — call after warmup so
-        throughput numbers exclude jit compilation."""
+        throughput numbers exclude jit compilation. Also restarts the engine
+        tick clock and the ``FaultPlan`` fired-counts: fault steps are
+        measured from the last reset, which is what makes the warm → reset →
+        measure pattern give predictable injection ticks."""
         self.decode_steps = 0
         self.prefills = 0
         self.prefill_chunks = 0
@@ -1799,6 +2470,18 @@ class Engine:
         self.prefix_hit_tokens = 0
         self.prefix_reclaimed = 0
         self.cow_copies = 0
+        self.rejected_queue_full = 0
+        self.shed_deadline = 0
+        self.faults_injected = 0
+        self.quarantines = 0
+        self.recovered = 0
+        self.failed = 0
+        self.watchdog_trips = 0
+        self.degraded_steps = 0
+        self.degraded_entries = 0
+        self.failures: List[FailureInfo] = []
+        self._fault_fired: Dict[int, int] = {}
+        self._tick = 0
         self._occupancy_sum = 0
         self.elapsed_s = 0.0
 
@@ -1843,6 +2526,8 @@ class Engine:
             slo_by_class={c: ok / (ok + miss)
                           for c, (ok, miss) in sorted(
                               self.slo_by_class.items())},
+            rejected_queue_full=self.rejected_queue_full,
+            shed_deadline=self.shed_deadline,
             plan_cache=self.plan_cache.stats(),
         )
         if self.paged:
@@ -1869,6 +2554,15 @@ class Engine:
             out.draft_accepted = self.draft_accepted
             out.acceptance_rate = (self.draft_accepted / self.draft_proposed
                                    if self.draft_proposed else 0.0)
+            out.degraded_steps = self.degraded_steps
+            out.degraded_entries = self.degraded_entries
+        if self.ft:
+            out.faults_injected = self.faults_injected
+            out.quarantines = self.quarantines
+            out.recovered = self.recovered
+            out.failed = self.failed
+            out.watchdog_trips = self.watchdog_trips
+            out.failures = list(self.failures)
         return out
 
 

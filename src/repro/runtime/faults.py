@@ -1,0 +1,205 @@
+"""Fault injection + failure types for the serving engine.
+
+The engine's recovery machinery (``runtime.engine``) is only trustworthy if
+every path through it is exercised deterministically, so faults are injected
+from a validated, frozen :class:`FaultPlan` (``EngineConfig.fault_plan``)
+rather than scattered monkeypatches. A plan is a tuple of :class:`FaultSpec`
+entries, each naming a *kind*, the engine tick at which it arms, and how many
+times it fires:
+
+* ``nan`` — poison one decode slot's last-position logits with NaN before
+  token selection. Detection is the device-side finite-guard the engine
+  folds into its decode step (sticky ``poisoned`` mask, polled on the EOS
+  cadence — no new hot-loop syncs); recovery is quarantine + replay.
+* ``exception`` — raise :class:`InjectedFault` at an engine boundary
+  (``site`` = ``prefill`` | ``decode`` | ``verify``) before the jit
+  dispatch, exactly where a real runtime error would surface. ``rid``
+  optionally targets one request's prefill, which is how retry exhaustion
+  (terminal ``FAILED``) is driven deterministically.
+* ``stall`` — sleep ``stall_s`` seconds inside the step, so the engine's
+  wall-clock watchdog (``EngineConfig.watchdog_ms``) has something real to
+  trip on.
+* ``alloc_fail`` — force one paged-KV allocation attempt to come up dry,
+  driving the pool-pressure path (reclaim / degrade / evict) on demand.
+
+Ticks are measured from the engine's last ``reset_stats()`` (the warmup
+pattern: warm, reset, then serve — faults fire at predictable ticks in the
+measured run). Everything here is host-side data; the engine owns the
+mutable fired-counts so a ``FaultPlan`` can be shared between engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("nan", "exception", "stall", "alloc_fail")
+FAULT_SITES = ("prefill", "decode", "verify")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the engine at an injected ``exception`` boundary; carries
+    the site so quarantine events stay attributable in the trace."""
+
+    def __init__(self, site: str, detail: str = ""):
+        super().__init__(detail or f"injected fault at {site}")
+        self.site = site
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One injected fault.
+
+    * ``kind`` — one of :data:`FAULT_KINDS`.
+    * ``step`` — engine tick (measured from the last ``reset_stats``) at
+      which the fault arms; it fires on the first eligible boundary at or
+      after that tick.
+    * ``times`` — how many times it fires before exhausting (an
+      ``exception`` fault with ``times > max_retries`` is how a request is
+      driven to terminal ``FAILED``).
+    * ``slot`` — target decode slot (``nan`` only); the fault waits for a
+      tick where that slot holds an active request.
+    * ``rid`` — target request id (``exception`` only, ``None`` = any);
+      rid-targeted faults follow the request through re-admissions.
+    * ``site`` — boundary for ``exception`` faults.
+    * ``stall_s`` — injected sleep for ``stall`` faults.
+    """
+
+    kind: str
+    step: int = 0
+    times: int = 1
+    slot: int = 0
+    rid: Optional[int] = None
+    site: str = "decode"
+    stall_s: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"fault kind must be one of {FAULT_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.step < 0:
+            raise ValueError(f"fault step must be >= 0, got {self.step}")
+        if self.times < 1:
+            raise ValueError(f"fault times must be >= 1, got {self.times}")
+        if self.slot < 0:
+            raise ValueError(f"fault slot must be >= 0, got {self.slot}")
+        if self.site not in FAULT_SITES:
+            raise ValueError(f"fault site must be one of {FAULT_SITES}, "
+                             f"got {self.site!r}")
+        if self.kind == "stall" and not self.stall_s > 0:
+            raise ValueError(f"stall_s must be > 0 for stall faults, "
+                             f"got {self.stall_s}")
+        if self.rid is not None and self.rid < 1:
+            raise ValueError(f"fault rid must be >= 1, got {self.rid}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Validated, frozen schedule of injected faults.
+
+    ``seed`` exists so :meth:`random` plans are reproducible — the plan a
+    seed generates is a pure function of the seed and the bounds, and the
+    seed rides along in ``describe()`` so traces identify the plan.
+    """
+
+    faults: Tuple[FaultSpec, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+        for f in self.faults:
+            if not isinstance(f, FaultSpec):
+                raise ValueError(f"FaultPlan.faults entries must be "
+                                 f"FaultSpec, got {f!r}")
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+    def kinds(self) -> Tuple[str, ...]:
+        return tuple(f.kind for f in self.faults)
+
+    def total_fires(self) -> int:
+        """Upper bound on injections this plan can perform."""
+        return sum(f.times for f in self.faults)
+
+    def describe(self) -> str:
+        inner = " ".join(f"{f.kind}@{f.step}" for f in self.faults)
+        return f"faults(seed={self.seed} {inner})" if inner \
+            else f"faults(seed={self.seed})"
+
+    @classmethod
+    def random(cls, seed: int, *, n: int = 4, max_step: int = 64,
+               slots: int = 4, kinds: Tuple[str, ...] = FAULT_KINDS,
+               stall_s: float = 0.05) -> "FaultPlan":
+        """Seed-deterministic plan: ``n`` faults drawn over ``kinds`` with
+        arming ticks in ``[0, max_step)`` — the same seed always yields the
+        same plan, so randomized fault campaigns are replayable."""
+        bad = [k for k in kinds if k not in FAULT_KINDS]
+        if bad:
+            raise ValueError(f"unknown fault kinds {bad}")
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n):
+            kind = kinds[int(rng.integers(0, len(kinds)))]
+            faults.append(FaultSpec(
+                kind=kind, step=int(rng.integers(0, max_step)),
+                slot=int(rng.integers(0, slots)),
+                site="prefill" if kind == "exception"
+                and rng.integers(0, 2) else "decode",
+                stall_s=stall_s))
+        return cls(faults=tuple(faults), seed=seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureInfo:
+    """Why a request terminated ``FAILED``: the fault kind that exhausted
+    its retries, how many replays were attempted, and free-form detail."""
+
+    rid: int
+    kind: str
+    retries: int
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """Host-side copy of an engine's full serving state
+    (``Engine.snapshot()`` / ``Engine.restore()``).
+
+    Everything a crash-restarted engine needs to resume every in-flight
+    stream bitwise: the KV pool (or dense cache) pulled to host buffers,
+    page tables + allocator free list/refcounts, per-slot decode policy and
+    device masks, the request objects themselves (queue, slots, chunked
+    prefills) with their PRNG key snapshots, and the admission counters
+    whose values future rids/keys depend on. ``fingerprint`` pins the
+    snapshot to the decode plan that produced it — restoring into an engine
+    with a different program (geometry, scheduling, fault-tolerance
+    annotation...) is refused. Stats/trace are observability, not state,
+    and are deliberately not captured. Rendered into the UPIR program as
+    ``upir.memory_snapshot`` / ``upir.memory_restore`` MemOps on
+    fault-tolerant plans.
+    """
+
+    fingerprint: str
+    tick: int
+    rid: int
+    admit_counter: int
+    kv: Any                            # host pytree: pool or dense cache
+    tokens: np.ndarray
+    pos: np.ndarray
+    finished: np.ndarray
+    poisoned: np.ndarray
+    counts: np.ndarray
+    policy_np: Dict[str, np.ndarray]   # keys/temps/topks/topps/eos/pen arrays
+    page_table: Optional[np.ndarray]
+    slot_pages: Optional[List[List[int]]]
+    alloc_free: Optional[List[int]]
+    alloc_ref: Optional[Dict[int, int]]
+    slots_req: List[Any]               # deep-copied Request objects (or None)
+    queue: List[Any]
+    prefilling: Dict[int, Any]         # slot -> deep-copied Request
+    pending_tokens: Dict[int, List[int]]
+    prefix_entries: Optional[List[Tuple[bytes, int, Optional[np.ndarray]]]]
+    enc_memory: Optional[np.ndarray] = None
+    slot_used: Optional[List[bool]] = None

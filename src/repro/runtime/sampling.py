@@ -220,6 +220,27 @@ def decode_select(logits, keys, pos, temps, top_ks, eos_ids, finished,
     return nxt, finished
 
 
+def poison_and_guard(logits, poison, bad):
+    """Fault injection + detection for one decode step's last-position
+    logits, fused into the hot loop so neither costs a sync.
+
+    ``poison`` bool [B] overwrites a row's logits with NaN — the engine's
+    ``FaultPlan`` arms it for exactly one step; all-False rows pass through
+    **bitwise unchanged** (``where`` selects the original values), so a
+    fault-tolerant engine with no armed fault emits the same streams as one
+    built without the guard. ``bad`` bool [B] is the sticky finite-guard
+    mask: a row whose logits contain any NaN/Inf — injected or real — sets
+    its bit and keeps it until the host quarantines the slot (the mask is
+    polled on the EOS cadence, so detection adds no new syncs). Returns
+    ``(logits, bad)``; selection runs on the possibly-poisoned logits, as
+    it would on a real numerical fault.
+    """
+    lg = jnp.where(poison[:, None], jnp.asarray(jnp.nan, logits.dtype),
+                   logits)
+    bad = bad | ~jnp.all(jnp.isfinite(lg.astype(jnp.float32)), axis=-1)
+    return lg, bad
+
+
 # ------------------------------------------------------- speculative decoding
 
 # Sub-key tags for the draft/verify loop. The draft's *proposal* at position p

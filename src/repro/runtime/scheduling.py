@@ -204,6 +204,22 @@ def select_index(policy: SchedulingPolicy, queue: Sequence[Any], *,
     return first[tenant]
 
 
+def backoff_eligible(queue: Sequence[Any], tick: int):
+    """Indices of queued requests whose quarantine backoff has expired.
+
+    Fault-tolerant engines re-admit quarantined requests with an exponential
+    backoff expressed in engine ticks (``Request._not_before``); admission
+    must only consider requests whose delay has elapsed, while still letting
+    the declarative policy order the eligible subset. Returns ``None`` when
+    *every* request is eligible — the no-faults fast path, so the engine can
+    hand the queue to :func:`select_index` unsliced — otherwise the list of
+    eligible queue indices (possibly empty)."""
+    if all(getattr(r, "_not_before", 0) <= tick for r in queue):
+        return None
+    return [i for i, r in enumerate(queue)
+            if getattr(r, "_not_before", 0) <= tick]
+
+
 def victim(policy: SchedulingPolicy, running: Sequence[Any]) -> Any:
     """The running request to evict under pool pressure.
 

@@ -31,7 +31,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  page_geometry: Optional[Tuple[int, int, int]] = None,
                  prefix_sharing: bool = False,
                  spec_decode: Optional[Tuple[str, int]] = None,
-                 scheduling: Optional[Dict[str, Any]] = None
+                 scheduling: Optional[Dict[str, Any]] = None,
+                 fault_tolerant: bool = False
                  ) -> LoweredPlan:
     """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
     LoweredPlan, via the PlanCache.
@@ -49,6 +50,9 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     ``scheduling`` (a ``SchedulingPolicy.ext()`` dict) annotates the decode
     program with its admission policy — rendered as ``sched(...)`` and
     fingerprinted, so engines with different policies never share a plan.
+    ``fault_tolerant=True`` marks the cache's memory contract as
+    fault-tolerant (``mm(fault_tolerant)`` + snapshot/restore MemOps), so
+    FT-enabled engines fingerprint apart too.
     """
     from ..core.plans import build_program
     cache = plan_cache if plan_cache is not None else default_plan_cache()
@@ -56,7 +60,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     prog = build_program(cfg, shape, page_geometry=page_geometry,
                          prefix_sharing=prefix_sharing,
                          spec_decode=spec_decode,
-                         scheduling=scheduling)
+                         scheduling=scheduling,
+                         fault_tolerant=fault_tolerant)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)
 

@@ -55,6 +55,10 @@ def test_upir_text_examples_cover_the_features_they_claim(examples):
     sched = rendered["sched-decode"]
     assert "sched(policy(priority) prefix_affinity preempt)" in sched
     assert "caps(pageable), sched(" in sched   # sched renders after caps
+    ft = rendered["ft-decode"]
+    for needle in ("fault_tolerant", "upir.memory_snapshot",
+                   "upir.memory_restore"):
+        assert needle in ft, needle
     train = rendered["train-step"]
     assert "upir.kernel @train_step" in train
     assert "upir.sync allreduce" in train
@@ -72,7 +76,7 @@ def test_every_fingerprinted_mm_and_cap_key_is_documented():
 
 def test_memop_kinds_documented():
     spec_text = (DOCS / "UPIR_TEXT.md").read_text()
-    for kind in ("alloc", "dealloc", "share", "cow"):
+    for kind in ("alloc", "dealloc", "share", "cow", "snapshot", "restore"):
         assert kind in spec_text
 
 

@@ -1,0 +1,478 @@
+"""Fault-tolerant serving (``runtime.faults`` + engine integration).
+
+The contracts under test: injected faults (NaN poisoning, raised exceptions,
+stalls, forced allocator exhaustion) are detected and quarantined, recovered
+streams are bitwise identical to a fault-free engine (replay-exact recovery
+through the eviction-by-recompute path), retries exhaust into a typed FAILED
+outcome instead of a crash, snapshot/restore resumes mid-flight state
+bitwise, deadline shedding and bounded-queue rejection are typed outcomes,
+allocator invariants hold under churn, and fault-tolerant plans fingerprint
+apart (``mm(fault_tolerant)`` + ``upir.memory_snapshot``/``restore`` MemOps
+in the UPIR program text).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.configs import ShapeCfg, smoke_config
+from repro.core.lower import PlanCache
+from repro.core.plans import build_program
+from repro.core.printer import program_fingerprint, to_mlir
+from repro.models import api
+from repro.runtime.engine import (Engine, EngineConfig, PagedKVAllocator,
+                                  RequestSpec)
+from repro.runtime.faults import (FAULT_KINDS, FailureInfo, FaultPlan,
+                                  FaultSpec, InjectedFault)
+from repro.runtime.sampling import SamplingParams
+
+CFG = smoke_config("tinyllama-1.1b")
+BUCKET = 8
+TOKENS = 6
+MAX_SEQ = BUCKET + TOKENS
+P_MAX_SEQ = 24          # paged legs decode past the prompt pages
+P_TOKENS = 10
+CACHE = PlanCache()     # shared: equal-config engines reuse every artifact
+
+LIVE = ("queued", "prefilling", "active")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def mk_engine(params, **kw):
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ, **kw),
+                  params=params, plan_cache=CACHE)
+
+
+def mk_paged(params, num_pages=16, **kw):
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=P_MAX_SEQ, kv_layout="paged",
+                                    page_size=4, num_pages=num_pages, **kw),
+                  params=params, plan_cache=CACHE)
+
+
+def workload(n=4, tokens=TOKENS, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [RequestSpec(prompt=rng.integers(0, CFG.vocab,
+                                            size=BUCKET).tolist(),
+                        max_new_tokens=tokens, **kw) for _ in range(n)]
+
+
+def drain(engine, handles, budget=400):
+    steps = 0
+    while any(h.state in LIVE for h in handles):
+        assert steps < budget, "engine failed to drain (hang)"
+        engine.step()
+        steps += 1
+    return steps
+
+
+def streams_of(engine, handles):
+    return {h.rid: engine.finalize_request(h)
+            for h in handles if h.state == "done"}
+
+
+# ------------------------------------------------------------ FaultPlan API
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(kind="meteor")
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(kind="exception", site="teardown")
+    with pytest.raises(ValueError, match="step"):
+        FaultSpec(kind="nan", step=-1)
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec(kind="nan", times=0)
+    with pytest.raises(ValueError, match="stall_s"):
+        FaultSpec(kind="stall", stall_s=0.0)
+    with pytest.raises(ValueError):
+        FaultPlan(faults=(object(),))
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random(7, n=5)
+    b = FaultPlan.random(7, n=5)
+    assert a == b and len(a) == 5
+    assert FaultPlan.random(8, n=5) != a
+    assert all(f.kind in FAULT_KINDS for f in a.faults)
+    assert a.describe() == b.describe()
+
+
+def test_engine_config_validates_ft_knobs(params):
+    with pytest.raises(ValueError, match="fault_plan"):
+        mk_engine(params, fault_plan="nan@3")
+    with pytest.raises(ValueError, match="watchdog_ms"):
+        mk_engine(params, watchdog_ms=-1.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        mk_engine(params, max_retries=-1)
+    with pytest.raises(ValueError, match="max_queue"):
+        mk_engine(params, max_queue=0)
+    with pytest.raises(ValueError, match="slot"):
+        mk_engine(params, fault_plan=FaultPlan(
+            faults=(FaultSpec(kind="nan", slot=99),)))
+
+
+# ------------------------------------------- inject / detect / recover
+
+
+def _bitwise_vs_plain(params, mk, faulted_kw, n=4, tokens=TOKENS):
+    plain = mk(params)
+    ref = plain.run(workload(n, tokens))
+    eng = mk(params, **faulted_kw)
+    hs = [eng.submit(s) for s in workload(n, tokens)]
+    drain(eng, hs)
+    for h, r in zip(hs, ref):
+        assert h.state == "done", (h.rid, h.state)
+        assert eng.finalize_request(h) == plain.finalize_request(r), h.rid
+    return eng.stats()
+
+
+def test_nan_fault_recovers_bitwise_dense(params):
+    st = _bitwise_vs_plain(params, mk_engine, dict(
+        fault_plan=FaultPlan(faults=(FaultSpec(kind="nan", step=2,
+                                               slot=0),))))
+    assert st["faults_injected"] == 1
+    assert st["quarantines"] == 1
+    assert st["recovered"] == 1
+    assert st["failed"] == 0
+
+
+def test_nan_fault_recovers_bitwise_paged(params):
+    st = _bitwise_vs_plain(params, mk_paged, dict(
+        fault_plan=FaultPlan(faults=(FaultSpec(kind="nan", step=3,
+                                               slot=1),)),
+        debug_checks=True), tokens=P_TOKENS)
+    assert st["recovered"] == 1 and st["failed"] == 0
+
+
+def test_nan_guard_alone_is_inert_and_bitwise(params):
+    # arming the guard without any fault must not perturb streams: the
+    # all-False poison path is a bitwise identity
+    st = _bitwise_vs_plain(params, mk_engine, dict(nan_guard=True))
+    assert st["faults_injected"] == 0 and st["quarantines"] == 0
+
+
+def test_exception_fault_targets_rid(params):
+    st = _bitwise_vs_plain(params, mk_engine, dict(
+        fault_plan=FaultPlan(faults=(
+            FaultSpec(kind="exception", site="prefill", rid=2, step=0),))))
+    assert st["faults_injected"] == 1 and st["recovered"] == 1
+
+
+def test_decode_exception_quarantines_policy_victim(params):
+    st = _bitwise_vs_plain(params, mk_engine, dict(
+        fault_plan=FaultPlan(faults=(
+            FaultSpec(kind="exception", site="decode", step=2),))))
+    assert st["quarantines"] == 1 and st["recovered"] == 1
+
+
+def test_exception_without_ft_mode_still_raises():
+    # a non-FT engine must not swallow real errors: InjectedFault is a
+    # RuntimeError like any other
+    assert issubclass(InjectedFault, RuntimeError)
+    f = InjectedFault("prefill", "boom")
+    assert f.site == "prefill"
+
+
+def test_retries_exhaust_into_typed_failure(params):
+    eng = mk_engine(params, max_retries=1, fault_plan=FaultPlan(faults=(
+        FaultSpec(kind="exception", site="prefill", rid=1, step=0,
+                  times=99),)))
+    hs = [eng.submit(s) for s in workload(2)]
+    drain(eng, hs)
+    st = eng.stats()
+    assert hs[0].state == "failed" and hs[1].state == "done"
+    assert st["failed"] == 1 and st["recovered"] == 0
+    assert len(st["failures"]) == 1
+    info = st["failures"][0]
+    assert isinstance(info, FailureInfo)
+    assert info.rid == 1 and info.kind == "exception" and info.retries == 1
+    assert hs[0].failure is info
+
+
+def test_stall_fault_trips_watchdog_and_recovers(params):
+    # warm first so the measured steps are compile-free, then the injected
+    # stall is the only step over the threshold
+    eng = mk_engine(params, watchdog_ms=1000.0, fault_plan=FaultPlan(
+        faults=(FaultSpec(kind="stall", step=2, stall_s=2.0),)))
+    eng.run(workload(2))
+    eng.reset_stats()
+    hs = [eng.submit(s) for s in workload(2)]
+    drain(eng, hs)
+    st = eng.stats()
+    assert st["watchdog_trips"] == 1
+    assert st["quarantines"] == 1 and st["failed"] == 0
+    assert all(h.state == "done" for h in hs)
+
+
+def test_alloc_fail_drives_eviction_recovery_bitwise(params):
+    st = _bitwise_vs_plain(params, mk_paged, dict(
+        fault_plan=FaultPlan(faults=(
+            FaultSpec(kind="alloc_fail", step=2, times=2),))),
+        tokens=P_TOKENS)
+    assert st["faults_injected"] == 2
+    assert st["evictions"] >= 1      # forced exhaustion took the evict path
+
+
+def test_sampled_stream_replays_through_quarantine(params):
+    # the hard replay case: top-p sampling + penalties through a quarantine
+    # — per-(key, position) sampling makes the recomputed stream identical
+    sp = SamplingParams(temperature=1.1, top_p=0.8, seed=9,
+                        presence_penalty=0.4, frequency_penalty=0.2)
+    plain = mk_engine(params)
+    ref = plain.run(workload(3, sampling=sp, seed=4))
+    eng = mk_engine(params, fault_plan=FaultPlan(faults=(
+        FaultSpec(kind="nan", step=3, slot=0),)))
+    hs = [eng.submit(s) for s in workload(3, sampling=sp, seed=4)]
+    drain(eng, hs)
+    assert eng.stats()["quarantines"] == 1
+    for h, r in zip(hs, ref):
+        assert eng.finalize_request(h) == plain.finalize_request(r), h.rid
+
+
+def test_cross_feature_replay_matrix(params):
+    # prefix cache + penalties + top-p sampling + eviction-by-recompute +
+    # an injected quarantine, all in one paged engine: the full replay
+    # surface at once must still be bitwise vs the fault-free twin
+    sp = SamplingParams(temperature=1.0, top_p=0.9, seed=3,
+                        presence_penalty=0.3, frequency_penalty=0.1)
+    shared = list(range(1, BUCKET + 1))
+    specs = [RequestSpec(prompt=shared, max_new_tokens=P_TOKENS,
+                         sampling=sp),
+             RequestSpec(prompt=shared, max_new_tokens=P_TOKENS,
+                         sampling=dataclasses.replace(sp, seed=5)),
+             RequestSpec(prompt=list(range(50, 50 + BUCKET)),
+                         max_new_tokens=P_TOKENS, sampling=sp)]
+    kw = dict(num_pages=12, prefix_cache=True)   # tight pool: evictions
+    plain = mk_paged(params, **kw)
+    ref = plain.run(specs)
+    eng = mk_paged(params, **kw, debug_checks=True,
+                   fault_plan=FaultPlan(faults=(
+                       FaultSpec(kind="nan", step=4, slot=0),)))
+    hs = [eng.submit(s) for s in specs]
+    drain(eng, hs)
+    assert eng.stats()["quarantines"] >= 1
+    for h, r in zip(hs, ref):
+        assert h.state == "done"
+        assert eng.finalize_request(h) == plain.finalize_request(r), h.rid
+
+
+# ------------------------------------------------------- snapshot / restore
+
+
+@pytest.mark.parametrize("mk", [mk_engine, mk_paged],
+                         ids=["dense", "paged"])
+def test_snapshot_restore_resumes_bitwise(params, mk):
+    tokens = TOKENS if mk is mk_engine else P_TOKENS
+    a = mk(params)
+    ha = [a.submit(s) for s in workload(3, tokens)]
+    for _ in range(3):
+        a.step()
+    snap = a.snapshot()
+    drain(a, ha)
+    ref = {h.rid: a.finalize_request(h) for h in ha}
+    b = mk(params)
+    b.restore(snap)
+    hb = [r for r in list(b.slots_req) + list(b.queue) if r is not None]
+    assert hb, "snapshot captured no live requests"
+    drain(b, hb)
+    for h in hb:
+        assert b.finalize_request(h) == ref[h.rid], h.rid
+
+
+def test_restore_rejects_foreign_fingerprint(params):
+    a = mk_engine(params)
+    a.submit(workload(1)[0])
+    a.step()
+    snap = a.snapshot()
+    other = mk_paged(params)
+    with pytest.raises(ValueError, match="snapshot was taken under plan"):
+        other.restore(snap)
+
+
+# --------------------------------------------------- shedding / bounded queue
+
+
+def test_deadline_shed_is_typed(params):
+    import time
+    eng = mk_engine(params, enforce_deadlines=True)
+    hs = [eng.submit(s) for s in workload(3, deadline_ms=1.0)]
+    time.sleep(0.02)
+    eng.step()
+    assert all(h.state == "shed" for h in hs)
+    assert all(h.reason == "SHED_DEADLINE" for h in hs)
+    assert eng.stats()["shed_deadline"] == 3
+
+
+def test_deadline_without_enforcement_only_observes(params):
+    import time
+    eng = mk_engine(params)           # no enforce_deadlines
+    hs = [eng.submit(s) for s in workload(2, deadline_ms=1.0)]
+    time.sleep(0.02)
+    drain(eng, hs)
+    assert all(h.state == "done" for h in hs)
+    assert eng.stats()["shed_deadline"] == 0
+
+
+def test_max_queue_default_is_unbounded(params):
+    eng = mk_engine(params)
+    assert eng.ecfg.max_queue is None
+    hs = [eng.submit(s) for s in workload(64, tokens=1)]
+    assert all(h.state == "queued" for h in hs)
+    assert eng.stats()["rejected_queue_full"] == 0
+
+
+def test_bounded_queue_rejection_is_typed(params):
+    eng = mk_engine(params, max_queue=3)
+    hs = [eng.submit(s) for s in workload(5)]
+    states = [h.state for h in hs]
+    assert states == ["queued"] * 3 + ["rejected"] * 2
+    assert all(h.reason == "REJECTED_QUEUE_FULL" for h in hs[3:])
+    assert eng.stats()["rejected_queue_full"] == 2
+    drain(eng, hs[:3])
+    assert all(h.state == "done" for h in hs[:3])
+
+
+# --------------------------------------------------------- degraded mode
+
+
+def test_spec_engine_degrades_before_evicting_bitwise(params):
+    from repro.runtime.speculative import SpecConfig
+    draft = dataclasses.replace(CFG, name=CFG.name + "-draft")
+
+    def mk(p, **kw):
+        return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                        max_seq=P_MAX_SEQ,
+                                        kv_layout="paged", page_size=4,
+                                        num_pages=9, **kw),
+                      params=p, plan_cache=CACHE,
+                      draft_params=p if kw else None)
+
+    spec = mk(params, spec_decode=SpecConfig(draft_config=draft,
+                                             lookahead_k=3))
+    plain = mk(params)
+    ms = spec.run(workload(3, P_TOKENS))
+    mp = plain.run(workload(3, P_TOKENS))
+    st = spec.stats()
+    assert st["degraded_entries"] >= 1
+    assert st["degraded_steps"] >= 1
+    for a, b in zip(ms, mp):
+        assert spec.finalize_request(a) == plain.finalize_request(b)
+
+
+# ------------------------------------------------------ allocator invariants
+
+
+def test_allocator_invariants_hold_and_catch_corruption():
+    alloc = PagedKVAllocator(8)
+    got = alloc.alloc(3)
+    alloc.share([got[0]])
+    alloc.check_invariants()
+    alloc.free([got[0]])
+    alloc.check_invariants()
+
+    bad = PagedKVAllocator(4)
+    bad.alloc(2)
+    bad._free.append(99)                       # out-of-range page id
+    with pytest.raises(RuntimeError):
+        bad.check_invariants()
+
+    bad2 = PagedKVAllocator(4)
+    pages = bad2.alloc(2)
+    bad2._free.append(pages[0])                # free and live at once
+    with pytest.raises(RuntimeError):
+        bad2.check_invariants()
+
+    bad3 = PagedKVAllocator(4)
+    bad3.alloc(1)
+    bad3._ref[next(iter(bad3._ref))] = 0       # dead refcount entry
+    with pytest.raises(RuntimeError):
+        bad3.check_invariants()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=2),
+                min_size=1, max_size=40))
+def test_allocator_invariants_under_random_churn(ops):
+    # 0 = alloc one, 1 = share a live page, 2 = free a live page: invariants
+    # must hold after every operation, whatever the interleaving
+    alloc = PagedKVAllocator(6)
+    live = []
+    for op in ops:
+        if op == 0:
+            got = alloc.alloc(1)
+            if got is not None:
+                live.extend(got)
+        elif op == 1 and live:
+            alloc.share([live[0]])
+            live.append(live[0])
+        elif op == 2 and live:
+            alloc.free([live.pop()])
+        alloc.check_invariants()
+
+
+def test_engine_invariant_check_passes_under_eviction_churn(params):
+    eng = mk_paged(params, num_pages=8, debug_checks=True)
+    hs = [eng.submit(s) for s in workload(4, P_TOKENS)]
+    drain(eng, hs)                   # tight pool: evictions + checks per tick
+    assert eng.stats()["evictions"] >= 1
+    assert all(h.state == "done" for h in hs)
+
+
+# ----------------------------------------------------- UPIR program surface
+
+
+def decode_shape(batch=2):
+    return ShapeCfg("ft_b2", "decode", MAX_SEQ, batch)
+
+
+def test_fault_tolerant_plans_fingerprint_apart():
+    base = build_program(CFG, decode_shape())
+    ft = build_program(CFG, decode_shape(), fault_tolerant=True)
+    assert program_fingerprint(base) != program_fingerprint(ft)
+    # deterministic: same flags, same fingerprint
+    assert program_fingerprint(ft) == program_fingerprint(
+        build_program(CFG, decode_shape(), fault_tolerant=True))
+
+
+def test_ft_program_text_carries_snapshot_memops():
+    text = to_mlir(build_program(CFG, decode_shape(), fault_tolerant=True,
+                                 page_geometry=(16, 4, 6)))
+    assert "mm(" in text and "fault_tolerant" in text
+    assert "upir.memory_snapshot" in text
+    assert "upir.memory_restore" in text
+    base = to_mlir(build_program(CFG, decode_shape(),
+                                 page_geometry=(16, 4, 6)))
+    assert "fault_tolerant" not in base
+    assert "upir.memory_snapshot" not in base
+
+
+def test_lowered_plan_exposes_fault_tolerant_flag():
+    cache = PlanCache()
+    plan = cache.lowered_plan(build_program(CFG, decode_shape(),
+                                            fault_tolerant=True))
+    assert plan.fault_tolerant is True
+    assert cache.lowered_plan(
+        build_program(CFG, decode_shape())).fault_tolerant is False
+
+
+def test_ft_engine_uses_ft_plan_and_stats_sections(params):
+    eng = mk_engine(params, nan_guard=True)
+    assert eng.plan.fault_tolerant is True
+    st = eng.stats()
+    assert st["faults_injected"] == 0 and st["failures"] == []
+    plain = mk_engine(params)
+    assert plain.plan.fault_tolerant is False
+    pst = plain.stats()
+    # non-FT engines carry no FT section: the optional fields are absent
+    # from the mapping view (KeyError on [] access, None via .get)
+    assert "faults_injected" not in pst and "failures" not in pst
+    assert pst.get("faults_injected") is None
+    assert eng.plan.fingerprint != plain.plan.fingerprint
