@@ -103,6 +103,14 @@ the exact planned counts; and a mid-flight snapshot restored into a fresh
 engine must resume bitwise. All CI gates. ``--json7`` writes the metrics —
 CI emits ``BENCH_7.json``.
 
+Section 8 is the static-verifier budget: ``repro.launch.lint`` builds and
+verifies every (architecture x engine mode x shape) program — the same
+sweep as the CI lint job — and this section records the verifier's wall
+time. The CI gates are zero error diagnostics and total verify time under
+``S8_BUDGET_S`` seconds: ``EngineConfig(verify_ir=True)`` runs the verifier
+at every cold plan build, so it must stay cheap enough to be always-on.
+``--json8`` writes the metrics — CI emits ``BENCH_8.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -1209,6 +1217,63 @@ def bench_faults(json_path=None):
     return {"recovery_steps": steps, "recovered": st["recovered"]}
 
 
+S8_BUDGET_S = 5.0
+
+
+def bench_lint(json_path=None):
+    """Static-verifier budget over the full config matrix (section 8).
+
+    Runs the same sweep as the CI lint gate (``repro.launch.lint``): build
+    every (architecture x engine mode) program plus every registered dry-run
+    cell, verify both the built and pass-optimized form, and time the
+    verifier alone. CI gates: zero error diagnostics anywhere, and total
+    verifier wall time under ``S8_BUDGET_S`` — the verifier runs at every
+    cold plan build when ``verify_ir`` is on, so it must stay cheap."""
+    from repro.launch.lint import run_lint
+
+    report = run_lint()
+    per_program_ms = (report["verify_s"] / report["programs"] * 1e3
+                      if report["programs"] else 0.0)
+    print("# serve_bench_lint: programs,errors,warnings,verify_s,build_s,"
+          "verify_ms_per_program,budget_s")
+    print(f"{report['programs']},{report['errors']},{report['warnings']},"
+          f"{report['verify_s']},{report['build_s']},"
+          f"{per_program_ms:.3f},{S8_BUDGET_S}")
+
+    if json_path:
+        payload = {
+            "bench": "verifier_budget",
+            "programs": report["programs"],
+            "errors": report["errors"],
+            "warnings": report["warnings"],
+            "verify_s": report["verify_s"],
+            "build_s": report["build_s"],
+            "verify_ms_per_program": round(per_program_ms, 3),
+            "budget_s": S8_BUDGET_S,
+            "failing_cells": [c for c in report["cells"] if c["errors"]],
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+
+    if report["errors"]:
+        # CI gate: every buildable program verifies clean
+        bad = [c for c in report["cells"] if c["errors"]]
+        raise SystemExit(
+            f"serve_bench_lint: {report['errors']} error diagnostic(s) in "
+            f"{len(bad)} program(s), e.g. {bad[0]['arch']} x "
+            f"{bad[0]['shape']} [{bad[0]['mode']}]: "
+            f"{bad[0]['diagnostics'][:3]}")
+    if report["verify_s"] >= S8_BUDGET_S:
+        # CI gate: the verifier stays cheap enough to run at plan build
+        raise SystemExit(
+            f"serve_bench_lint: verifier budget exceeded "
+            f"({report['verify_s']}s >= {S8_BUDGET_S}s for "
+            f"{report['programs']} programs)")
+    return {"programs": report["programs"],
+            "verify_s": report["verify_s"]}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -1224,6 +1289,8 @@ def main() -> None:
                     help="write scheduling metrics to this JSON file")
     ap.add_argument("--json7", default=None,
                     help="write fault-tolerance metrics to this JSON file")
+    ap.add_argument("--json8", default=None,
+                    help="write static-verifier metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
@@ -1232,6 +1299,7 @@ def main() -> None:
     bench_prefix(json_path=args.json5)
     bench_scheduling(json_path=args.json6)
     bench_faults(json_path=args.json7)
+    bench_lint(json_path=args.json8)
 
 
 if __name__ == "__main__":

@@ -41,6 +41,10 @@ _BLOCK_RE = re.compile(
 # ------------------------------------------------------------- the examples
 # Smoke-scale configs keep the snippets readable; the *structure* (ops,
 # attribute order, mm/caps rendering) is identical at production scale.
+# Each example is a *program builder* (returns the ir.Program) so the same
+# object can be rendered for the spec AND run through the static verifier —
+# ``--check`` asserts every example both matches its committed text and
+# verifies with zero errors.
 
 
 def _cfg():
@@ -53,68 +57,61 @@ def _shape(name: str, kind: str, seq: int, batch: int):
     return ShapeCfg(name, kind, seq, batch)
 
 
-def dense_decode() -> str:
+def dense_decode():
     """The serving engine's plain decode program (dense KV layout)."""
     from repro.core.plans import build_program
-    from repro.core.printer import to_mlir
-    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2)))
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2))
 
 
-def paged_prefix_decode() -> str:
+def paged_prefix_decode():
     """Paged decode with prefix sharing: paged_kv_alloc data attributes,
-    alloc/dealloc/share/cow MemOps, mm(...) geometry + shared_prefix."""
+    alloc/share/cow/dealloc MemOps in lifecycle order, mm(...) geometry +
+    shared_prefix."""
     from repro.core.plans import build_program
-    from repro.core.printer import to_mlir
-    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
-                                 page_geometry=(15, 4, 4),
-                                 prefix_sharing=True))
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                         page_geometry=(15, 4, 4), prefix_sharing=True)
 
 
-def spec_verify() -> str:
+def spec_verify():
     """The speculative verify program: kernel spec_verify, k+1-wide token
     input, caps(spec_verify(k) draft(name)) on the decode cache."""
     from repro.core.plans import build_program
-    from repro.core.printer import to_mlir
-    return to_mlir(build_program(
-        _cfg(), _shape("engine_b2_spec3", "decode", 14, 2),
-        spec_decode=("tinyllama-1.1b-draft1", 3)))
+    return build_program(_cfg(), _shape("engine_b2_spec3", "decode", 14, 2),
+                         spec_decode=("tinyllama-1.1b-draft1", 3))
 
 
-def sched_decode() -> str:
+def sched_decode():
     """A scheduled decode program: the engine's admission policy rendered as
     ``sched(...)`` on the cache data attribute, next to ``mm``/``caps`` —
     scheduling participates in plan identity like page geometry does."""
     from repro.core.plans import build_program
-    from repro.core.printer import to_mlir
     from repro.runtime.scheduling import SchedulingPolicy
     policy = SchedulingPolicy(kind="priority", prefix_affinity=True)
-    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
-                                 page_geometry=(15, 4, 4),
-                                 prefix_sharing=True,
-                                 scheduling=policy.ext()))
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                         page_geometry=(15, 4, 4), prefix_sharing=True,
+                         scheduling=policy.ext())
 
 
-def ft_decode() -> str:
+def ft_decode():
     """A fault-tolerant paged decode program: ``mm(... fault_tolerant)`` on
     the cache data attribute plus ``upir.memory_snapshot``/``restore``
     MemOps — the crash-recovery contract ``Engine.snapshot``/``restore``
     realize, fingerprinted so FT and plain engines never share a plan."""
     from repro.core.plans import build_program
-    from repro.core.printer import to_mlir
-    return to_mlir(build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
-                                 page_geometry=(15, 4, 4),
-                                 fault_tolerant=True))
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                         page_geometry=(15, 4, 4), fault_tolerant=True)
 
 
-def train_step() -> str:
+def train_step():
     """A training program: taskloop microbatching, the grads allreduce,
     state/grads data attributes."""
     from repro.core.plans import build_program
-    from repro.core.printer import to_mlir
-    return to_mlir(build_program(_cfg(), _shape("train_smoke", "train", 16, 4)))
+    return build_program(_cfg(), _shape("train_smoke", "train", 16, 4))
 
 
-EXAMPLES: Dict[str, Callable[[], str]] = {
+# example-name -> ir.Program builder: the single source for both the spec
+# text (render_all) and the verifier gate (verify_all)
+PROGRAM_BUILDERS: Dict[str, Callable] = {
     "dense-decode": dense_decode,
     "paged-prefix-decode": paged_prefix_decode,
     "spec-verify": spec_verify,
@@ -122,6 +119,25 @@ EXAMPLES: Dict[str, Callable[[], str]] = {
     "ft-decode": ft_decode,
     "train-step": train_step,
 }
+
+
+def _render(name: str) -> str:
+    from repro.core.printer import to_mlir
+    return to_mlir(PROGRAM_BUILDERS[name]())
+
+
+EXAMPLES: Dict[str, Callable[[], str]] = {
+    name: (lambda name=name: _render(name)) for name in PROGRAM_BUILDERS
+}
+
+
+def verify_all() -> Dict[str, list]:
+    """Example-name -> error-severity diagnostics. Documented programs must
+    be verifiable programs: a spec example the verifier rejects is as much
+    drift as a stale snippet."""
+    from repro.analysis import analyze, errors
+    return {name: errors(analyze(fn()))
+            for name, fn in PROGRAM_BUILDERS.items()}
 
 
 # ---------------------------------------------------------------- machinery
@@ -178,11 +194,16 @@ def main() -> None:
         print(f"rewrote {len(EXAMPLES)} example blocks in {UPIR_TEXT_MD}")
         return
     problems = drift(md)
+    for name, errs in sorted(verify_all().items()):
+        if errs:
+            problems[name] = (f"example fails the static verifier: "
+                              + "; ".join(d.render() for d in errs))
     if problems:
         for name, why in sorted(problems.items()):
             print(f"DRIFT {name}: {why}")
         raise SystemExit(1)
-    print(f"{len(EXAMPLES)} example blocks match their generators")
+    print(f"{len(EXAMPLES)} example blocks match their generators "
+          f"and verify clean")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,87 @@
+"""Static analysis over UPIR programs: the verifier.
+
+A *pass* is a pure function ``Program -> List[Diagnostic]``; the framework
+is the thin part — :data:`PASSES` is the ordered catalog, :func:`analyze`
+runs them and returns the canonical (sorted, deduplicated) report, and
+:func:`verify_program` turns error-severity findings into a raised
+:class:`VerificationError`. Everything is deterministic: equal programs
+produce byte-equal reports (and therefore equal
+:func:`~repro.analysis.diagnostics.report_fingerprint`\\ s).
+
+Entry points, outermost first:
+
+* ``python -m repro.launch.lint --all-configs`` — the CI gate: every
+  registered config × engine mode builds and verifies clean;
+* ``EngineConfig(verify_ir=True)`` / ``serving_plan(..., verify=True)`` /
+  ``build_program(..., verify=True)`` — verify at plan-build time (one-time
+  cost, nothing in the hot loop);
+* ``analyze(prog)`` — the library call, for tests and tools.
+
+Adding a pass: write ``check_<name>(prog)`` in a new module, register its
+codes in ``diagnostics.DIAGNOSTIC_CODES``, append to :data:`PASSES`, and
+document the codes in ``docs/ANALYSIS.md`` (``tests/test_docs.py`` enforces
+that last step).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List, Optional, Tuple
+
+from ..core import ir
+from .contracts import check_contracts
+from .diagnostics import (DIAGNOSTIC_CODES, ERROR, WARNING, Diagnostic,
+                          emit, errors, render_report, report_fingerprint,
+                          sort_report)
+from .lifetime import check_lifetime
+from .races import check_races
+from .wellformed import check_wellformed
+
+Pass = Callable[[ir.Program], List[Diagnostic]]
+
+# Ordered pass catalog (docs/ANALYSIS.md documents each row).
+PASSES: Tuple[Tuple[str, Pass], ...] = (
+    ("wellformed", check_wellformed),
+    ("lifetime", check_lifetime),
+    ("races", check_races),
+    ("contracts", check_contracts),
+)
+
+
+def analyze(prog: ir.Program,
+            passes: Optional[Iterable[Tuple[str, Pass]]] = None
+            ) -> List[Diagnostic]:
+    """Run the pass catalog (or a subset) and return the canonical report:
+    errors before warnings, then by code, then by op_path, deduplicated."""
+    diags: List[Diagnostic] = []
+    for _, fn in (passes if passes is not None else PASSES):
+        diags.extend(fn(prog))
+    return sort_report(diags)
+
+
+class VerificationError(ValueError):
+    """Raised by :func:`verify_program` when a program has error-severity
+    diagnostics. ``.diagnostics`` carries the full report (warnings too)."""
+
+    def __init__(self, prog_name: str, diagnostics: List[Diagnostic]):
+        self.diagnostics = diagnostics
+        errs = [d for d in diagnostics if d.severity == ERROR]
+        super().__init__(
+            f"UPIR verifier: {len(errs)} error(s) in program "
+            f"'{prog_name}':\n" + render_report(diagnostics))
+
+
+def verify_program(prog: ir.Program,
+                   raise_on_error: bool = True) -> List[Diagnostic]:
+    """Analyze ``prog``; raise :class:`VerificationError` on any error
+    diagnostic (warnings never raise). Returns the full report."""
+    diags = analyze(prog)
+    if raise_on_error and errors(diags):
+        raise VerificationError(prog.name, diags)
+    return diags
+
+
+__all__ = [
+    "PASSES", "analyze", "verify_program", "VerificationError",
+    "Diagnostic", "DIAGNOSTIC_CODES", "ERROR", "WARNING", "emit",
+    "errors", "render_report", "report_fingerprint", "sort_report",
+    "check_wellformed", "check_lifetime", "check_races", "check_contracts",
+]

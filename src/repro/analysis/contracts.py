@@ -1,0 +1,123 @@
+"""Serving-contract pass (SC*): program shapes the engine relies on.
+
+The runtime layers (paged KV, prefix sharing, fault tolerance, speculative
+decoding) each assume the plan they execute was built with the matching
+annotations *and* the matching explicit memory ops — the annotation is what
+fingerprints the plan apart, the ops are what the engine actually mirrors at
+runtime. A program carrying one without the other would fingerprint as one
+mode and execute as another, so the verifier treats every such half-contract
+as an error:
+
+* **SC001** paged programs must alloc their page pools before the first
+  kernel that touches the paged datum — the engine's ``PagedKVAllocator``
+  exists because pages are not ambient.
+* **SC006 / SC002** ``mm(shared_prefix)`` ⇒ ``share`` ops ⇒ ``cow`` ops:
+  aliased pages without a reachable copy-on-write duplication would let one
+  sequence's decode write into another's prompt prefix.
+* **SC003 / SC004** ``mm(fault_tolerant)`` ⇔ ``snapshot``/``restore`` ops:
+  the annotation and the device↔host ops must travel together.
+* **SC005** ``caps(spec_verify)`` ⇔ the ``spec_verify`` kernel ⇔ the
+  ``in/draft_tokens`` input: the draft/target pairing is one contract with
+  three visible facets, and they must agree.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from ..core import ir
+from .diagnostics import Diagnostic, emit
+
+
+def _covers(name: str, other: str) -> bool:
+    return (name == other or name.startswith(other + "/")
+            or other.startswith(name + "/"))
+
+
+def check_contracts(prog: ir.Program) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    nodes = list(ir.walk_with_path(prog))
+    attrs = [(p, n) for p, n in nodes if isinstance(n, ir.DataAttr)]
+    memops = [(p, n) for p, n in nodes if isinstance(n, ir.MemOp)]
+    kernels = [(p, n) for p, n in nodes if isinstance(n, ir.KernelOp)]
+    symtab = prog.symbol_table()
+
+    # ---- SC001: paged datum touched by a kernel before any pool alloc
+    paged_syms = [n.symbol for _, n in attrs
+                  if n.allocator == "paged_kv_alloc"]
+    if paged_syms:
+        alloc_idx: Optional[int] = next(
+            (i for i, (_, n) in enumerate(nodes)
+             if isinstance(n, ir.MemOp) and n.kind == "alloc"
+             and n.allocator == "paged_kv_alloc"), None)
+        for i, (path, n) in enumerate(nodes):
+            if not isinstance(n, ir.KernelOp):
+                continue
+            touches = [a for a in n.args
+                       if any(_covers(a, s) for s in paged_syms)]
+            if touches and (alloc_idx is None or alloc_idx > i):
+                out.append(emit(
+                    "SC001", path,
+                    f"kernel @{n.fn} touches paged datum "
+                    f"'{touches[0]}' but no paged_kv_alloc alloc of its "
+                    f"page pools precedes it"))
+
+    # ---- SC006 / SC002: shared_prefix => share ops => cow ops
+    prefix_syms = [n.symbol for _, n in attrs
+                   if ir.ext_get(n.extensions, "shared_prefix")]
+    shares = [(p, n) for p, n in memops if n.kind == "share"]
+    cows = {n.symbol for _, n in memops if n.kind == "cow"}
+    for sym in prefix_syms:
+        if not any(_covers(n.symbol, sym) for _, n in shares):
+            # anchor at the annotated attribute, the visible half
+            path = next(p for p, n in attrs if n.symbol == sym)
+            out.append(emit(
+                "SC006", path,
+                f"'{sym}' declares mm(shared_prefix) but the program "
+                f"carries no share memop — the aliasing the annotation "
+                f"fingerprints never happens"))
+    for path, n in shares:
+        if n.symbol not in cows:
+            out.append(emit(
+                "SC002", path,
+                f"'{n.symbol}' is share-aliased but the program has no "
+                f"copy-on-write op for it — a write would land in another "
+                f"sequence's shared pages"))
+
+    # ---- SC003 / SC004: fault_tolerant <=> snapshot/restore
+    ft_syms = [n.symbol for _, n in attrs
+               if ir.ext_get(n.extensions, "fault_tolerant")]
+    snaps = [(p, n) for p, n in memops if n.kind in ("snapshot", "restore")]
+    for path, n in snaps:
+        if not any(_covers(n.symbol, s) for s in ft_syms):
+            out.append(emit(
+                "SC003", path,
+                f"memory_{n.kind} of '{n.symbol}' in a program whose "
+                f"cache does not declare mm(fault_tolerant) — the FT ops "
+                f"would execute without fingerprinting the plan apart"))
+    for sym in ft_syms:
+        if not any(_covers(n.symbol, sym) and n.kind == "snapshot"
+                   for _, n in snaps):
+            path = next(p for p, n in attrs if n.symbol == sym)
+            out.append(emit(
+                "SC004", path,
+                f"'{sym}' declares mm(fault_tolerant) but the program "
+                f"carries no snapshot memop — a recovering engine would "
+                f"have no state to restore"))
+
+    # ---- SC005: caps(spec_verify) <=> spec_verify kernel <=> draft input
+    spec_attr = next((p for p, n in attrs
+                      if ir.ext_get(n.extensions, "spec_verify")), None)
+    spec_kernel = next((p for p, n in kernels if n.fn == "spec_verify"), None)
+    draft_in = any(_covers(s, "in/draft_tokens") for s in symtab)
+    facets = {"caps(spec_verify)": spec_attr is not None,
+              "spec_verify kernel": spec_kernel is not None,
+              "in/draft_tokens input": draft_in}
+    if any(facets.values()) and not all(facets.values()):
+        missing = sorted(k for k, v in facets.items() if not v)
+        present = sorted(k for k, v in facets.items() if v)
+        out.append(emit(
+            "SC005", spec_attr or spec_kernel or "",
+            f"speculative-verify contract is partial: {present} without "
+            f"{missing} — the verify plan would not fingerprint apart "
+            f"from plain decode (or could not run)"))
+    return out

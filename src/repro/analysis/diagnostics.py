@@ -1,0 +1,150 @@
+"""Typed, stable, fingerprint-addressable diagnostics.
+
+Every analysis pass reports :class:`Diagnostic` records: a severity, a
+stable code drawn from :data:`DIAGNOSTIC_CODES`, the deterministic
+``op_path`` of the offending node (``ir.walk_with_path`` addressing), and a
+human message. Reports are value objects — sorted canonically, rendered
+deterministically, and hashable as a whole (:func:`report_fingerprint`) so
+a CI gate can pin the exact diagnostic surface of a program the same way
+the PlanCache pins its text.
+
+Code namespaces mirror the pass catalog (``docs/ANALYSIS.md``):
+
+* ``WF``  — well-formedness (symbols, extension keys, mesh axes)
+* ``LT``  — memory lifetime (alloc/dealloc/share/cow/snapshot/restore)
+* ``RC``  — SPMD race & synchronization discipline
+* ``SC``  — serving contracts (paged / prefix-sharing / fault-tolerant /
+  speculative program shapes)
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Tuple
+
+ERROR = "error"
+WARNING = "warning"
+_SEVERITY_RANK = {ERROR: 0, WARNING: 1}
+
+# code -> (default severity, one-line meaning). The table is the single
+# registry: passes may only emit codes listed here (enforced by emit()),
+# docs/ANALYSIS.md must document every row (enforced by tests/test_docs.py),
+# and each error code is demonstrated by a failing-program test in
+# tests/test_analysis.py.
+DIAGNOSTIC_CODES: Dict[str, Tuple[str, str]] = {
+    # ---- well-formedness
+    "WF001": (ERROR, "missing data-attr: a kernel/memcpy/memop names a "
+                     "datum with neither a data attribute nor a "
+                     "symbol-table entry"),
+    "WF002": (ERROR, "unknown extension key: an annotation key outside the "
+                     "documented mm()/caps()/sched()/engine tables — it "
+                     "would silently not fingerprint"),
+    "WF003": (ERROR, "dist-axis-not-in-mesh: a data distribution names a "
+                     "mesh axis the SPMD region's MeshSpec does not define"),
+    "WF004": (ERROR, "sync-axis-not-in-mesh: a sync/collective names a "
+                     "mesh axis the MeshSpec does not define"),
+    "WF005": (ERROR, "unknown allocator: a data attribute or memory op "
+                     "names an allocator outside ir.ALLOCATORS"),
+    "WF006": (ERROR, "worksharing-axis-not-in-mesh: a worksharing loop is "
+                     "bound to a mesh axis the MeshSpec does not define"),
+    # ---- memory lifetime
+    "LT001": (ERROR, "use-after-dealloc: a memory op touches a buffer "
+                     "after its dealloc"),
+    "LT002": (ERROR, "double-free: a buffer is dealloc'd twice without an "
+                     "intervening alloc"),
+    "LT003": (ERROR, "cow-without-share: copy-on-write duplication of a "
+                     "buffer that was never share-aliased"),
+    "LT004": (ERROR, "dealloc-without-alloc: a dealloc for a buffer the "
+                     "program never allocates"),
+    "LT005": (ERROR, "leaked-alloc: an allocated buffer is never "
+                     "dealloc'd before program exit"),
+    "LT006": (ERROR, "double-alloc: a live buffer is allocated again "
+                     "without an intervening dealloc"),
+    "LT007": (ERROR, "use-before-alloc: a memory op touches an "
+                     "explicitly-managed buffer before its alloc"),
+    "LT008": (ERROR, "restore-without-snapshot: a restore with no prior "
+                     "snapshot of the same buffer"),
+    "LT009": (WARNING, "dangling-snapshot: a snapshot whose buffer has no "
+                       "restore target anywhere in the program"),
+    # ---- SPMD races & sync discipline
+    "RC001": (ERROR, "spmd-shared-write-race: two ops touch the same "
+                     "shared datum, at least one writes, with no ordering "
+                     "sync between them"),
+    "RC002": (ERROR, "unpaired-sync: an async arrive-compute without a "
+                     "matching wait-release (or vice versa)"),
+    "RC003": (ERROR, "dist-rule-mismatch: a datum's explicit distribution "
+                     "shards over an axis its dist rule never prescribes "
+                     "(replicated-write/sharded-read hazard)"),
+    # ---- serving contracts
+    "SC001": (ERROR, "paged-kernel-without-alloc: a paged program runs a "
+                     "kernel without alloc'ing its cache/*_pages pools "
+                     "first"),
+    "SC002": (ERROR, "share-without-cow: a prefix-sharing program aliases "
+                     "pages but has no reachable copy-on-write op to "
+                     "resolve writes"),
+    "SC003": (ERROR, "snapshot-without-ft-annotation: snapshot/restore "
+                     "memops in a program whose cache does not declare "
+                     "mm(fault_tolerant)"),
+    "SC004": (ERROR, "ft-annotation-without-snapshot: mm(fault_tolerant) "
+                     "declared but the program carries no snapshot/restore "
+                     "memops"),
+    "SC005": (ERROR, "spec-contract-mismatch: caps(spec_verify) and the "
+                     "spec_verify kernel/draft-token input do not agree"),
+    "SC006": (ERROR, "shared-prefix-without-share: mm(shared_prefix) "
+                     "declared but the program carries no share memop"),
+}
+
+
+@dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One verifier finding, addressable and stable across runs.
+
+    Field order doubles as the canonical sort order (severity errors
+    first, then code, then op_path) — reports are value objects.
+    """
+
+    severity_rank: int = field(repr=False, compare=True)
+    code: str = ""
+    op_path: str = ""
+    message: str = ""
+
+    @property
+    def severity(self) -> str:
+        return ERROR if self.severity_rank == 0 else WARNING
+
+    def render(self) -> str:
+        return f"{self.severity}[{self.code}] at {self.op_path or '<program>'}: " \
+               f"{self.message}"
+
+
+def emit(code: str, op_path: str, message: str,
+         severity: str | None = None) -> Diagnostic:
+    """Build a Diagnostic for a registered code (unknown codes are a
+    programming error in the pass, not a user-facing diagnostic)."""
+    if code not in DIAGNOSTIC_CODES:
+        raise KeyError(f"unregistered diagnostic code {code!r}; add it to "
+                       f"diagnostics.DIAGNOSTIC_CODES first")
+    sev = severity if severity is not None else DIAGNOSTIC_CODES[code][0]
+    return Diagnostic(severity_rank=_SEVERITY_RANK[sev], code=code,
+                      op_path=op_path, message=message)
+
+
+def sort_report(diags: Iterable[Diagnostic]) -> List[Diagnostic]:
+    """Canonical report order: errors before warnings, then by code, then
+    by op_path — deduplicated, deterministic across runs."""
+    return sorted(set(diags))
+
+
+def render_report(diags: Iterable[Diagnostic]) -> str:
+    return "\n".join(d.render() for d in sort_report(diags))
+
+
+def report_fingerprint(diags: Iterable[Diagnostic]) -> str:
+    """sha256 of the canonical rendering — two runs over equal programs
+    always produce the same fingerprint (tested)."""
+    return hashlib.sha256(
+        render_report(diags).encode("utf-8")).hexdigest()[:16]
+
+
+def errors(diags: Iterable[Diagnostic]) -> List[Diagnostic]:
+    return [d for d in sort_report(diags) if d.severity == ERROR]

@@ -1,0 +1,112 @@
+"""Memory-lifetime pass (LT*): abstract interpretation over MemOps.
+
+The explicit memory-management ops are the paper's §4.2 vocabulary; this
+pass interprets their program-order sequence abstractly, per symbol:
+
+    unallocated --alloc--> live --dealloc--> dead
+
+* ``share``/``cow``/``snapshot``/``restore``/``memcpy`` on a **dead**
+  buffer is use-after-dealloc (LT001); on a managed-but-unallocated one,
+  use-before-alloc (LT007).
+* A second ``dealloc`` is a double-free (LT002); a second ``alloc`` of a
+  live buffer is a double-alloc (LT006); a ``dealloc`` with no ``alloc``
+  anywhere is LT004.
+* ``cow`` requires a prior ``share`` of the same symbol (LT003) — CoW
+  resolves writes into *aliased* storage; duplicating an unshared buffer
+  is an accounting bug.
+* ``restore`` requires a prior ``snapshot`` (LT008); a snapshot whose
+  buffer is never restored anywhere is a dangling snapshot (LT009,
+  warning — backup-only programs are legal but worth flagging).
+* A buffer still live at program exit is a leak (LT005).
+
+**Managed vs ambient buffers.** Only symbols that appear in at least one
+``alloc``/``dealloc`` op are lifetime-tracked; buffers with no explicit
+allocation ops (the dense decode cache, params) are ambient — allocated by
+the runtime for the program's whole lifetime — and only their
+share/cow/snapshot pairing discipline is checked. This mirrors the
+engine: ``PagedKVAllocator`` pools are explicitly managed, dense caches
+are not.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from ..core import ir
+from .diagnostics import Diagnostic, emit
+
+_UNALLOC, _LIVE, _DEAD = "unallocated", "live", "dead"
+
+
+def check_lifetime(prog: ir.Program) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    ops = [(path, n) for path, n in ir.walk_with_path(prog)
+           if isinstance(n, (ir.MemOp, ir.MoveOp))]
+    managed = {n.symbol for _, n in ops
+               if isinstance(n, ir.MemOp) and n.kind in ("alloc", "dealloc")}
+
+    state: Dict[str, str] = {}
+    shared: set = set()
+    snapshots: Dict[str, str] = {}       # symbol -> op_path of snapshot
+    restored: set = set()
+
+    def use(path: str, sym: str, what: str) -> None:
+        if sym not in managed:
+            return
+        st = state.get(sym, _UNALLOC)
+        if st == _DEAD:
+            out.append(emit("LT001", path,
+                            f"{what} touches '{sym}' after its dealloc"))
+        elif st == _UNALLOC:
+            out.append(emit("LT007", path,
+                            f"{what} touches explicitly-managed '{sym}' "
+                            f"before its alloc"))
+
+    for path, n in ops:
+        if isinstance(n, ir.MoveOp):
+            use(path, n.symbol, f"memcpy({n.direction})")
+            continue
+        sym = n.symbol
+        if n.kind == "alloc":
+            if state.get(sym) == _LIVE:
+                out.append(emit("LT006", path,
+                                f"'{sym}' allocated again while live"))
+            state[sym] = _LIVE
+        elif n.kind == "dealloc":
+            st = state.get(sym, _UNALLOC)
+            if st == _DEAD:
+                out.append(emit("LT002", path,
+                                f"'{sym}' dealloc'd twice (double-free)"))
+            elif st == _UNALLOC:
+                out.append(emit("LT004", path,
+                                f"dealloc of '{sym}' which the program "
+                                f"never allocates"))
+            state[sym] = _DEAD
+        else:
+            use(path, sym, f"memory_{n.kind}")
+            if n.kind == "share":
+                shared.add(sym)
+            elif n.kind == "cow":
+                if sym not in shared:
+                    out.append(emit("LT003", path,
+                                    f"copy-on-write of '{sym}' which was "
+                                    f"never share-aliased"))
+            elif n.kind == "snapshot":
+                snapshots.setdefault(sym, path)
+            elif n.kind == "restore":
+                if sym not in snapshots:
+                    out.append(emit("LT008", path,
+                                    f"restore of '{sym}' with no prior "
+                                    f"snapshot"))
+                restored.add(sym)
+
+    for sym, st in sorted(state.items()):
+        if st == _LIVE:
+            out.append(emit("LT005", "",
+                            f"'{sym}' is still allocated at program exit "
+                            f"(leaked alloc: no dealloc on any path)"))
+    for sym, path in sorted(snapshots.items()):
+        if sym not in restored:
+            out.append(emit("LT009", path,
+                            f"snapshot of '{sym}' has no restore target "
+                            f"anywhere in the program"))
+    return out

@@ -1,0 +1,161 @@
+"""SPMD race & synchronization pass (RC*).
+
+Inside every ``SpmdRegion``:
+
+* **RC001 shared-write races** — two ops touch the same datum, at least
+  one writes it, the datum's attribute is ``shared``, and no *ordering*
+  sync op sits between them in program order. An ordering sync is a
+  synchronous collective/barrier (``step == "both"``, not async) or the
+  ``wait-release`` half of a split pair — an ``arrive-compute`` alone
+  does not order anything (that is its whole point).
+* **RC002 arrive/wait pairing** — every async ``arrive-compute`` must be
+  followed by a matching ``wait-release`` (same name/axes/data) and every
+  ``wait-release`` must be preceded by its arrive, the discipline
+  ``passes.overlap.split_arrive_wait`` emits.
+* **RC003 dist-rule mismatches** — a datum whose explicit distribution
+  shards over a mesh axis its dist rule never prescribes: a writer
+  believing the datum is sharded while the rule table replicates it (or
+  vice versa) is the classic replicated-write/sharded-read hazard, and
+  the rule table is the single source of distribution truth.
+
+Writes are derived from data attributes (``access`` ∈ {read-write,
+write-only}) for kernel args, and from direction for ``MoveOp`` (``to``
+writes the device copy). Args resolvable only through the symbol table
+are reads — inputs never race by themselves.
+"""
+from __future__ import annotations
+
+from fnmatch import fnmatch
+from typing import Dict, List, Optional, Tuple
+
+from ..core import ir
+from .diagnostics import Diagnostic, emit
+
+_ORDERING_SYNCS = frozenset({
+    "barrier", "reduction", "allreduce", "reduce_scatter", "all_gather",
+    "broadcast", "all_to_all", "taskwait", "single", "critical", "atomic",
+})
+
+
+def _is_ordering(s: ir.SyncOp) -> bool:
+    if s.name not in _ORDERING_SYNCS:
+        return False
+    if s.is_async:
+        return s.step == "wait-release"
+    return s.step in ("both", "wait-release")
+
+
+def _attr_for(sym: str, attrs: Dict[str, ir.DataAttr]) -> Optional[ir.DataAttr]:
+    if sym in attrs:
+        return attrs[sym]
+    for a_sym, a in attrs.items():
+        if sym.startswith(a_sym + "/") or a_sym.startswith(sym + "/"):
+            return a
+    return None
+
+
+def check_races(prog: ir.Program) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for rpath, region in ir.walk_with_path(prog):
+        if isinstance(region, ir.SpmdRegion):
+            out.extend(_check_region(rpath, region))
+    out.extend(_check_dist_rules(prog))
+    return out
+
+
+def _check_region(rpath: str, region: ir.SpmdRegion) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    attrs = {a.symbol: a for a in ir.find_all(region, ir.DataAttr)}
+
+    # ordered event streams: (position, path, symbol, is_write) accesses
+    # and (position, sync) ordering points, from the deterministic walk
+    accesses: List[Tuple[int, str, str, bool]] = []
+    ordering_pos: List[int] = []
+    arrives: List[Tuple[int, str, Tuple]] = []
+    waits: List[Tuple[int, str, Tuple]] = []
+    pos = 0
+    for path, node in ir.walk_with_path(region):
+        pos += 1
+        if isinstance(node, ir.KernelOp):
+            for arg in node.args:
+                attr = _attr_for(arg, attrs)
+                writes = attr is not None and attr.access != "read-only"
+                accesses.append((pos, path, arg, writes))
+        elif isinstance(node, ir.MoveOp):
+            accesses.append((pos, path, node.symbol, node.direction == "to"))
+        elif isinstance(node, ir.SyncOp):
+            if _is_ordering(node):
+                ordering_pos.append(pos)
+            if node.is_async and node.step == "arrive-compute":
+                arrives.append((pos, path, (node.name, node.axes, node.data)))
+            elif node.is_async and node.step == "wait-release":
+                waits.append((pos, path, (node.name, node.axes, node.data)))
+
+    # RC002: arrive/wait pairing (each arrive consumes the next matching wait)
+    unmatched_waits = list(waits)
+    for apos, apath, akey in arrives:
+        match = next((w for w in unmatched_waits
+                      if w[2] == akey and w[0] > apos), None)
+        if match is None:
+            out.append(emit("RC002", apath,
+                            f"async {akey[0]} arrive-compute on "
+                            f"data{list(akey[2])} has no matching "
+                            f"wait-release"))
+        else:
+            unmatched_waits.remove(match)
+    for wpos, wpath, wkey in unmatched_waits:
+        if not any(a[2] == wkey and a[0] < wpos for a in arrives):
+            out.append(emit("RC002", wpath,
+                            f"async {wkey[0]} wait-release on "
+                            f"data{list(wkey[2])} has no preceding "
+                            f"arrive-compute"))
+
+    # RC001: conflicting shared accesses with no ordering sync between them
+    by_symbol: Dict[str, List[Tuple[int, str, bool]]] = {}
+    for pos_, path, sym, writes in accesses:
+        by_symbol.setdefault(sym, []).append((pos_, path, writes))
+    for sym in sorted(by_symbol):
+        attr = _attr_for(sym, attrs)
+        if attr is None or attr.sharing != "shared":
+            continue
+        evs = by_symbol[sym]
+        for i in range(len(evs) - 1):
+            p1, _, w1 = evs[i]
+            p2, path2, w2 = evs[i + 1]
+            if not (w1 or w2):
+                continue
+            if any(p1 < sp < p2 for sp in ordering_pos):
+                continue
+            out.append(emit("RC001", path2,
+                            f"'{sym}' is shared and "
+                            f"{'written' if w2 else 'read'} here with a "
+                            f"conflicting access before it and no "
+                            f"ordering sync between them"))
+            break   # one report per symbol per region keeps the surface small
+    return out
+
+
+def _check_dist_rules(prog: ir.Program) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    rules = ir.ext_get(prog.extensions, "dist_rules", ())
+    if not rules:
+        return out
+    for path, node in ir.walk_with_path(prog):
+        if not isinstance(node, ir.DataAttr) or not node.distribution:
+            continue
+        rule = next((cands for pat, cands in rules
+                     if fnmatch(node.symbol, pat)), None)
+        if rule is None:
+            continue
+        allowed = {part for _, axis in rule
+                   for part in str(axis).split("+")}
+        for d in node.distribution:
+            for part in d.axis.split("+"):
+                if part not in allowed:
+                    out.append(emit(
+                        "RC003", path,
+                        f"'{node.symbol}' is distributed over axis "
+                        f"'{part}' (dim {d.dim}) but its dist rule "
+                        f"prescribes only {sorted(allowed) or 'replication'}"
+                        f" — replicated-write/sharded-read hazard"))
+    return out

@@ -1,0 +1,139 @@
+"""Well-formedness pass (WF*): names, keys, axes.
+
+Checks the static referential integrity the rest of the framework assumes:
+
+* every datum named by a ``KernelOp`` / ``MoveOp`` / ``MemOp`` / ``SyncOp``
+  resolves to a declared ``DataAttr`` or a symbol-table entry (prefix
+  matching in both directions — ``cache`` covers ``cache/k_pages`` and
+  vice versa), so a kernel can't silently compute on a datum the program
+  never declared;
+* every extension key on a ``DataAttr`` / ``MemOp`` / ``SyncOp`` /
+  ``LoopNode`` is drawn from the documented key tables
+  (``core.keytables``) — a typo'd ``mm()`` key would otherwise simply not
+  render, i.e. not fingerprint, which is the worst possible failure mode
+  for a plan-cache key;
+* allocators come from ``ir.ALLOCATORS``;
+* every mesh axis named by a ``DataDist``, a ``SyncOp`` or a worksharing
+  loop exists in the governing ``SpmdRegion``'s ``MeshSpec``.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from ..core import ir
+from ..core.keytables import (LOOP_KEYS, MEMOP_KEYS, SYNC_KEYS,
+                              known_data_attr_keys)
+from .diagnostics import Diagnostic, emit
+
+
+def _covers(name: str, other: str) -> bool:
+    """True when symbol ``name`` and symbol/attr ``other`` refer to the
+    same datum or one is a subtree of the other (pytree-path prefixing)."""
+    return (name == other or name.startswith(other + "/")
+            or other.startswith(name + "/"))
+
+
+def _mesh_for(path: str, regions: List[Tuple[str, ir.MeshSpec]]):
+    """The MeshSpec of the innermost SPMD region enclosing ``path``."""
+    best = None
+    best_len = -1
+    for rpath, mesh in regions:
+        if (path == rpath or path.startswith(rpath + "/") or rpath == "") \
+                and len(rpath) > best_len:
+            best, best_len = mesh, len(rpath)
+    return best
+
+
+def check_wellformed(prog: ir.Program) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    symtab = prog.symbol_table()
+    attrs = ir.find_all(prog, ir.DataAttr)
+    attr_symbols = [a.symbol for a in attrs]
+    data_keys = known_data_attr_keys()
+
+    def resolvable(sym: str) -> bool:
+        return (any(_covers(sym, a) for a in attr_symbols)
+                or any(_covers(sym, s) for s in symtab))
+
+    regions: List[Tuple[str, ir.MeshSpec]] = []
+    for path, node in ir.walk_with_path(prog):
+        if isinstance(node, ir.SpmdRegion):
+            regions.append((path, node.mesh))
+
+    def check_axes(path: str, axes, code: str, what: str):
+        mesh = _mesh_for(path, regions)
+        if mesh is None:
+            return
+        for axis in axes:
+            for part in str(axis).split("+"):
+                if part and part not in mesh.names:
+                    out.append(emit(code, path,
+                                    f"{what} names mesh axis '{part}' but "
+                                    f"the SPMD mesh only defines "
+                                    f"{mesh.names}"))
+
+    for path, node in ir.walk_with_path(prog):
+        if isinstance(node, ir.KernelOp):
+            for arg in node.args:
+                if not resolvable(arg):
+                    out.append(emit("WF001", path,
+                                    f"kernel @{node.fn} names '{arg}' which "
+                                    f"has neither a data attribute nor a "
+                                    f"symbol-table entry"))
+        elif isinstance(node, (ir.MoveOp, ir.MemOp)):
+            if not resolvable(node.symbol):
+                kind = "memcpy" if isinstance(node, ir.MoveOp) \
+                    else f"memory_{node.kind}"
+                out.append(emit("WF001", path,
+                                f"{kind} names '{node.symbol}' which has "
+                                f"neither a data attribute nor a "
+                                f"symbol-table entry"))
+            if isinstance(node, ir.MemOp):
+                if node.allocator not in ir.ALLOCATORS:
+                    out.append(emit("WF005", path,
+                                    f"memory_{node.kind} uses unknown "
+                                    f"allocator '{node.allocator}'; known: "
+                                    f"{ir.ALLOCATORS}"))
+                for k, _ in node.extensions:
+                    if k not in MEMOP_KEYS:
+                        out.append(emit("WF002", path,
+                                        f"memory_{node.kind}({node.symbol}) "
+                                        f"carries unknown extension key "
+                                        f"'{k}'; known memop keys: "
+                                        f"{sorted(MEMOP_KEYS)}"))
+        elif isinstance(node, ir.DataAttr):
+            if node.allocator not in ir.ALLOCATORS:
+                out.append(emit("WF005", path,
+                                f"data attribute '{node.symbol}' uses "
+                                f"unknown allocator '{node.allocator}'; "
+                                f"known: {ir.ALLOCATORS}"))
+            for k, _ in node.extensions:
+                if k not in data_keys:
+                    out.append(emit("WF002", path,
+                                    f"data attribute '{node.symbol}' "
+                                    f"carries unknown extension key '{k}' "
+                                    f"— it would not render into mm()/"
+                                    f"caps()/sched() and therefore not "
+                                    f"fingerprint"))
+            check_axes(path, (d.axis for d in node.distribution),
+                       "WF003", f"data attribute '{node.symbol}'")
+        elif isinstance(node, ir.SyncOp):
+            for k, _ in node.extensions:
+                if k not in SYNC_KEYS:
+                    out.append(emit("WF002", path,
+                                    f"sync {node.name} carries unknown "
+                                    f"extension key '{k}'; known sync "
+                                    f"keys: {sorted(SYNC_KEYS)}"))
+            check_axes(path, node.axes, "WF004", f"sync {node.name}")
+        elif isinstance(node, ir.LoopNode):
+            for k, _ in node.extensions:
+                if k not in LOOP_KEYS:
+                    out.append(emit("WF002", path,
+                                    f"loop {node.induction} carries "
+                                    f"unknown extension key '{k}'; known "
+                                    f"loop keys: {sorted(LOOP_KEYS)}"))
+            check_axes(path,
+                       (p.axis for p in node.parallel
+                        if isinstance(p, ir.Worksharing) and p.axis),
+                       "WF006", f"worksharing loop '{node.induction}'")
+    return out

@@ -358,23 +358,68 @@ class Program:
 
 # ------------------------------------------------------------------------- walking
 
+# Node classes the walk descends into when found inside tuple-valued fields
+# (body/data/sync/symbols-adjacent tuples) ...
+_TUPLE_WALK_TYPES = (SpmdRegion, LoopNode, TaskNode, KernelOp, SyncOp,
+                     MoveOp, MemOp, DataAttr, Program)
+# ... and when found as a direct (scalar) dataclass field. DataAttr/Program
+# never appear as scalar fields of another node, and MeshSpec/LoopParallel
+# are deliberately *not* walked — they are attributes of their owner, not
+# ops; analyses read them through the owning node.
+_FIELD_WALK_TYPES = (SpmdRegion, LoopNode, TaskNode, KernelOp, SyncOp,
+                     MoveOp, MemOp)
+
+
+def walk_with_path(node: Any, _path: str = "", _stack: Optional[set] = None):
+    """Yield ``(op_path, node)`` for every node in a program/subtree.
+
+    Traversal contract (the analysis passes depend on it — do not change
+    without updating ``repro.analysis``):
+
+    * **pre-order**: a node is yielded before any of its children;
+    * **deterministic**: children are visited in dataclass field
+      declaration order, tuple elements left-to-right — so two equal
+      programs always produce the same (path, node) sequence, and an
+      ``op_path`` is a stable address usable in diagnostics and tests;
+    * **path syntax**: ``/``-joined steps, ``field[i]`` for the *i*-th
+      element of a tuple field and ``field`` for a scalar field, relative
+      to the root (whose path is ``""``), e.g.
+      ``body[0]/body[0]/body[3]`` = 4th op in the SPMD region's body;
+    * **cycle-safe**: a node already on the current ancestor stack is
+      skipped instead of recursed into (frozen dataclasses make cycles
+      hard to build by accident, but ``object.__setattr__`` can — the
+      walk must terminate regardless). Shared *acyclic* subtrees (DAGs)
+      are still visited once per occurrence, each with its own path.
+    """
+    stack = _stack if _stack is not None else set()
+    marker = id(node)
+    if marker in stack:
+        return
+    yield _path, node
+    stack.add(marker)
+    try:
+        fields = dataclasses.fields(node) if dataclasses.is_dataclass(node) else ()
+        for f in fields:
+            v = getattr(node, f.name)
+            step = (_path + "/" if _path else "") + f.name
+            if isinstance(v, tuple):
+                for i, item in enumerate(v):
+                    if isinstance(item, _TUPLE_WALK_TYPES):
+                        yield from walk_with_path(item, f"{step}[{i}]", stack)
+            elif isinstance(v, _FIELD_WALK_TYPES):
+                yield from walk_with_path(v, step, stack)
+    finally:
+        stack.discard(marker)
+
 
 def walk(node: Any):
-    """Yield every node in a program/subtree, pre-order."""
-    yield node
-    for f in dataclasses.fields(node) if dataclasses.is_dataclass(node) else ():
-        v = getattr(node, f.name)
-        if isinstance(v, tuple):
-            for item in v:
-                if dataclasses.is_dataclass(item) and isinstance(
-                    item, (SpmdRegion, LoopNode, TaskNode, KernelOp, SyncOp,
-                           MoveOp, MemOp, DataAttr, Program)
-                ):
-                    yield from walk(item)
-        elif dataclasses.is_dataclass(v) and isinstance(
-            v, (SpmdRegion, LoopNode, TaskNode, KernelOp, SyncOp, MoveOp, MemOp)
-        ):
-            yield from walk(v)
+    """Yield every node in a program/subtree, pre-order.
+
+    Same traversal (and the same determinism/cycle-safety guarantees) as
+    :func:`walk_with_path`, without the path bookkeeping.
+    """
+    for _, n in walk_with_path(node):
+        yield n
 
 
 def find_all(node: Any, cls) -> list:

@@ -176,7 +176,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   prefix_sharing: bool = False,
                   spec_decode: Optional[Tuple[str, int]] = None,
                   scheduling: Optional[Dict[str, Any]] = None,
-                  fault_tolerant: bool = False
+                  fault_tolerant: bool = False,
+                  verify: bool = False
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
 
@@ -219,6 +220,11 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     crash-restart resume, quarantine + replay for poisoned slots) is part
     of the memory-management contract, so an FT-enabled engine fingerprints
     (and plan-caches) apart from a plain one of the same geometry.
+
+    ``verify=True`` runs the static verifier (``repro.analysis``) on the
+    built program and raises :class:`~repro.analysis.VerificationError` if
+    any error-severity diagnostic fires — a one-time plan-build cost with
+    zero hot-loop footprint.
     """
     axes = mesh_axes(multi_pod)
     dp = dp_axis(multi_pod)
@@ -317,13 +323,15 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
             # position -> physical page, shipped to the device every step
             b.data("cache/page_table", mapping="to", access="read-only",
                    page_map=True)
+            # MemOps appear in lifecycle order — alloc, alias/duplicate,
+            # snapshot/restore, dealloc — because the static lifetime pass
+            # (repro.analysis.lifetime) interprets the sequence abstractly:
+            # aliasing or snapshotting a pool after its dealloc is a
+            # use-after-dealloc diagnostic, exactly as it would be at runtime
             b.alloc("cache/k_pages", allocator="paged_kv_alloc",
                     num_pages=npages, page_size=ps)
             b.alloc("cache/v_pages", allocator="paged_kv_alloc",
                     num_pages=npages, page_size=ps)
-            # sequences release their pages on completion/eviction
-            b.dealloc("cache/k_pages", allocator="paged_kv_alloc")
-            b.dealloc("cache/v_pages", allocator="paged_kv_alloc")
             if prefix_sharing:
                 # prefix caching: admission may alias (ref-count) another
                 # sequence's prompt-prefix pages instead of allocating +
@@ -343,6 +351,9 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                 b.snapshot("cache/v_pages", allocator="paged_kv_alloc")
                 b.restore("cache/k_pages", allocator="paged_kv_alloc")
                 b.restore("cache/v_pages", allocator="paged_kv_alloc")
+            # sequences release their pages on completion/eviction
+            b.dealloc("cache/k_pages", allocator="paged_kv_alloc")
+            b.dealloc("cache/v_pages", allocator="paged_kv_alloc")
         elif shape.kind == "decode":
             dense_mm = {"fault_tolerant": True} if ft else {}
             b.data("cache", mapping="tofrom", access="read-write",
@@ -364,7 +375,11 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
         arch=cfg.name, shape=shape.name, kind=shape.kind,
         multi_pod=multi_pod, fsdp=fsdp,
         **(extra_ext or {}))
-    return b.build()
+    prog = b.build()
+    if verify:
+        from ..analysis import verify_program
+        verify_program(prog)
+    return prog
 
 
 def _symbols(cfg: ArchConfig, shape: ShapeCfg,
@@ -385,7 +400,11 @@ def _symbols(cfg: ArchConfig, shape: ShapeCfg,
             cspecs = api.paged_cache_specs(cfg, npages, ps)
             symbols.update(tree_symbols({"cache": cspecs}))
             symbols["cache/page_table"] = ((shape.global_batch, pps), "int32")
-        elif shape.kind == "decode":
+        elif shape.kind in ("decode", "prefill"):
+            # prefill *emits* the cache (same symbols, same sharding rules as
+            # decode — the hand-off never reshards), so the cache belongs in
+            # its symbol table too: the verifier requires every kernel arg to
+            # resolve to a declared datum
             cspecs = api.cache_specs(cfg, shape.global_batch, shape.seq_len)
             symbols.update(tree_symbols({"cache": cspecs}))
     for k, v in input_specs(cfg, shape).items():

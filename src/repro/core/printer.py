@@ -22,6 +22,14 @@ import hashlib
 from typing import Dict, List
 
 from . import ir
+# The mm()/caps()/sched() key vocabularies — and their rendering order —
+# are declared once, as introspectable data, in ``core.keytables``; the
+# well-formedness analysis pass and the docs drift gate consume the same
+# tables, so a key can't be rendered (fingerprinted) without also being
+# verifiable and documented. The names are re-exported here for the
+# printer's existing importers (plans, lower, tests).
+from .keytables import (CAP_EXT_KEYS, MM_EXT_KEYS,            # noqa: F401
+                        SCHED_EXT_KEYS)
 
 
 def to_mlir(prog: ir.Program) -> str:
@@ -197,16 +205,6 @@ def _parallel(p) -> str:
     return str(p)
 
 
-# Memory-management extension keys rendered into the canonical text (and thus
-# the program fingerprint): paged-KV geometry must distinguish plans the same
-# way shapes do, so a PlanCache warmed at one page size never serves another.
-# ``shared_prefix`` marks prefix-shared (ref-counted, copy-on-write) KV pages:
-# an engine with prefix caching on manages memory differently from one with it
-# off, so the two must never share a fingerprint either.
-MM_EXT_KEYS = ("page_size", "num_pages", "pages_per_slot", "page_map",
-               "shared_prefix", "fault_tolerant")
-
-
 def _mm_fields(extensions) -> str:
     parts = []
     for key in MM_EXT_KEYS:
@@ -217,18 +215,6 @@ def _mm_fields(extensions) -> str:
     return f"mm({' '.join(parts)})" if parts else ""
 
 
-# ModelFamily capability flags (models.api.FamilySpec) rendered into the
-# canonical text: capability-driven dispatch is part of the serving contract,
-# so two plans that differ only in family capabilities (e.g. a pageable dense
-# cache vs an encoder-memory cache of the same shapes) must never share a
-# fingerprint — or a PlanCache entry. Valued keys render as key(value):
-# ``spec_verify`` carries the speculative lookahead k and ``draft`` the
-# paired draft architecture, so a verify plan for one (draft, k) pairing can
-# never be served for another.
-CAP_EXT_KEYS = ("pageable", "needs_encoder_memory", "stateful_cache",
-                "encoder_memory", "spec_verify", "draft")
-
-
 def _cap_fields(extensions) -> str:
     parts = []
     for key in CAP_EXT_KEYS:
@@ -237,19 +223,6 @@ def _cap_fields(extensions) -> str:
             continue
         parts.append(key if v is True else f"{key}({v})")
     return f"caps({' '.join(parts)})" if parts else ""
-
-
-# Admission-scheduling keys (runtime.scheduling.SchedulingPolicy.ext())
-# rendered into the canonical text: the order requests are admitted to decode
-# slots — and which running sequence is preempted under pool pressure — is a
-# parallel execution decision like any other, so it is declared in the program
-# rather than hard-coded in the engine, and two engines with different
-# policies (fifo vs priority, different tenant weights) fingerprint apart in
-# the PlanCache. ``policy`` is the base discipline (fifo|priority|fair|sjf);
-# ``prefix_affinity`` marks prefix-cache-aware admission; ``preempt`` marks
-# priority preemption via eviction-by-recompute; ``tenants`` carries the
-# canonical (sorted) ``name:weight`` list for fair scheduling.
-SCHED_EXT_KEYS = ("policy", "prefix_affinity", "preempt", "tenants")
 
 
 def _sched_fields(extensions) -> str:

@@ -1,0 +1,152 @@
+"""Static-analysis lint gate: verify every program we can build.
+
+``PYTHONPATH=src python -m repro.launch.lint --all-configs`` builds the UPIR
+program for every registered architecture in every engine mode (dense /
+paged / chunked / spec / prefix / ft / sched, capability-gated) plus every
+registered (arch x shape) dry-run cell, runs the full verifier
+(``repro.analysis``) on both the built and the pass-optimized program, and
+exits non-zero if any error-severity diagnostic fires. This is the CI gate:
+a pass or planner change that emits ill-formed IR — a leaked page pool, an
+unpaired sync, an annotation key that silently wouldn't fingerprint — fails
+the build before any engine executes it.
+
+``run_lint()`` is the importable core (``benchmarks.serve_bench`` section 8
+records its verifier wall-time); the CLI is a thin argparse shell.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# engine-shaped decode cell the mode matrix lints (mirrors Engine.__init__:
+# slots=4, max_seq=128, page_size=16 -> pages_per_slot=8, num_pages=32)
+_SLOTS, _MAX_SEQ, _PAGE = 4, 128, 16
+_GEOM = (_SLOTS * (_MAX_SEQ // _PAGE), _PAGE, _MAX_SEQ // _PAGE)
+
+
+def _modes(cfg, spec) -> Dict[str, Dict[str, Any]]:
+    """build_program kwargs per engine mode, capability-gated like the
+    EngineConfig validation is: paged layouts need 'pageable', speculative
+    verify needs a dense per-layer K/V cache, fault tolerance falls back to
+    the dense snapshot/restore contract for non-pageable families."""
+    from ..models import api
+    pageable = spec.pageable
+    modes: Dict[str, Dict[str, Any]] = {
+        "dense": {},
+        "sched": {"scheduling": {"policy": "priority", "preempt": True}},
+    }
+    if pageable:
+        modes["paged"] = {"page_geometry": _GEOM}
+        modes["chunked"] = {"page_geometry": _GEOM,
+                           "extra_ext": {"prefill_chunk": _PAGE}}
+        modes["prefix"] = {"page_geometry": _GEOM, "prefix_sharing": True}
+        modes["ft"] = {"page_geometry": _GEOM, "fault_tolerant": True}
+    else:
+        modes["ft"] = {"fault_tolerant": True}
+    if api.supports_spec_verify(cfg):
+        modes["spec"] = {"spec_decode": (cfg.name, 4)}
+    return modes
+
+
+def run_lint(archs: Optional[List[str]] = None, smoke: bool = False,
+             optimized: bool = True) -> Dict[str, Any]:
+    """Build + verify every (config x engine mode) program and every
+    registered (config x shape) cell. Returns the machine-readable report
+    serve_bench section 8 records:
+
+    ``programs``/``errors``/``warnings`` totals, ``verify_s`` (wall time in
+    the verifier alone — the <5s CI budget), ``build_s`` (program
+    construction + pass pipeline, outside the budget), and per-cell rows.
+    """
+    from ..analysis import analyze, report_fingerprint
+    from ..configs import ARCH_IDS, SHAPES, cell_supported, config, \
+        smoke_config
+    from ..configs.base import ShapeCfg
+    from ..core.passes import run_pipeline
+    from ..core.plans import build_program
+    from ..models import api
+
+    make: Callable = smoke_config if smoke else config
+    cells: List[Dict[str, Any]] = []
+    verify_s = 0.0
+    build_s = 0.0
+
+    def lint_one(arch: str, shape, mode: str, kwargs: Dict[str, Any]):
+        nonlocal verify_s, build_s
+        t0 = time.perf_counter()
+        progs = [("built", build_program(make(arch), shape, **kwargs))]
+        if optimized:
+            progs.append(("optimized", run_pipeline(progs[0][1])))
+        build_s += time.perf_counter() - t0
+        for stage, prog in progs:
+            t0 = time.perf_counter()
+            diags = analyze(prog)
+            verify_s += time.perf_counter() - t0
+            errs = [d for d in diags if d.severity == "error"]
+            cells.append({
+                "arch": arch, "shape": shape.name, "mode": mode,
+                "stage": stage, "errors": len(errs),
+                "warnings": len(diags) - len(errs),
+                "report_fingerprint": report_fingerprint(diags),
+                "diagnostics": [d.render() for d in diags],
+            })
+
+    for arch in (archs or list(ARCH_IDS)):
+        cfg = make(arch)
+        spec = api.family_spec(cfg)
+        decode = ShapeCfg(f"lint_b{_SLOTS}", "decode", _MAX_SEQ, _SLOTS)
+        for mode, kwargs in _modes(cfg, spec).items():
+            lint_one(arch, decode, mode, kwargs)
+        for shape in SHAPES.values():
+            ok, _why = cell_supported(cfg, shape)
+            if not ok:
+                continue
+            lint_one(arch, shape, "cell", {})
+    return {
+        "programs": len(cells),
+        "errors": sum(c["errors"] for c in cells),
+        "warnings": sum(c["warnings"] for c in cells),
+        "verify_s": round(verify_s, 3),
+        "build_s": round(build_s, 3),
+        "cells": cells,
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="verify every buildable UPIR program (CI lint gate)")
+    ap.add_argument("--all-configs", action="store_true",
+                    help="lint every registered architecture")
+    ap.add_argument("--arch", action="append",
+                    help="lint one architecture (repeatable)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use smoke-sized configs (faster symbol tables; "
+                         "the IR structure is identical)")
+    ap.add_argument("--no-optimized", action="store_true",
+                    help="verify only built programs, skip the pass pipeline")
+    ap.add_argument("--json", help="write the full report to this path")
+    args = ap.parse_args(argv)
+    if not args.all_configs and not args.arch:
+        ap.error("pick --all-configs or --arch NAME")
+
+    report = run_lint(archs=args.arch, smoke=args.smoke,
+                      optimized=not args.no_optimized)
+    for c in report["cells"]:
+        if c["diagnostics"]:
+            print(f"{c['arch']} x {c['shape']} [{c['mode']}/{c['stage']}]:")
+            for line in c["diagnostics"]:
+                print(f"  {line}")
+    print(f"lint: {report['programs']} programs, "
+          f"{report['errors']} errors, {report['warnings']} warnings "
+          f"(verify {report['verify_s']}s, build {report['build_s']}s)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+    return 1 if report["errors"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

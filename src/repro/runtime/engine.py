@@ -332,7 +332,12 @@ class EngineConfig:
     * ``max_retries`` — quarantine replays a request may consume before it
       terminates ``failed`` with a typed ``FailureInfo``.
     * ``debug_checks`` — run allocator + page-table invariant checks every
-      tick (loud ``RuntimeError`` on accounting bugs).
+      tick (loud ``RuntimeError`` on accounting bugs); also implies
+      ``verify_ir``.
+    * ``verify_ir`` — run the static verifier (``repro.analysis``) on the
+      decode program at plan-build time; raises
+      ``repro.analysis.VerificationError`` on any error diagnostic. A
+      one-time cost per (cold) plan build — nothing in the hot loop.
     * ``enforce_deadlines`` — actually shed queued requests whose
       ``deadline_ms`` TTFT deadline has already passed (typed
       ``SHED_DEADLINE``); off by default — ``deadline_ms`` stays
@@ -368,6 +373,7 @@ class EngineConfig:
     watchdog_ms: Optional[float] = None   # per-iteration wall-clock bound
     max_retries: int = 3               # quarantine replays before FAILED
     debug_checks: bool = False         # per-tick invariant checks
+    verify_ir: bool = False            # static-verify the program at plan build
     enforce_deadlines: bool = False    # shed past-deadline queued requests
 
 
@@ -811,7 +817,9 @@ class Engine:
                                         page_geometry=page_geom,
                                         prefix_sharing=self.prefix_cache,
                                         scheduling=self.policy.ext(),
-                                        fault_tolerant=self.ft)
+                                        fault_tolerant=self.ft,
+                                        verify=ecfg.verify_ir
+                                        or ecfg.debug_checks)
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))

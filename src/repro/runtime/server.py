@@ -32,7 +32,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  prefix_sharing: bool = False,
                  spec_decode: Optional[Tuple[str, int]] = None,
                  scheduling: Optional[Dict[str, Any]] = None,
-                 fault_tolerant: bool = False
+                 fault_tolerant: bool = False,
+                 verify: bool = False
                  ) -> LoweredPlan:
     """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
     LoweredPlan, via the PlanCache.
@@ -52,7 +53,10 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     fingerprinted, so engines with different policies never share a plan.
     ``fault_tolerant=True`` marks the cache's memory contract as
     fault-tolerant (``mm(fault_tolerant)`` + snapshot/restore MemOps), so
-    FT-enabled engines fingerprint apart too.
+    FT-enabled engines fingerprint apart too. ``verify=True`` runs the
+    static verifier on the built program before lowering (one-time
+    plan-build cost; raises ``repro.analysis.VerificationError`` on any
+    error diagnostic).
     """
     from ..core.plans import build_program
     cache = plan_cache if plan_cache is not None else default_plan_cache()
@@ -61,7 +65,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                          prefix_sharing=prefix_sharing,
                          spec_decode=spec_decode,
                          scheduling=scheduling,
-                         fault_tolerant=fault_tolerant)
+                         fault_tolerant=fault_tolerant,
+                         verify=verify)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)
 

@@ -116,13 +116,15 @@ class SpeculativeDecoder:
             backend=ecfg.backend, plan_cache=engine.plan_cache,
             trace=engine.trace, page_geometry=page_geom,
             prefix_sharing=engine.prefix_cache,
-            spec_decode=(dcfg.name, self.k))
+            spec_decode=(dcfg.name, self.k),
+            verify=ecfg.verify_ir or ecfg.debug_checks)
         # the draft rides its own (plain dense decode) plan + cache entries
         self.draft_plan = server.serving_plan(
             dcfg, ShapeCfg(f"draft_b{ecfg.slots}", "decode", ecfg.max_seq,
                            ecfg.slots),
             backend=ecfg.backend, plan_cache=engine.plan_cache,
-            trace=engine.trace)
+            trace=engine.trace,
+            verify=ecfg.verify_ir or ecfg.debug_checks)
 
         self.params = draft_params if draft_params is not None \
             else api.init_params(dcfg, jax.random.key(1))

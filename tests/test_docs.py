@@ -80,6 +80,52 @@ def test_memop_kinds_documented():
         assert kind in spec_text
 
 
+def test_key_tables_are_the_single_source_of_truth():
+    """The printer's mm/caps/sched key tuples must BE the keytables-derived
+    tuples (one source of truth), and every table row must carry a doc
+    line — the tables are introspectable data, not prose."""
+    from repro.core import keytables, printer
+    assert printer.MM_EXT_KEYS is keytables.MM_EXT_KEYS
+    assert printer.CAP_EXT_KEYS is keytables.CAP_EXT_KEYS
+    assert printer.SCHED_EXT_KEYS is keytables.SCHED_EXT_KEYS
+    for table in keytables.ALL_KEY_TABLES.values():
+        for entry in table:
+            assert entry.key and entry.doc, entry
+    # the verifier's "known data-attr key" universe covers every
+    # fingerprinted key, or WF002 would fire on shipped programs
+    known = keytables.known_data_attr_keys()
+    for key in (keytables.MM_EXT_KEYS + keytables.CAP_EXT_KEYS
+                + keytables.SCHED_EXT_KEYS):
+        assert key in known, key
+
+
+def test_analysis_doc_documents_every_diagnostic_code():
+    """docs/ANALYSIS.md is the diagnostic catalog: every registered code
+    must appear with its severity, and no stale codes may linger."""
+    from repro.analysis import DIAGNOSTIC_CODES
+    text = (DOCS / "ANALYSIS.md").read_text()
+    for code, (severity, _meaning) in DIAGNOSTIC_CODES.items():
+        row = re.search(rf"\|\s*`{code}`\s*\|\s*(\w+)\s*\|", text)
+        assert row, f"diagnostic code {code} is not documented in " \
+                    f"docs/ANALYSIS.md"
+        assert row.group(1) == severity, (
+            f"{code} documented as {row.group(1)!r} but registered as "
+            f"{severity!r}")
+    stale = set(re.findall(r"`((?:WF|LT|RC|SC)\d{3})`", text)) \
+        - set(DIAGNOSTIC_CODES)
+    assert not stale, f"docs/ANALYSIS.md documents unregistered codes: " \
+                      f"{sorted(stale)}"
+
+
+def test_spec_examples_verify_clean(examples):
+    """Documented programs must be verifiable programs: every UPIR_TEXT.md
+    example builds a Program that passes the static verifier."""
+    assert set(examples.PROGRAM_BUILDERS) == set(examples.EXAMPLES)
+    bad = {name: [d.render() for d in errs]
+           for name, errs in examples.verify_all().items() if errs}
+    assert not bad, f"spec examples fail the verifier: {bad}"
+
+
 def test_architecture_doc_paths_exist():
     arch = (DOCS / "ARCHITECTURE.md").read_text()
     paths = set(re.findall(r"`((?:src|tests|benchmarks|docs)/[\w/.-]+)`",

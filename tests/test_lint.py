@@ -1,0 +1,72 @@
+"""The CI lint gate (`python -m repro.launch.lint`): every buildable
+program verifies clean, the CLI exit code reflects error diagnostics, and
+a planner regression (simulated by stripping deallocs from every built
+program) actually fails the gate — the gate must be falsifiable.
+"""
+import json
+
+import pytest
+
+from repro.core import ir
+from repro.launch import lint
+
+ARCH = "tinyllama-1.1b"
+
+
+def test_run_lint_smoke_is_clean_and_structured():
+    report = lint.run_lint(archs=[ARCH], smoke=True)
+    assert report["errors"] == 0
+    assert report["programs"] == len(report["cells"]) > 0
+    assert report["verify_s"] >= 0 and report["build_s"] >= 0
+    modes = {c["mode"] for c in report["cells"]}
+    # capability-gated matrix: tinyllama is pageable + spec-capable
+    assert {"dense", "sched", "paged", "chunked", "prefix", "ft",
+            "spec"} <= modes
+    stages = {c["stage"] for c in report["cells"]}
+    assert stages == {"built", "optimized"}
+    for cell in report["cells"]:
+        assert cell["errors"] == 0, cell
+        assert len(cell["report_fingerprint"]) == 16
+
+
+def test_run_lint_no_optimized_halves_the_matrix():
+    full = lint.run_lint(archs=[ARCH], smoke=True)
+    built = lint.run_lint(archs=[ARCH], smoke=True, optimized=False)
+    assert built["programs"] * 2 == full["programs"]
+    assert {c["stage"] for c in built["cells"]} == {"built"}
+
+
+def test_cli_exit_zero_and_json_report(tmp_path, capsys):
+    out = tmp_path / "lint.json"
+    rc = lint.main(["--arch", ARCH, "--smoke", "--json", str(out)])
+    assert rc == 0
+    assert "0 errors" in capsys.readouterr().out
+    report = json.loads(out.read_text())
+    assert report["errors"] == 0 and report["programs"] > 0
+
+
+def test_cli_requires_a_target():
+    with pytest.raises(SystemExit):
+        lint.main([])
+
+
+def test_lint_catches_a_planner_regression(monkeypatch, capsys):
+    """Strip every dealloc the planner emits: the gate must go red, name
+    the diagnostic, and exit 1."""
+    from repro.core import plans
+    real = plans.build_program
+
+    def leaky(*args, **kwargs):
+        prog = real(*args, **kwargs)
+        return ir.map_nodes(
+            prog, lambda n: None
+            if isinstance(n, ir.MemOp) and n.kind == "dealloc" else n)
+
+    monkeypatch.setattr(plans, "build_program", leaky)
+    report = lint.run_lint(archs=[ARCH], smoke=True, optimized=False)
+    assert report["errors"] > 0
+    paged = [c for c in report["cells"] if c["mode"] == "paged"]
+    assert any("LT005" in d for c in paged for d in c["diagnostics"])
+    rc = lint.main(["--arch", ARCH, "--smoke", "--no-optimized"])
+    assert rc == 1
+    assert "LT005" in capsys.readouterr().out
