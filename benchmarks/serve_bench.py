@@ -111,6 +111,18 @@ time. The CI gates are zero error diagnostics and total verify time under
 at every cold plan build, so it must stay cheap enough to be always-on.
 ``--json8`` writes the metrics — CI emits ``BENCH_8.json``.
 
+Section 9 is the telemetry overhead gate: the section-2 mixed paged+chunked
+workload served twice — ``EngineConfig(telemetry=False)`` vs ``True`` —
+with best-of-``T9_REPEATS`` decode throughput per mode. The CI gates are
+(a) token streams bitwise identical with telemetry on and off (observation
+must not perturb serving), (b) telemetry costs at most ``T9_OVERHEAD_PCT``
+percent tokens/s, and (c) the exported Chrome trace is schema-valid:
+monotone timestamps per track, a terminal (finished/failed) span for every
+admitted request, and the queue/allocator/scheduler tracks present —
+the same assertion ``tests/test_telemetry.py::chrome_trace_check`` makes.
+``--json9`` writes the metrics and ``--trace9`` the trace — CI emits
+``BENCH_9.json`` and ``TRACE_9.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -1274,6 +1286,154 @@ def bench_lint(json_path=None):
             "verify_s": report["verify_s"]}
 
 
+# ------------------------------------------------------- telemetry overhead
+
+T9_OVERHEAD_PCT = 3.0       # max tokens/s cost of telemetry, best-of runs
+T9_REPEATS = 5
+
+
+def _t9_trace_problems(trace, expect_rids):
+    """Chrome-trace schema violations, or [] — the same checks
+    ``tests/test_telemetry.py::chrome_trace_check`` asserts."""
+    problems = []
+    evs = trace.get("traceEvents", [])
+    if not evs or any("ph" not in e for e in evs):
+        return ["trace empty or events missing 'ph'"]
+    by_tid = {}
+    for e in evs:
+        if e["ph"] in ("X", "i"):
+            by_tid.setdefault(e["tid"], []).append(e["ts"])
+    for tid, tss in sorted(by_tid.items()):
+        if tss != sorted(tss):
+            problems.append(f"non-monotone ts on tid {tid}")
+    spans = [e for e in evs if e["ph"] == "X"]
+    for rid in expect_rids:
+        mine = [s for s in spans if s["args"].get("rid") == rid]
+        if not mine:
+            problems.append(f"rid {rid} has no spans")
+        elif not any(s["args"].get("outcome") in ("finished", "failed")
+                     for s in mine):
+            problems.append(f"rid {rid} never reaches a terminal span")
+    tracks = {e["args"]["name"] for e in evs
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    missing = {"queue", "allocator", "scheduler"} - tracks
+    if missing:
+        problems.append(f"missing metadata tracks: {sorted(missing)}")
+    return problems
+
+
+def bench_telemetry(json_path=None, trace_path=None):
+    """Telemetry overhead + trace validity (section 9).
+
+    Serves the section-2 mixed paged+chunked workload with telemetry off
+    and on. Gates: streams bitwise identical, <= ``T9_OVERHEAD_PCT`` %
+    tokens/s overhead (best-of-``T9_REPEATS`` per mode), and a
+    schema-valid Chrome trace covering every admitted request."""
+    import jax
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import Engine, EngineConfig
+
+    cfg = smoke_config(PAGED_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    workload = _mixed_workload(cfg.vocab)
+
+    num_pages = DENSE_SLOTS * PAGED_MAX_SEQ // PAGE_SIZE - 1
+    common = dict(slots=PAGED_SLOTS, prompt_buckets=PAGED_BUCKETS,
+                  max_seq=PAGED_MAX_SEQ, kv_layout="paged",
+                  page_size=PAGE_SIZE, num_pages=num_pages,
+                  prefill_chunk=PAGED_CHUNK, max_queue=2 * PAGED_REQUESTS)
+
+    engines = {}
+    for name, tel in (("off", False), ("on", True)):
+        engine = Engine(cfg, EngineConfig(telemetry=tel, **common),
+                        params=params)
+        warm = [engine.make_request([0] * (b - 1), 2) for b in PAGED_BUCKETS
+                for _ in range(2)]
+        engine.run(warm)
+        engines[name] = engine
+
+    # interleave the repeats (off, on, off, on, ...) so machine drift hits
+    # both modes alike; best-of-N converges each mode to its ceiling
+    results = {name: {"tokens_per_s_best": 0.0} for name in engines}
+    streams, last_reqs = {}, {}
+    for _ in range(T9_REPEATS):
+        for name, engine in engines.items():
+            engine.reset_stats()
+            reqs = [engine.make_request(p, n) for p, n in workload]
+            engine.run(reqs)
+            results[name]["tokens_per_s_best"] = max(
+                results[name]["tokens_per_s_best"],
+                engine.stats()["tokens_per_s"])
+            last_reqs[name] = reqs
+    for name, engine in engines.items():
+        streams[name] = [engine.finalize_request(r) for r in last_reqs[name]]
+
+    sec = engines["on"].stats()["telemetry"]
+    results["on"].update(
+        events=sec["events"], events_dropped=sec["events_dropped"],
+        ttft_p50_ms=sec["ttft_ms"].get("p50"),
+        ttft_p99_ms=sec["ttft_ms"].get("p99"),
+        itl_p50_ms=sec["itl_ms"].get("p50"))
+    # the trace covers the LAST repeat (reset_stats clears the ring)
+    trace = engines["on"].telemetry.to_chrome_trace()
+    trace_rids = [r.rid for r in last_reqs["on"] if r.state != "rejected"]
+
+    if streams["off"] != streams["on"]:
+        # CI gate: observation must not perturb serving
+        raise SystemExit("serve_bench_telemetry: token streams diverged "
+                         "between telemetry-off and telemetry-on engines")
+    off = results["off"]["tokens_per_s_best"]
+    on = results["on"]["tokens_per_s_best"]
+    overhead_pct = (1.0 - on / max(off, 1e-9)) * 100.0
+    trace_problems = _t9_trace_problems(trace, trace_rids)
+
+    print("# serve_bench_telemetry: mode,tok_s_best,events,dropped,"
+          "ttft_p50_ms,itl_p50_ms")
+    for name, r in results.items():
+        print(f"{name},{r['tokens_per_s_best']:.1f},{r.get('events', '')},"
+              f"{r.get('events_dropped', '')},{r.get('ttft_p50_ms', '')},"
+              f"{r.get('itl_p50_ms', '')}")
+    print(f"# telemetry overhead {overhead_pct:.2f}% of {off:.1f} tok/s "
+          f"(budget {T9_OVERHEAD_PCT}%); streams identical: True; "
+          f"trace: {len(trace['traceEvents'])} events, "
+          f"{len(trace_problems)} schema problem(s)")
+
+    if trace_path:
+        with open(trace_path, "w") as f:
+            json.dump(trace, f, indent=1)
+        print(f"# wrote {trace_path}")
+    if json_path:
+        payload = {
+            "bench": "telemetry_overhead",
+            "arch": cfg.name,
+            "requests": PAGED_REQUESTS,
+            "repeats": T9_REPEATS,
+            "engines": results,
+            "overhead_pct": round(overhead_pct, 2),
+            "overhead_budget_pct": T9_OVERHEAD_PCT,
+            "streams_identical": True,
+            "trace_events": len(trace["traceEvents"]),
+            "trace_problems": trace_problems,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+
+    if overhead_pct > T9_OVERHEAD_PCT:
+        # CI gate: telemetry must stay effectively free
+        raise SystemExit(
+            f"serve_bench_telemetry: overhead {overhead_pct:.2f}% exceeds "
+            f"{T9_OVERHEAD_PCT}% ({off:.1f} -> {on:.1f} tok/s)")
+    if trace_problems:
+        # CI gate: the exported trace must load cleanly in Perfetto
+        raise SystemExit(
+            f"serve_bench_telemetry: invalid Chrome trace: {trace_problems}")
+    return {"overhead_pct": overhead_pct, "trace_events":
+            len(trace["traceEvents"])}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -1291,6 +1451,10 @@ def main() -> None:
                     help="write fault-tolerance metrics to this JSON file")
     ap.add_argument("--json8", default=None,
                     help="write static-verifier metrics to this JSON file")
+    ap.add_argument("--json9", default=None,
+                    help="write telemetry-overhead metrics to this JSON file")
+    ap.add_argument("--trace9", default=None,
+                    help="write the section-9 Chrome trace to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
@@ -1300,6 +1464,7 @@ def main() -> None:
     bench_scheduling(json_path=args.json6)
     bench_faults(json_path=args.json7)
     bench_lint(json_path=args.json8)
+    bench_telemetry(json_path=args.json9, trace_path=args.trace9)
 
 
 if __name__ == "__main__":

@@ -102,6 +102,16 @@ def ft_decode():
                          page_geometry=(15, 4, 4), fault_tolerant=True)
 
 
+def traced_decode():
+    """A telemetry-instrumented decode program: ``mm(... traced)`` on the
+    cache data attribute plus the ``upir.trace_emit`` instrumentation op —
+    what ``EngineConfig(telemetry=True)`` builds, fingerprinted so traced
+    and untraced engines never share a plan."""
+    from repro.core.plans import build_program
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                         traced=True)
+
+
 def train_step():
     """A training program: taskloop microbatching, the grads allreduce,
     state/grads data attributes."""
@@ -117,6 +127,7 @@ PROGRAM_BUILDERS: Dict[str, Callable] = {
     "spec-verify": spec_verify,
     "sched-decode": sched_decode,
     "ft-decode": ft_decode,
+    "traced-decode": traced_decode,
     "train-step": train_step,
 }
 

@@ -19,6 +19,10 @@ as an error:
 * **SC005** ``caps(spec_verify)`` ⇔ the ``spec_verify`` kernel ⇔ the
   ``in/draft_tokens`` input: the draft/target pairing is one contract with
   three visible facets, and they must agree.
+* **SC007 / SC008** ``mm(traced)`` ⇔ ``trace_emit`` op: a telemetry-enabled
+  engine's instrumentation points must be declared in the program that
+  fingerprints it apart — tracing without the annotation (or the annotation
+  without the op) would let traced and untraced engines share a plan.
 """
 from __future__ import annotations
 
@@ -103,6 +107,26 @@ def check_contracts(prog: ir.Program) -> List[Diagnostic]:
                 f"'{sym}' declares mm(fault_tolerant) but the program "
                 f"carries no snapshot memop — a recovering engine would "
                 f"have no state to restore"))
+
+    # ---- SC007 / SC008: mm(traced) <=> trace_emit instrumentation op
+    traced_syms = [n.symbol for _, n in attrs
+                   if ir.ext_get(n.extensions, "traced")]
+    emits = [(p, n) for p, n in memops if n.kind == "trace_emit"]
+    for path, n in emits:
+        if not any(_covers(n.symbol, s) for s in traced_syms):
+            out.append(emit(
+                "SC007", path,
+                f"trace_emit of '{n.symbol}' in a program whose cache does "
+                f"not declare mm(traced) — the instrumentation would run "
+                f"without fingerprinting the plan apart"))
+    for sym in traced_syms:
+        if not any(_covers(n.symbol, sym) for _, n in emits):
+            path = next(p for p, n in attrs if n.symbol == sym)
+            out.append(emit(
+                "SC008", path,
+                f"'{sym}' declares mm(traced) but the program carries no "
+                f"trace_emit op — the instrumentation points the "
+                f"annotation fingerprints do not exist"))
 
     # ---- SC005: caps(spec_verify) <=> spec_verify kernel <=> draft input
     spec_attr = next((p for p, n in attrs

@@ -92,6 +92,11 @@ DIAGNOSTIC_CODES: Dict[str, Tuple[str, str]] = {
                      "spec_verify kernel/draft-token input do not agree"),
     "SC006": (ERROR, "shared-prefix-without-share: mm(shared_prefix) "
                      "declared but the program carries no share memop"),
+    "SC007": (ERROR, "trace-emit-without-traced-annotation: a trace_emit "
+                     "instrumentation op in a program whose cache does not "
+                     "declare mm(traced)"),
+    "SC008": (ERROR, "traced-annotation-without-trace-emit: mm(traced) "
+                     "declared but the program carries no trace_emit op"),
 }
 
 

@@ -138,6 +138,17 @@ class PlanBuilder:
                                    extensions=ir.ext(**extensions)))
         return self
 
+    def trace_emit(self, symbol: str, allocator: str = "default_mem_alloc",
+                   **extensions: Any) -> "PlanBuilder":
+        """Host-side request-lifecycle instrumentation point on ``symbol``
+        (telemetry-enabled engines): rendered as ``upir.trace_emit``, so a
+        traced plan fingerprints apart from an untraced one. Pairs with the
+        ``mm(traced)`` annotation (serving contract SC007/SC008)."""
+        self._mems.append(ir.MemOp(kind="trace_emit", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(**extensions)))
+        return self
+
     # ---------------------------------------------------------------------- loops
 
     def loop(self, induction: str, upper: Any, *, lower: Any = 0, step: Any = 1,

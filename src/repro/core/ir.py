@@ -118,20 +118,23 @@ class MoveOp:
 @dataclass(frozen=True)
 class MemOp:
     """upir.memory_{alloc,dealloc,share,cow,snapshot,restore} — explicit
-    memory management (§4.2).
+    memory management (§4.2) — plus ``upir.trace_emit`` instrumentation.
 
     ``alloc``/``dealloc`` bracket a buffer's lifetime; ``share`` marks a
     ref-counted aliasing of already-allocated storage (prefix-shared KV
     pages), ``cow`` marks the copy-on-write duplication that resolves a
     write into shared storage, and ``snapshot``/``restore`` are the
     device↔host state movement a fault-tolerant engine uses for
-    crash-restart resume (``Engine.snapshot()``). All render into the
-    canonical program text, so an engine that manages memory differently
-    (e.g. prefix sharing or fault tolerance on vs off) fingerprints — and
-    plan-caches — differently.
+    crash-restart resume (``Engine.snapshot()``). ``trace_emit`` marks the
+    host-side request-lifecycle instrumentation points of a
+    telemetry-enabled engine (``runtime.telemetry``) — the printer renders
+    it as ``upir.trace_emit`` rather than ``upir.memory_trace_emit``. All
+    render into the canonical program text, so an engine that manages
+    memory differently (e.g. prefix sharing, fault tolerance, or tracing
+    on vs off) fingerprints — and plan-caches — differently.
     """
 
-    kind: str      # "alloc" | "dealloc" | "share" | "cow" | "snapshot" | "restore"
+    kind: str      # "alloc" | "dealloc" | "share" | "cow" | "snapshot" | "restore" | "trace_emit"
     symbol: str
     allocator: str = "default_mem_alloc"
     extensions: Extensions = ()

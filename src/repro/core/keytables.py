@@ -55,6 +55,9 @@ MM_KEY_TABLE: Tuple[ExtKey, ...] = (
            "pool pages may be ref-count aliased across sequences (CoW)"),
     ExtKey("fault_tolerant",
            "pool state round-trips through host snapshot/restore buffers"),
+    ExtKey("traced",
+           "request-lifecycle instrumentation points (upir.trace_emit) are "
+           "part of the program — a telemetry-enabled engine"),
 )
 
 # ------------------------------------------------------------- caps() keys

@@ -88,6 +88,10 @@ class LoweredPlan:
     # program carries snapshot/restore MemOps and the mm(fault_tolerant)
     # annotation, and the engine runs quarantine + replay-exact recovery
     fault_tolerant: bool = False
+    # True when the program is instrumented: it carries the mm(traced)
+    # annotation and a trace_emit op, and the engine records host-side
+    # request-lifecycle telemetry (runtime.telemetry)
+    traced: bool = False
     # ModelFamily capability flags carried by the decode cache's data attr
     # (models.api.FamilySpec -> core.plans -> printer caps(...) rendering)
     capabilities: Tuple[str, ...] = ()
@@ -201,12 +205,14 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
     spec_decode = None
     scheduling = None
     fault_tolerant = False
+    traced = False
     for attr in ir.find_all(prog, ir.DataAttr):
         if attr.symbol == "cache":
             capabilities = tuple(k for k in CAP_EXT_KEYS
                                  if ir.ext_get(attr.extensions, k) is True)
             fault_tolerant = bool(
                 ir.ext_get(attr.extensions, "fault_tolerant", False))
+            traced = bool(ir.ext_get(attr.extensions, "traced", False))
             k = ir.ext_get(attr.extensions, "spec_verify")
             if k is not None:
                 spec_decode = (str(ir.ext_get(attr.extensions, "draft", "")),
@@ -258,7 +264,7 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         grad_reduce=grad_reduce, zero=zero, compression=compression,
         collectives=syncs, page_geometry=page_geometry,
         prefix_sharing=prefix_sharing, fault_tolerant=fault_tolerant,
-        capabilities=capabilities, spec_decode=spec_decode,
+        traced=traced, capabilities=capabilities, spec_decode=spec_decode,
         scheduling=scheduling)
 
 

@@ -177,6 +177,7 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   spec_decode: Optional[Tuple[str, int]] = None,
                   scheduling: Optional[Dict[str, Any]] = None,
                   fault_tolerant: bool = False,
+                  traced: bool = False,
                   verify: bool = False
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
@@ -221,6 +222,13 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     of the memory-management contract, so an FT-enabled engine fingerprints
     (and plan-caches) apart from a plain one of the same geometry.
 
+    ``traced=True`` (decode only) marks the program as instrumented: the
+    cache's data attribute gains ``mm(traced)`` and the program carries a
+    ``upir.trace_emit`` op — the host-side request-lifecycle telemetry a
+    traced engine records (``runtime.telemetry``) is a declared program
+    capability, so a telemetry-enabled engine fingerprints (and
+    plan-caches) apart from an identical engine with telemetry off.
+
     ``verify=True`` runs the static verifier (``repro.analysis``) on the
     built program and raises :class:`~repro.analysis.VerificationError` if
     any error-severity diagnostic fires — a one-time plan-build cost with
@@ -232,6 +240,7 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     act, resident = _bytes_estimates(cfg, shape, multi_pod, mb)
     paged = page_geometry is not None and shape.kind == "decode"
     ft = bool(fault_tolerant) and shape.kind == "decode"
+    tr = bool(traced) and shape.kind == "decode"
     spec = spec_decode if (spec_decode is not None
                            and shape.kind == "decode") else None
     sched: Dict[str, Any] = {}
@@ -315,6 +324,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                 mm["shared_prefix"] = True
             if ft:
                 mm["fault_tolerant"] = True
+            if tr:
+                mm["traced"] = True
             b.data("cache", mapping="tofrom", access="read-write",
                    allocator="paged_kv_alloc", **mm, **caps)
             if sched:
@@ -351,11 +362,20 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                 b.snapshot("cache/v_pages", allocator="paged_kv_alloc")
                 b.restore("cache/k_pages", allocator="paged_kv_alloc")
                 b.restore("cache/v_pages", allocator="paged_kv_alloc")
+            if tr:
+                # telemetry: the engine records host-side lifecycle events
+                # against the cache — an explicit instrumentation point, so
+                # traced engines fingerprint apart (contract SC007/SC008)
+                b.trace_emit("cache")
             # sequences release their pages on completion/eviction
             b.dealloc("cache/k_pages", allocator="paged_kv_alloc")
             b.dealloc("cache/v_pages", allocator="paged_kv_alloc")
         elif shape.kind == "decode":
-            dense_mm = {"fault_tolerant": True} if ft else {}
+            dense_mm: Dict[str, Any] = {}
+            if ft:
+                dense_mm["fault_tolerant"] = True
+            if tr:
+                dense_mm["traced"] = True
             b.data("cache", mapping="tofrom", access="read-write",
                    **dense_mm, **caps)
             if sched:
@@ -363,6 +383,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
             if ft:
                 b.snapshot("cache")
                 b.restore("cache")
+            if tr:
+                b.trace_emit("cache")
             if caps.get("needs_encoder_memory"):
                 # the per-slot encoder-memory buffer is an explicit decode
                 # input: filled once at admission, read-only every step

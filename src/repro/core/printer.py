@@ -174,8 +174,12 @@ class _Printer:
                 f"data({self._refs([node.symbol])})")
         elif isinstance(node, ir.MemOp):
             mm = _mm_fields(node.extensions)
+            # trace_emit is an instrumentation point, not a memory-state
+            # transition — it renders under its own op name
+            op = ("upir.trace_emit" if node.kind == "trace_emit"
+                  else f"upir.memory_{node.kind}")
             self.lines.append(
-                f"{pad}upir.memory_{node.kind} allocator({node.allocator}) "
+                f"{pad}{op} allocator({node.allocator}) "
                 + (mm + " " if mm else "")
                 + f"data({self._refs([node.symbol])})")
         elif isinstance(node, ir.KernelOp):

@@ -2,7 +2,8 @@
 
 ``PYTHONPATH=src python -m repro.launch.lint --all-configs`` builds the UPIR
 program for every registered architecture in every engine mode (dense /
-paged / chunked / spec / prefix / ft / sched, capability-gated) plus every
+paged / chunked / spec / prefix / ft / sched / traced, capability-gated)
+plus every
 registered (arch x shape) dry-run cell, runs the full verifier
 (``repro.analysis``) on both the built and the pass-optimized program, and
 exits non-zero if any error-severity diagnostic fires. This is the CI gate:
@@ -37,6 +38,7 @@ def _modes(cfg, spec) -> Dict[str, Dict[str, Any]]:
     modes: Dict[str, Dict[str, Any]] = {
         "dense": {},
         "sched": {"scheduling": {"policy": "priority", "preempt": True}},
+        "traced": {"traced": True},
     }
     if pageable:
         modes["paged"] = {"page_geometry": _GEOM}

@@ -37,6 +37,17 @@ pile-up); ``--watchdog-ms`` arms the per-iteration wall-clock watchdog;
 ``--fault-seed``/``--fault-count`` inject a seed-deterministic random
 ``FaultPlan`` to demonstrate quarantine + replay-exact recovery end to end.
 
+Observability (``runtime.telemetry``): ``--telemetry`` turns on the engine's
+lifecycle event ring + latency histograms and prints a TTFT/ITL percentile
+summary; ``--trace-out FILE`` writes the run as a Chrome-trace JSON (open in
+Perfetto / chrome://tracing — one track per decode slot plus queue /
+allocator / scheduler tracks); ``--metrics-out FILE`` writes the counters and
+histograms in Prometheus text exposition format. Both imply ``--telemetry``.
+``--verbose`` prints one completion line per request (rid, tenant, class,
+TTFT, ITL p50, tokens, outcome). Greedy token streams are bitwise identical
+with telemetry on or off; the traced engine's UPIR program fingerprints
+apart (``mm(traced)`` + ``upir.trace_emit``).
+
 ``--sequential`` also runs the old one-request-at-a-time path for comparison.
 On the CPU container use --smoke.
 """
@@ -117,7 +128,22 @@ def main():
                     help="faults in the random FaultPlan (--fault-seed)")
     ap.add_argument("--sequential", action="store_true",
                     help="also time the pre-engine one-at-a-time path")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record lifecycle events + TTFT/ITL histograms "
+                         "(runtime.telemetry) and print a percentile "
+                         "summary; the traced plan fingerprints apart")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the run as Chrome-trace JSON (Perfetto / "
+                         "chrome://tracing); implies --telemetry")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write counters + histograms in Prometheus text "
+                         "format; implies --telemetry")
+    ap.add_argument("--verbose", action="store_true",
+                    help="one completion line per request (rid, tenant, "
+                         "class, TTFT, ITL p50, tokens, outcome)")
     args = ap.parse_args()
+    args.telemetry = args.telemetry or bool(args.trace_out) \
+        or bool(args.metrics_out)
 
     import dataclasses
 
@@ -209,7 +235,8 @@ def main():
                                       watchdog_ms=args.watchdog_ms or None,
                                       max_queue=args.max_queue or None,
                                       debug_checks=args.debug_checks,
-                                      enforce_deadlines=args.enforce_deadlines),
+                                      enforce_deadlines=args.enforce_deadlines,
+                                      telemetry=args.telemetry),
                     params=params, draft_params=draft_params)
 
     rng = np.random.default_rng(0)
@@ -284,6 +311,43 @@ def main():
     done = [r for r in requests if r.state == "done"]
     if done:
         print("  sample:", engine.finalize_request(done[0])[:16])
+
+    if args.telemetry:
+        tel = st["telemetry"]
+        t, i = tel["ttft_ms"], tel["itl_ms"]
+        print(f"  telemetry: events={tel['events']} "
+              f"(dropped={tel['events_dropped']}) "
+              f"ttft_ms p50={t.get('p50', 0):.1f} p95={t.get('p95', 0):.1f} "
+              f"p99={t.get('p99', 0):.1f} "
+              f"itl_ms p50={i.get('p50', 0):.1f} p95={i.get('p95', 0):.1f}")
+        for c, h in sorted(tel["ttft_by_class_ms"].items()):
+            print(f"    class {c}: ttft_ms p50={h.get('p50', 0):.1f} "
+                  f"p95={h.get('p95', 0):.1f} n={h['count']}")
+    if args.verbose:
+        import statistics
+        for r in requests:
+            n = len(engine.finalize_request(r)) if r.state == "done" \
+                else len(r.tokens_out)
+            ttft = (r.t_first - r.t_submit) * 1e3 \
+                if r.t_first and r.t_submit else float("nan")
+            if r._itl_ms:
+                itl = statistics.median(r._itl_ms)
+            elif r.t_done and r.t_first and n > 1:
+                itl = (r.t_done - r.t_first) * 1e3 / (n - 1)
+            else:
+                itl = float("nan")
+            outcome = r.state if not r.reason else f"{r.state}({r.reason})"
+            print(f"  rid={r.rid} tenant={r.tenant} class={r.priority_class} "
+                  f"ttft_ms={ttft:.1f} itl_p50_ms={itl:.1f} tokens={n} "
+                  f"outcome={outcome}")
+    if args.trace_out:
+        engine.telemetry.write_chrome_trace(args.trace_out)
+        print(f"  chrome trace -> {args.trace_out} (open in Perfetto or "
+              f"chrome://tracing)")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.telemetry.to_prometheus_text())
+        print(f"  prometheus metrics -> {args.metrics_out}")
 
     if args.sequential:
         seq = serve_sequential(cfg, params, requests, max_seq=max_seq,

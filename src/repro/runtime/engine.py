@@ -121,13 +121,14 @@ from ..models import api
 from ..models.api import KernelSpec
 from ..models.layers import cache_copy_pages, cache_write_pages
 from .faults import (EngineSnapshot, FailureInfo, FaultPlan, FaultSpec,
-                     InjectedFault)
+                     InjectedFault, note_failure, note_quarantine, note_retry)
 from .sampling import (GREEDY, SamplingParams, decode_select, poison_and_guard,
                        request_key, sample_tokens)
 from .scheduling import (FIFO, SchedulerState, SchedulingPolicy,
-                         backoff_eligible, select_index,
+                         backoff_eligible, note_preemption, select_index,
                          victim as policy_victim, wants_preemption)
 from .speculative import SpecConfig, SpeculativeDecoder
+from .telemetry import Telemetry
 
 # ----------------------------------------------------------------- requests
 
@@ -258,6 +259,10 @@ class Request:
     # backoff — 2**(retries-1) ticks per quarantine)
     _retries: int = 0
     _not_before: int = 0
+    # telemetry-enabled engines only: per-token host dispatch intervals
+    # (ms) observed while this request was active — bounded by
+    # max_new_tokens, same order as tokens_out itself
+    _itl_ms: List[float] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,6 +347,15 @@ class EngineConfig:
       ``deadline_ms`` TTFT deadline has already passed (typed
       ``SHED_DEADLINE``); off by default — ``deadline_ms`` stays
       observational then, exactly as before.
+    * ``telemetry`` *[plan key]* — request-lifecycle tracing + latency
+      histograms (``runtime.telemetry``): lifecycle events into a bounded
+      ring, TTFT/ITL/queue-delay/step histograms, Chrome-trace export.
+      Host-side only — no new device syncs, token streams stay bitwise
+      identical — but the instrumented program fingerprints apart
+      (``mm(traced)`` + ``upir.trace_emit``), so traced and untraced
+      engines never share a plan.
+    * ``telemetry_events`` — event-ring capacity (steady-state telemetry
+      memory is O(this); overflow drops the oldest events and counts them).
     """
 
     slots: int = 4                     # fixed decode batch width
@@ -375,6 +389,9 @@ class EngineConfig:
     debug_checks: bool = False         # per-tick invariant checks
     verify_ir: bool = False            # static-verify the program at plan build
     enforce_deadlines: bool = False    # shed past-deadline queued requests
+    # ---- observability (runtime.telemetry)
+    telemetry: bool = False            # lifecycle tracing + latency histograms
+    telemetry_events: int = 65536      # event-ring capacity (bounded memory)
 
 
 # --------------------------------------------------------- free-list allocator
@@ -663,6 +680,10 @@ class EngineStats:
     failed: Optional[int] = None             # retries exhausted (terminal)
     watchdog_trips: Optional[int] = None
     failures: Optional[List[FailureInfo]] = None
+    # ---- telemetry section (EngineConfig.telemetry) — lifecycle event
+    # counts plus p50/p95/p99 latency-histogram summaries, per-class TTFT
+    # included (see runtime.telemetry.Telemetry.section)
+    telemetry: Optional[Dict[str, Any]] = None
 
     # ---- mapping view (backward compatibility with the former dict)
     def keys(self) -> List[str]:
@@ -795,6 +816,16 @@ class Engine:
             else default_plan_cache()
         self.trace = trace if trace is not None else []
 
+        # telemetry (runtime.telemetry): host-side lifecycle events +
+        # latency histograms, created before the plan so the traced
+        # annotation and the recording machinery can never disagree
+        if ecfg.telemetry_events < 1:
+            raise ValueError(f"telemetry_events must be >= 1, "
+                             f"got {ecfg.telemetry_events}")
+        self.telemetry = Telemetry(
+            slots=ecfg.slots, max_events=ecfg.telemetry_events) \
+            if ecfg.telemetry else None
+
         self.pages_per_slot = -(-(ecfg.max_seq + self._slack)
                                 // ecfg.page_size)
         self.num_pages = (ecfg.num_pages or ecfg.slots * self.pages_per_slot) \
@@ -818,8 +849,12 @@ class Engine:
                                         prefix_sharing=self.prefix_cache,
                                         scheduling=self.policy.ext(),
                                         fault_tolerant=self.ft,
+                                        traced=self.telemetry is not None,
                                         verify=ecfg.verify_ir
                                         or ecfg.debug_checks)
+        # the program's traced annotation and the engine's telemetry config
+        # must agree (the static contract SC007/SC008 checks the same pairing)
+        assert self.plan.traced == (self.telemetry is not None)
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
@@ -1203,12 +1238,18 @@ class Engine:
         self.queue.append(req)
         self.trace.append({"event": "submit", "rid": req.rid,
                            "bucket": bucket, "queue_depth": len(self.queue)})
+        if self.telemetry is not None:
+            self.telemetry.event("submitted", rid=req.rid, bucket=bucket,
+                                 tenant=req.tenant,
+                                 priority_class=req.priority_class)
         return True
 
     def _reject(self, req: Request, reason: str) -> bool:
         req.state, req.reason = "rejected", reason
         self.rejected += 1
         self.trace.append({"event": "reject", "rid": req.rid, "reason": reason})
+        if self.telemetry is not None:
+            self.telemetry.event("rejected", rid=req.rid, reason=reason)
         return False
 
     # ------------------------------------------------------------ serving
@@ -1245,6 +1286,14 @@ class Engine:
         self._policy_dev = None
         self.trace.append({"event": "admit", "rid": req.rid, "slot": i,
                            "recycled": recycled})
+        if self.telemetry is not None:
+            self.telemetry.event("admitted", rid=req.rid, slot=i)
+            if recycled:
+                self.telemetry.event("recycled", rid=req.rid, slot=i)
+            if req.t_submit is not None:
+                self.telemetry.observe(
+                    "queue_delay_ms",
+                    (time.perf_counter() - req.t_submit) * 1e3)
 
     def _activate(self, req: Request, i: int, nxt0) -> None:
         """Prefill finished: first token is in hand, slot joins the decode
@@ -1272,6 +1321,7 @@ class Engine:
             # blocking inside a step stays visible)
             jax.block_until_ready(nxt0)
             req.t_first = time.perf_counter()
+            self._note_first_token(req)
         self._activated.append(req)
         if req._remaining <= 0:
             req.slot = i
@@ -1280,7 +1330,18 @@ class Engine:
             self.slots_req[i] = req
             if self._spec is not None:
                 # the draft needs its own prompt KV before it can propose
-                self._spec.prefill_slot(self._padded_prompt(req), i)
+                self._spec.prefill_slot(self._padded_prompt(req), i,
+                                        rid=req.rid)
+
+    def _note_first_token(self, req: Request) -> None:
+        """Telemetry at the TTFT stamp site (both the per-request sync
+        branch and the batch stamp at step end route here)."""
+        if self.telemetry is None:
+            return
+        self.telemetry.event("first_token", rid=req.rid, slot=req.slot)
+        if req.t_submit is not None and req.t_first is not None:
+            self.telemetry.observe_ttft(
+                (req.t_first - req.t_submit) * 1e3, req.priority_class)
 
     def _next_index(self) -> Optional[int]:
         """The admission policy's pick from the queue (None = empty, or —
@@ -1351,6 +1412,9 @@ class Engine:
         running = [r for r in self.slots_req if r is not None]
         if not wants_preemption(self.policy, cand, running):
             return False
+        # before the eviction: running still holds the victim, so the event
+        # can name both sides of the scheduler's decision
+        note_preemption(self.telemetry, self.policy, cand, running)
         if self._evict_victim():
             self.preemptions += 1
             return True
@@ -1400,6 +1464,10 @@ class Engine:
                 if hit_tokens:
                     self.prefix_hits += 1
                     self.prefix_hit_tokens += hit_tokens
+                    if self.telemetry is not None:
+                        self.telemetry.event("prefix_hit", rid=req.rid,
+                                             slot=i, pages=len(hits),
+                                             tokens=hit_tokens)
                 else:
                     self.prefix_misses += 1
             try:
@@ -1553,12 +1621,19 @@ class Engine:
             # masked (kpos < offset) anyway, so streams are unchanged.
             width = self._gather_bucket(off // self.ecfg.page_size)
             row = self.page_table_np[i][:width]
+            t_c = time.perf_counter() if self.telemetry is not None else None
             nxt, logits, self.pool = self._chunk_prefill(
                 self.params, self.pool, jnp.asarray(row),
                 jnp.asarray(toks)[None, :], jnp.int32(off),
                 jnp.asarray(ids, jnp.int32), jnp.asarray(req._key),
                 jnp.float32(s.temperature), jnp.int32(s.top_k),
                 jnp.float32(s.top_p))
+            if self.telemetry is not None:
+                # host dispatch time of the chunk (no added sync)
+                self.telemetry.event("prefill_chunk", rid=req.rid, slot=i,
+                                     chunk=req._chunk_cursor)
+                self.telemetry.observe(
+                    "prefill_chunk_ms", (time.perf_counter() - t_c) * 1e3)
             req._chunk_cursor += 1
             self.prefill_chunks += 1
             if off + chunk >= req.bucket:
@@ -1667,6 +1742,8 @@ class Engine:
                 row[j] = page
                 self.page_table_np[i, j] = page
                 self.cow_copies += 1
+                if self.telemetry is not None:
+                    self.telemetry.event("cow", rid=req.rid, slot=i)
 
     def _evict_victim(self) -> bool:
         """Evict one running request (recompute-on-readmit). The victim is
@@ -1704,6 +1781,8 @@ class Engine:
         self.queue.appendleft(req)
         self.evictions += 1
         self.trace.append({"event": "evict", "rid": req.rid, "slot": i})
+        if self.telemetry is not None:
+            self.telemetry.event("evicted", rid=req.rid, slot=i)
         return True
 
     def _release_pages(self, req: Request) -> None:
@@ -1778,6 +1857,9 @@ class Engine:
             self._policy_dev = None
         self.trace.append({"event": "finish", "rid": req.rid,
                            "slot": req.slot, "reason": reason})
+        if self.telemetry is not None:
+            self.telemetry.event("finished", rid=req.rid, slot=req.slot,
+                                 reason=reason)
 
     def _eos_poll(self) -> None:
         """Learn about device-side EOS completions. The finished mask is
@@ -1922,6 +2004,7 @@ class Engine:
         self.trace.append({"event": "quarantine", "rid": req.rid,
                            "kind": kind, "slot": i,
                            "retries": req._retries})
+        note_quarantine(self.telemetry, req.rid, i, kind)
         if req._retries > self.ecfg.max_retries:
             self._fail(req, kind, detail)
             return
@@ -1929,7 +2012,9 @@ class Engine:
         # exponential backoff in admission order: the replay waits
         # 2**(retries-1) ticks before it is eligible again, so a
         # persistently-faulting request cannot monopolize admission
-        req._not_before = self._tick + (1 << (req._retries - 1))
+        backoff = 1 << (req._retries - 1)
+        req._not_before = self._tick + backoff
+        note_retry(self.telemetry, req.rid, req._retries, backoff)
         self.queue.appendleft(req)
 
     def _fail(self, req: Request, kind: str, detail: str = "") -> None:
@@ -1943,6 +2028,7 @@ class Engine:
         self.failures.append(info)
         self.trace.append({"event": "fail", "rid": req.rid, "kind": kind,
                            "retries": info.retries})
+        note_failure(self.telemetry, info)
 
     def _decode_fault(self, e: Exception) -> None:
         """A decode/verify boundary raised: no tokens were committed this
@@ -2026,6 +2112,9 @@ class Engine:
                 by[1] += 1
                 self.trace.append({"event": "shed", "rid": r.rid,
                                    "deadline_ms": r.deadline_ms})
+                if self.telemetry is not None:
+                    self.telemetry.event("shed", rid=r.rid,
+                                         deadline_ms=r.deadline_ms)
             else:
                 kept.append(r)
         if len(kept) != len(self.queue):
@@ -2070,8 +2159,10 @@ class Engine:
         (``debug_checks``), fire armed faults from the ``FaultPlan``, poll
         the device-side finite guard on the EOS cadence, and time the whole
         iteration against the wall-clock watchdog."""
-        t_step = time.perf_counter() if self.ecfg.watchdog_ms else None
+        t_step = time.perf_counter() \
+            if (self.ecfg.watchdog_ms or self.telemetry is not None) else None
         self._activated = []
+        self._step_emitted = 0     # decode tokens dispatched this iteration
         if self.degraded:
             self._maybe_exit_degraded()
         if self.ecfg.enforce_deadlines:
@@ -2150,6 +2241,7 @@ class Engine:
                                  else -1 for i in range(self.ecfg.slots))
                     self._toklog.append((nxt, rids))
                     self.decode_steps += 1
+                    self._step_emitted = len(active)
                     self._occupancy_sum += len(active)
                     for i in active:
                         self.pos[i] += 1
@@ -2169,14 +2261,32 @@ class Engine:
             now = time.perf_counter()
             for r in self._activated:
                 r.t_first = now
+                self._note_first_token(r)
         self.peak_concurrent = max(self.peak_concurrent, len(active))
         if self.paged:
             self.peak_pages = max(self.peak_pages, self.allocator.in_use)
         self._tick += 1
         if t_step is not None:
             dt_ms = (time.perf_counter() - t_step) * 1e3
-            if dt_ms > self.ecfg.watchdog_ms:
+            if self.ecfg.watchdog_ms and dt_ms > self.ecfg.watchdog_ms:
                 self._watchdog_trip(dt_ms)
+            if self.telemetry is not None:
+                self.telemetry.gauge("queue_depth", len(self.queue))
+                self.telemetry.gauge("active_slots", len(active))
+                if self.paged:
+                    self.telemetry.gauge("pages_in_use",
+                                         self.allocator.in_use)
+                if self._step_emitted:
+                    # one histogram sample per decode iteration; the
+                    # per-token interval divides the wall time by the
+                    # tokens each slot emitted (1 plain, 1..k+1 spec)
+                    self.telemetry.observe("step_ms", dt_ms)
+                    itl = dt_ms * len(active) / self._step_emitted
+                    self.telemetry.observe("itl_ms", itl)
+                    for i in active:
+                        req = self.slots_req[i]
+                        if req is not None:   # finished slots drop theirs
+                            req._itl_ms.append(itl)
         return len(active)
 
     def _spec_step(self, active) -> None:
@@ -2214,6 +2324,7 @@ class Engine:
                 toks = toks[:toks.index(req.eos_id) + 1]
             self.draft_proposed += self._slack
             self.draft_accepted += min(int(n_np[i]), len(toks))
+            self._step_emitted += len(toks)
             self._pending_tokens.setdefault(req.rid, []).extend(toks)
             self.pos[i] += len(toks)
             toks_np[i, 0] = toks[-1]
@@ -2492,6 +2603,12 @@ class Engine:
         self._tick = 0
         self._occupancy_sum = 0
         self.elapsed_s = 0.0
+        # telemetry resets with the rest of the observability state — the
+        # warm → reset → measure pattern must start the measured run with an
+        # empty event ring and zeroed histograms (including the lazily
+        # created per-class TTFT ones), or warmup samples pollute the run
+        if self.telemetry is not None:
+            self.telemetry.reset()
 
     def stats(self) -> EngineStats:
         """Typed counter snapshot (``EngineStats``). The mapping view keeps
@@ -2571,6 +2688,8 @@ class Engine:
             out.failed = self.failed
             out.watchdog_trips = self.watchdog_trips
             out.failures = list(self.failures)
+        if self.telemetry is not None:
+            out.telemetry = self.telemetry.section()
         return out
 
 

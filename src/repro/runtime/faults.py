@@ -162,6 +162,34 @@ class FailureInfo:
     detail: str = ""
 
 
+# ----------------------------------------------------- telemetry emission
+# Recovery events belong to the fault machinery, so their telemetry
+# emission lives here (runtime.telemetry wires the ring buffer; the engine
+# passes its — possibly None — Telemetry handle through). All no-ops when
+# telemetry is off.
+
+
+def note_quarantine(telemetry: Any, rid: int, slot: int, kind: str) -> None:
+    """One slot unwound: poisoned/faulted state discarded, request pulled."""
+    if telemetry is not None:
+        telemetry.event("quarantined", rid=rid, slot=slot, kind=kind)
+
+
+def note_retry(telemetry: Any, rid: int, retries: int,
+               backoff_ticks: int) -> None:
+    """A quarantined request re-queued for replay under backoff."""
+    if telemetry is not None:
+        telemetry.event("retried", rid=rid, retries=retries,
+                        backoff=backoff_ticks)
+
+
+def note_failure(telemetry: Any, info: "FailureInfo") -> None:
+    """Retries exhausted: the request terminated FAILED."""
+    if telemetry is not None:
+        telemetry.event("failed", rid=info.rid, kind=info.kind,
+                        retries=info.retries)
+
+
 @dataclasses.dataclass
 class EngineSnapshot:
     """Host-side copy of an engine's full serving state

@@ -242,3 +242,21 @@ def wants_preemption(policy: SchedulingPolicy, candidate: Any,
     if policy.kind != "priority" or not policy.preempt or not running:
         return False
     return victim(policy, running).priority_class < candidate.priority_class
+
+
+def note_preemption(telemetry: Any, policy: SchedulingPolicy, candidate: Any,
+                    running: Sequence[Any]) -> None:
+    """Record the scheduler's preemption decision as a telemetry event.
+
+    Called by the engine right before it evicts (``running`` still holds the
+    victim, so the event names both sides of the decision). Emission lives
+    here with the decision logic — the event is attributable to the policy,
+    not to the eviction machinery that carries it out. No-op when the engine
+    runs without telemetry."""
+    if telemetry is None:
+        return
+    v = victim(policy, running)
+    telemetry.event("preempted", rid=v.rid,
+                    by=candidate.rid,
+                    victim_class=v.priority_class,
+                    candidate_class=candidate.priority_class)

@@ -33,6 +33,7 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  spec_decode: Optional[Tuple[str, int]] = None,
                  scheduling: Optional[Dict[str, Any]] = None,
                  fault_tolerant: bool = False,
+                 traced: bool = False,
                  verify: bool = False
                  ) -> LoweredPlan:
     """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
@@ -53,7 +54,10 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     fingerprinted, so engines with different policies never share a plan.
     ``fault_tolerant=True`` marks the cache's memory contract as
     fault-tolerant (``mm(fault_tolerant)`` + snapshot/restore MemOps), so
-    FT-enabled engines fingerprint apart too. ``verify=True`` runs the
+    FT-enabled engines fingerprint apart too. ``traced=True`` marks the
+    program as instrumented (``mm(traced)`` + a ``upir.trace_emit`` op),
+    so telemetry-enabled engines fingerprint apart as well. ``verify=True``
+    runs the
     static verifier on the built program before lowering (one-time
     plan-build cost; raises ``repro.analysis.VerificationError`` on any
     error diagnostic).
@@ -66,6 +70,7 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                          spec_decode=spec_decode,
                          scheduling=scheduling,
                          fault_tolerant=fault_tolerant,
+                         traced=traced,
                          verify=verify)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)

@@ -104,6 +104,9 @@ class SpeculativeDecoder:
                 f"the rejection sampler compares distributions over one "
                 f"vocabulary")
         self.paged = engine.paged
+        # the engine's (possibly None) Telemetry handle: draft-side
+        # lifecycle events are emitted from here, where they happen
+        self.telemetry = getattr(engine, "telemetry", None)
 
         # the verify step is a first-class UPIR program: the chunk widens
         # in/tokens to k+1, the kernel is spec_verify, and the draft/target
@@ -142,9 +145,12 @@ class SpeculativeDecoder:
 
     # ------------------------------------------------------------ draft side
 
-    def prefill_slot(self, prompt_row, i: int) -> None:
+    def prefill_slot(self, prompt_row, i: int, rid: int = -1) -> None:
         """Build the draft's KV for slot ``i``'s prompt (one-shot; the draft
         is small, so it never needs chunking even when the target chunks)."""
+        if self.telemetry is not None:
+            self.telemetry.event("draft_prefill", rid=rid, slot=i,
+                                 bucket=len(prompt_row))
         fn = self._draft_prefill_fn(len(prompt_row))
         one = fn(self.params, jnp.asarray(prompt_row)[None, :])
         self.cache = self._insert(self.cache, one, i)

@@ -324,6 +324,21 @@ def test_sc006_shared_prefix_without_share():
     assert "SC006" in codes(analyze(b.build()))
 
 
+def test_sc007_trace_emit_without_traced_annotation():
+    b = _b()
+    b.symbol("cache", (8,), "f32")
+    b.data("cache")
+    b.trace_emit("cache")
+    assert "SC007" in codes(analyze(b.build()))
+
+
+def test_sc008_traced_annotation_without_trace_emit():
+    b = _b()
+    b.symbol("cache", (8,), "f32")
+    b.data("cache", traced=True)
+    assert "SC008" in codes(analyze(b.build()))
+
+
 def test_every_error_code_is_demonstrated_above():
     """Registry completeness: each error code in DIAGNOSTIC_CODES has a
     `test_<code>_*` demonstration in this module."""

@@ -59,6 +59,10 @@ def test_upir_text_examples_cover_the_features_they_claim(examples):
     for needle in ("fault_tolerant", "upir.memory_snapshot",
                    "upir.memory_restore"):
         assert needle in ft, needle
+    traced = rendered["traced-decode"]
+    assert "mm(traced)" in traced and "upir.trace_emit" in traced
+    # instrumentation is observational: no memory-state ops appear
+    assert "upir.memory_" not in traced
     train = rendered["train-step"]
     assert "upir.kernel @train_step" in train
     assert "upir.sync allreduce" in train
@@ -76,7 +80,8 @@ def test_every_fingerprinted_mm_and_cap_key_is_documented():
 
 def test_memop_kinds_documented():
     spec_text = (DOCS / "UPIR_TEXT.md").read_text()
-    for kind in ("alloc", "dealloc", "share", "cow", "snapshot", "restore"):
+    for kind in ("alloc", "dealloc", "share", "cow", "snapshot", "restore",
+                 "trace_emit"):
         assert kind in spec_text
 
 

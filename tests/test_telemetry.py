@@ -1,0 +1,389 @@
+"""Request-lifecycle telemetry (``runtime.telemetry`` + engine integration).
+
+The contracts under test: telemetry-on token streams are bitwise identical
+to telemetry-off streams across dense/paged/chunked/spec/prefix configs
+(zero-sync observability), identical runs produce identical normalized event
+sequences (determinism), ``reset_stats()`` resets the event ring, counters,
+gauges, and every histogram — including lazily-created per-class TTFT ones —
+so reset-then-run matches a fresh engine, the Chrome-trace export is
+schema-valid (monotone timestamps per track, every admitted request gets a
+complete span), and a traced engine's UPIR program fingerprints apart
+(``mm(traced)`` + ``upir.trace_emit``) while passing the full verifier.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import analyze
+from repro.configs import ShapeCfg, smoke_config
+from repro.core.lower import PlanCache
+from repro.core.plans import build_program
+from repro.core.printer import program_fingerprint
+from repro.models import api
+from repro.runtime.engine import Engine, EngineConfig, RequestSpec
+from repro.runtime.faults import (FaultPlan, FaultSpec, note_failure,
+                                  note_quarantine, note_retry)
+from repro.runtime.scheduling import SchedulingPolicy, note_preemption
+from repro.runtime.speculative import SpecConfig
+from repro.runtime.telemetry import (EVENT_NAMES, HISTOGRAM_NAMES, Histogram,
+                                     Telemetry, normalized_events)
+
+CFG = smoke_config("tinyllama-1.1b")
+DRAFT_CFG = dataclasses.replace(CFG, name=CFG.name + "-draft")
+BUCKET = 8
+TOKENS = 6
+MAX_SEQ = BUCKET + TOKENS
+P_MAX_SEQ = 24
+CACHE = PlanCache()     # shared: equal-config engines reuse every artifact
+
+LIVE = ("queued", "prefilling", "active")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def mk_dense(params, **kw):
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ, **kw),
+                  params=params, plan_cache=CACHE)
+
+
+def mk_paged(params, **kw):
+    kw.setdefault("num_pages", 16)
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=P_MAX_SEQ, kv_layout="paged",
+                                    page_size=4, **kw),
+                  params=params, plan_cache=CACHE)
+
+
+def workload(n=4, tokens=TOKENS, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [RequestSpec(prompt=rng.integers(0, CFG.vocab,
+                                            size=BUCKET).tolist(),
+                        max_new_tokens=tokens, **kw) for _ in range(n)]
+
+
+def streams_of(engine, handles):
+    return {h.rid: engine.finalize_request(h)
+            for h in handles if h.state == "done"}
+
+
+def events_no_recycled(engine, renumber=False):
+    """Normalized events minus ``recycled``: physical slot reuse survives
+    ``reset_stats`` (``_slot_used`` is engine state, not stats), so the
+    reset-vs-fresh comparison must not key on it."""
+    return tuple(e for e in normalized_events(engine.telemetry,
+                                              renumber_rids=renumber)
+                 if e[0] != "recycled")
+
+
+# -------------------------------------------------------------- unit pieces
+
+
+def test_histogram_observe_percentile_summary():
+    h = Histogram("x")
+    assert h.summary() == {"count": 0}
+    for v in (0.3, 0.4, 2.0, 40.0, 20000.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 5
+    assert s["mean"] == pytest.approx(sum((0.3, 0.4, 2.0, 40.0, 20000.0)) / 5)
+    assert s["max"] == 20000.0
+    # p50 is a bucket upper bound; the overflow bucket reports the true max
+    assert s["p50"] == 2.5
+    assert s["p99"] == 20000.0
+    h.reset()
+    assert h.summary() == {"count": 0}
+
+
+def test_histogram_percentile_clamps_to_observed_max():
+    h = Histogram("x")
+    h.observe(0.01)
+    assert h.percentile(0.5) == 0.01     # not the 0.1 bucket bound
+
+
+def test_event_ring_is_bounded_and_counts_drops():
+    tel = Telemetry(slots=2, max_events=4)
+    for i in range(10):
+        tel.event("submitted", rid=i)
+    assert len(tel.events) == 4
+    assert tel.events_dropped == 6
+    assert tel.counters["submitted"] == 10   # counters see every event
+    assert [e.rid for e in tel.events] == [6, 7, 8, 9]
+
+
+def test_telemetry_reset_is_uniform_including_lazy_histograms():
+    tel = Telemetry(slots=2, max_events=8)
+    tel.event("submitted", rid=1)
+    tel.count("extra", 3)
+    tel.gauge("queue_depth", 5)
+    tel.observe("step_ms", 1.0)
+    tel.observe_ttft(12.0, priority_class=7)   # lazily creates class 7
+    assert tel.ttft_by_class[7].count == 1
+    tel.reset()
+    assert len(tel.events) == 0 and tel.events_dropped == 0
+    assert tel.counters == {} and tel.gauges == {}
+    assert all(tel.hist[n].count == 0 for n in HISTOGRAM_NAMES)
+    assert tel.ttft_by_class == {}
+
+
+def test_engine_config_validates_telemetry_events(params):
+    with pytest.raises(ValueError, match="telemetry_events"):
+        mk_dense(params, telemetry=True, telemetry_events=0)
+
+
+def test_note_helpers_are_noops_without_telemetry():
+    note_quarantine(None, 1, 0, "nan")
+    note_retry(None, 1, 1, 2)
+    note_failure(None, dataclasses.make_dataclass(
+        "F", ["rid", "kind", "retries"])(1, "nan", 3))
+
+
+def test_note_preemption_names_both_sides():
+    tel = Telemetry(slots=2)
+    Req = dataclasses.make_dataclass(
+        "Req", ["rid", "priority_class", "_admit_seq"])
+    running = [Req(1, 0, 1), Req(2, 0, 2)]
+    cand = Req(3, 5, 0)
+    note_preemption(tel, SchedulingPolicy(kind="priority"), cand, running)
+    (e,) = tel.events
+    assert e.name == "preempted" and e.rid == 2
+    assert dict(e.data) == {"by": 3, "victim_class": 0, "candidate_class": 5}
+    note_preemption(None, SchedulingPolicy(kind="priority"), cand, running)
+
+
+# -------------------------------------------- stream bitwise-identity gates
+
+
+def run_pair(make):
+    """Same workload through telemetry-off and telemetry-on twins."""
+    e_off = make(telemetry=False)
+    h_off = e_off.run(make.workload())
+    e_on = make(telemetry=True)
+    h_on = e_on.run(make.workload())
+    return (e_off, streams_of(e_off, h_off)), (e_on, streams_of(e_on, h_on))
+
+
+@pytest.mark.parametrize("config_kw,workload_kw", [
+    ({}, {}),                                                   # dense
+    ({"kv_layout": "paged"}, {}),                               # paged
+    ({"kv_layout": "paged", "prefill_chunk": 4}, {}),           # chunked
+    ({"kv_layout": "paged", "prefix_cache": True}, {"seed": 1}),  # prefix
+], ids=["dense", "paged", "chunked", "prefix"])
+def test_streams_bitwise_identical_on_vs_off(params, config_kw, workload_kw):
+    def make(**kw):
+        if config_kw.get("kv_layout") == "paged":
+            return mk_paged(params, **{k: v for k, v in config_kw.items()
+                                       if k != "kv_layout"}, **kw)
+        return mk_dense(params, **config_kw, **kw)
+    make.workload = lambda: workload(n=4, **workload_kw)
+    (e_off, s_off), (e_on, s_on) = run_pair(make)
+    assert s_off == s_on
+    assert len(s_on) == 4
+    assert e_off.stats().telemetry is None
+    assert e_on.stats()["telemetry"]["counters"]["finished"] == 4
+
+
+def test_streams_bitwise_identical_speculative(params):
+    def make(**kw):
+        return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                        max_seq=MAX_SEQ,
+                                        spec_decode=SpecConfig(
+                                            draft_config=DRAFT_CFG,
+                                            lookahead_k=3), **kw),
+                      params=params, plan_cache=CACHE, draft_params=params)
+    make.workload = lambda: workload(n=3)
+    (_, s_off), (e_on, s_on) = run_pair(make)
+    assert s_off == s_on
+    c = e_on.telemetry.counters
+    assert c["draft_prefill"] >= 3 and c["finished"] == 3
+
+
+# ------------------------------------------------------------- determinism
+
+
+def test_identical_runs_identical_event_sequences(params):
+    evs = []
+    for _ in range(2):
+        eng = mk_paged(params, telemetry=True, prefill_chunk=4)
+        eng.run(workload(n=5, tokens=8))
+        evs.append(normalized_events(eng.telemetry))
+    assert evs[0] == evs[1]
+    names = {e[0] for e in evs[0]}
+    assert {"submitted", "admitted", "prefill_chunk", "first_token",
+            "finished"} <= names
+    assert names <= set(EVENT_NAMES)
+
+
+def test_reset_then_run_matches_fresh_engine(params):
+    fresh = mk_dense(params, telemetry=True)
+    fresh.run(workload(n=4))
+    fresh_ev = events_no_recycled(fresh, renumber=True)
+    fresh_st = fresh.stats()
+
+    warm = mk_dense(params, telemetry=True)
+    warm.run(workload(n=2, seed=9))      # warmup with different work
+    warm.reset_stats()
+    assert warm.telemetry.section()["events"] == 0
+    warm.run(workload(n=4))
+    assert events_no_recycled(warm, renumber=True) == fresh_ev
+    warm_st = warm.stats()
+    skip = ("elapsed_s", "tokens_per_s", "telemetry", "plan_cache",
+            "recycles")
+    for k in fresh_st.keys():
+        if k in skip:
+            continue
+        assert warm_st[k] == fresh_st[k], k
+    # histogram observation counts match too (values are wall-clock)
+    ws, fs = warm_st["telemetry"], fresh_st["telemetry"]
+    for name in HISTOGRAM_NAMES:
+        assert ws[name]["count"] == fs[name]["count"], name
+
+
+def test_fault_events_quarantine_retry_failed(params):
+    plan = FaultPlan(faults=(FaultSpec(kind="exception", site="prefill",
+                                       rid=1, step=0, times=5),))
+    eng = mk_dense(params, telemetry=True, fault_plan=plan, max_retries=2)
+    handles = eng.run(workload(n=2))
+    assert handles[0].state == "failed"
+    assert handles[1].state == "done"
+    c = eng.telemetry.counters
+    assert c["quarantined"] == 3         # initial + 2 retries
+    assert c["retried"] == 2
+    assert c["failed"] == 1
+    retried = [e for e in eng.telemetry.events if e.name == "retried"]
+    assert [dict(e.data)["backoff"] for e in retried] == [1, 2]
+
+
+def test_shed_and_rejected_events(params):
+    eng = mk_dense(params, telemetry=True, max_queue=2,
+                   enforce_deadlines=True)
+    specs = workload(n=3, deadline_ms=0.0001)
+    handles = [eng.submit(s) for s in specs[:2]]
+    over = eng.submit(specs[2])          # queue bound: typed rejection
+    assert over.state == "rejected"
+    import time as _t
+    _t.sleep(0.005)                      # the TTFT deadline expires
+    eng.run([])
+    c = eng.telemetry.counters
+    assert c["rejected"] == 1
+    assert c.get("shed", 0) >= 1
+    assert any(h.state == "shed" for h in handles)
+
+
+# -------------------------------------------------------------- per-class
+
+
+def test_per_class_ttft_histograms(params):
+    eng = mk_dense(params, telemetry=True)
+    eng.run([*workload(n=2, priority_class=0),
+             *workload(n=3, priority_class=2, seed=1)])
+    sec = eng.stats()["telemetry"]
+    assert set(sec["ttft_by_class_ms"]) == {0, 2}
+    assert sec["ttft_by_class_ms"][0]["count"] == 2
+    assert sec["ttft_by_class_ms"][2]["count"] == 3
+    assert sec["ttft_ms"]["count"] == 5
+
+
+# ------------------------------------------------------------ trace export
+
+
+def chrome_trace_check(trace, expect_rids):
+    """The BENCH_9 schema gate, as a reusable assertion."""
+    evs = trace["traceEvents"]
+    assert evs and all("ph" in e for e in evs)
+    by_tid = {}
+    for e in evs:
+        if e["ph"] in ("X", "i"):
+            by_tid.setdefault(e["tid"], []).append(e["ts"])
+    for tid, tss in by_tid.items():
+        assert tss == sorted(tss), f"non-monotone ts on tid {tid}"
+    spans = [e for e in evs if e["ph"] == "X"]
+    terminal = {"finished", "failed"}
+    for rid in expect_rids:
+        mine = [s for s in spans if s["args"].get("rid") == rid]
+        assert mine, f"rid {rid} has no spans"
+        assert any(s["args"]["outcome"] in terminal for s in mine), \
+            f"rid {rid} never closed: {mine}"
+    names = {e["name"] for e in evs if e["ph"] == "M"}
+    assert {"queue", "allocator", "scheduler"} <= {
+        e["args"]["name"] for e in evs if e["ph"] == "M"
+        and e["name"] == "thread_name"} | names
+
+
+def test_chrome_trace_schema_paged(params, tmp_path):
+    eng = mk_paged(params, telemetry=True, prefill_chunk=4)
+    handles = eng.run(workload(n=5, tokens=8))
+    trace = eng.telemetry.to_chrome_trace()
+    chrome_trace_check(trace, [h.rid for h in handles])
+    path = tmp_path / "trace.json"
+    eng.telemetry.write_chrome_trace(str(path))
+    import json
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_chrome_trace_eviction_reopens_queue_span(params):
+    tel = Telemetry(slots=2)
+    tel.event("submitted", rid=1)
+    tel.event("admitted", rid=1, slot=0)
+    tel.event("first_token", rid=1, slot=0)
+    tel.event("evicted", rid=1, slot=0)
+    tel.event("admitted", rid=1, slot=1)
+    tel.event("first_token", rid=1, slot=1)
+    tel.event("finished", rid=1, slot=1)
+    spans = [e for e in tel.to_chrome_trace()["traceEvents"]
+             if e["ph"] == "X"]
+    queued = [s for s in spans if s["name"] == "queued"]
+    assert len(queued) == 2              # original wait + post-eviction wait
+    assert [s["args"]["outcome"] for s in queued] == ["admitted", "admitted"]
+    decode = [s for s in spans if s["name"] == "decode"]
+    assert {s["args"]["outcome"] for s in decode} == {"evicted", "finished"}
+
+
+def test_prometheus_text_format():
+    tel = Telemetry(slots=2)
+    tel.event("submitted", rid=1)
+    tel.gauge("queue_depth", 3)
+    tel.observe("step_ms", 1.7)
+    tel.observe_ttft(42.0, priority_class=1)
+    text = tel.to_prometheus_text()
+    assert 'repro_engine_events_total{event="submitted"} 1' in text
+    assert "repro_engine_queue_depth 3" in text
+    assert 'repro_engine_step_ms_bucket{le="2.5"} 1' in text
+    assert 'repro_engine_step_ms_bucket{le="+Inf"} 1' in text
+    assert "repro_engine_step_ms_sum 1.7" in text
+    assert "repro_engine_ttft_class1_ms_count 1" in text
+
+
+# ------------------------------------------------- UPIR program visibility
+
+
+def test_traced_program_fingerprints_apart_and_verifies():
+    shape = ShapeCfg("tel_b2", "decode", MAX_SEQ, 2)
+    plain = build_program(CFG, shape)
+    traced = build_program(CFG, shape, traced=True)
+    assert program_fingerprint(plain) != program_fingerprint(traced)
+    assert not [d for d in analyze(traced) if d.severity == "error"]
+    from repro.core.printer import to_mlir
+    text = to_mlir(traced)
+    assert "traced" in text and "upir.trace_emit" in text
+    assert "upir.trace_emit" not in to_mlir(plain)
+
+
+def test_traced_paged_program_verifies():
+    shape = ShapeCfg("tel_b2", "decode", P_MAX_SEQ, 2)
+    prog = build_program(CFG, shape, page_geometry=(16, 4, 6),
+                        prefix_sharing=True, fault_tolerant=True,
+                        traced=True)
+    assert not [d for d in analyze(prog) if d.severity == "error"]
+
+
+def test_engine_plans_fingerprint_apart_by_telemetry(params):
+    e_on = mk_dense(params, telemetry=True)
+    e_off = mk_dense(params)
+    assert e_on.plan.traced and not e_off.plan.traced
+    assert e_on.plan.fingerprint != e_off.plan.fingerprint
