@@ -123,6 +123,18 @@ the same assertion ``tests/test_telemetry.py::chrome_trace_check`` makes.
 ``--json9`` writes the metrics and ``--trace9`` the trace — CI emits
 ``BENCH_9.json`` and ``TRACE_9.json``.
 
+Section 10 is tiered KV: a repeated prompt alternating with stranger
+prompts over a pool too small to keep the cached prefix resident. The
+untiered prefix engine drops the cold chain under pressure and re-prefills
+the repeat from scratch; the tiered engine spills it to the host pool and
+pages it back in. The CI gates are (a) greedy streams bitwise identical
+across plain-paged / prefix / tiered engines, (b) the tiered engine
+re-prefills **zero** tokens on the repeats (every one is a zero-compute
+full hit) while the untiered engine provably re-prefills, and (c) the
+spill/page-in counters actually moved — the zero is earned by the host
+tier, not by an oversized pool. ``--json10`` writes the metrics — CI
+emits ``BENCH_10.json``.
+
 Prints ``# serve_bench:`` CSV rows like the other benchmark sections.
 """
 from __future__ import annotations
@@ -1434,6 +1446,154 @@ def bench_telemetry(json_path=None, trace_path=None):
             len(trace["traceEvents"])}
 
 
+# ---------------------------------------------------------- tiered KV
+
+T10_ARCH = "tinyllama-1.1b"
+T10_BUCKET = 16              # the repeated prompt fills its bucket exactly
+T10_PAGE = 4
+T10_TOKENS = 8
+T10_SLOTS = 1                # strict alternation: every stranger pressures
+T10_REPEATS = 3              # the repeated prompt appears 3x
+# 8 pages: a stranger in flight needs 6 (4 prompt + 2 decode growth), the
+# cached repeat chain holds 4 — pressure every time a stranger admits
+T10_NUM_PAGES = 8
+T10_HOST_PAGES = 6
+
+
+def bench_tiered(json_path=None):
+    """Tiered KV vs untiered prefix caching under reclaim pressure
+    (section 10).
+
+    Workload: prompt P, then stranger, P, stranger, P — one slot, a pool
+    two pages short of holding a stranger next to P's cached chain. The
+    untiered engine breaks the chain (LRU reclaim drops its head pages),
+    so every repeat re-prefills; the tiered engine spills those pages to
+    the host pool and pages them back in, so every repeat is a
+    zero-compute full hit. Streams must be bitwise identical everywhere —
+    the host tier buys back prefill compute, never changes tokens.
+    """
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.models import api
+    from repro.runtime.engine import Engine, EngineConfig, RequestSpec
+
+    cfg = smoke_config(T10_ARCH)
+    params = api.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(47)
+    repeat = rng.integers(0, cfg.vocab, size=T10_BUCKET).tolist()
+    strangers = [rng.integers(0, cfg.vocab, size=T10_BUCKET).tolist()
+                 for _ in range(T10_REPEATS - 1)]
+    workload = [repeat]
+    for s in strangers:
+        workload += [s, repeat]
+
+    common = dict(slots=T10_SLOTS, prompt_buckets=(T10_BUCKET,),
+                  max_seq=T10_BUCKET + T10_TOKENS, kv_layout="paged",
+                  page_size=T10_PAGE, num_pages=T10_NUM_PAGES,
+                  max_queue=2 * len(workload))
+    engines = {
+        "paged": EngineConfig(**common),
+        "prefix": EngineConfig(prefix_cache=True, **common),
+        "tiered": EngineConfig(prefix_cache=True, tiered_kv=True,
+                               host_pages=T10_HOST_PAGES, **common),
+    }
+    results = {}
+    streams = {}
+    for name, ecfg in engines.items():
+        engine = Engine(cfg, ecfg, params=params)
+        specs = [RequestSpec(prompt=p, max_new_tokens=T10_TOKENS)
+                 for p in workload]
+        # one warm pass compiles prefill/decode/hit paths; the measured
+        # run starts from a *fresh* engine so the spill/page-in story
+        # plays out from a cold cache, deterministically
+        engine.run([RequestSpec(prompt=p, max_new_tokens=T10_TOKENS)
+                    for p in workload])
+        engine = Engine(cfg, ecfg, params=params)
+        reqs = engine.run(specs, sync_per_step=True)
+        st = engine.stats()
+        engine.check_invariants()
+        done = [r for r in reqs if r.state == "done"]
+        ttft = np.asarray([r.t_first - r.t_submit for r in done])
+        streams[name] = [engine.finalize_request(r) for r in reqs]
+        # tokens the repeats re-prefilled: the repeat appears REPEATS
+        # times; its first admission must prefill (cold cache), every
+        # later one covers bucket tokens minus whatever the prefix cache
+        # supplied (strangers are distinct random prompts — they never
+        # hit, so hit tokens are attributable to the repeats)
+        hit_tokens = st.get("prefix_hit_tokens", 0)
+        re_prefill = (T10_REPEATS - 1) * T10_BUCKET - hit_tokens
+        results[name] = {
+            "completed": len(done),
+            "tokens_per_s": st["tokens_per_s"],
+            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "re_prefill_tokens": re_prefill,
+            "prefix_full_hits": st.get("prefix_full_hits", 0),
+            "prefix_hit_tokens": hit_tokens,
+            "prefix_reclaimed": st.get("prefix_reclaimed", 0),
+            "spilled": st.get("spilled", 0),
+            "paged_in": st.get("paged_in", 0),
+            "host_pages_in_use": st.get("host_pages_in_use", 0),
+        }
+    identical = (streams["paged"] == streams["prefix"]
+                 == streams["tiered"])
+
+    print("# serve_bench_tiered: engine,requests,num_pages,host_pages,"
+          "completed,tok_s,ttft_p50_ms,re_prefill_tokens,full_hits,"
+          "hit_tokens,reclaimed,spilled,paged_in")
+    for name, r in results.items():
+        print(f"{name},{len(workload)},{T10_NUM_PAGES},{T10_HOST_PAGES},"
+              f"{r['completed']},{r['tokens_per_s']:.1f},"
+              f"{r['ttft_p50_ms']:.1f},{r['re_prefill_tokens']},"
+              f"{r['prefix_full_hits']},{r['prefix_hit_tokens']},"
+              f"{r['prefix_reclaimed']},{r['spilled']},{r['paged_in']}")
+    print(f"# tiered KV: {results['tiered']['re_prefill_tokens']} repeat "
+          f"tokens re-prefilled tiered vs "
+          f"{results['prefix']['re_prefill_tokens']} untiered "
+          f"({results['tiered']['spilled']} pages spilled, "
+          f"{results['tiered']['paged_in']} paged back in); "
+          f"streams identical: {identical}")
+
+    if json_path:
+        payload = {
+            "bench": "tiered_kv_spill_page_in",
+            "arch": cfg.name,
+            "requests": len(workload),
+            "repeats": T10_REPEATS,
+            "bucket": T10_BUCKET,
+            "page_size": T10_PAGE,
+            "num_pages": T10_NUM_PAGES,
+            "host_pages": T10_HOST_PAGES,
+            "engines": results,
+            "streams_identical": identical,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    if not identical:
+        # CI gate: spill/page-in is movement, never recompute — it may
+        # not move a single token
+        raise SystemExit("serve_bench_tiered: greedy token streams "
+                         "diverged between paged/prefix/tiered engines")
+    if results["tiered"]["re_prefill_tokens"] != 0:
+        # CI gate: a spilled-then-hit prefix re-prefills ZERO tokens
+        raise SystemExit(
+            f"serve_bench_tiered: tiered engine re-prefilled "
+            f"{results['tiered']['re_prefill_tokens']} repeat tokens "
+            f"(want 0: every repeat a full hit off the host tier)")
+    if results["prefix"]["re_prefill_tokens"] <= 0:
+        # the contrast leg must actually pay: otherwise the pool is too
+        # big and the zero above is vacuous
+        raise SystemExit("serve_bench_tiered: untiered engine never "
+                         "re-prefilled — pool not under pressure, the "
+                         "tiered zero is vacuous")
+    if results["tiered"]["spilled"] < 1 or results["tiered"]["paged_in"] < 1:
+        raise SystemExit("serve_bench_tiered: spill/page-in counters "
+                         "never moved — the host tier was not exercised")
+    return results
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -1455,6 +1615,8 @@ def main() -> None:
                     help="write telemetry-overhead metrics to this JSON file")
     ap.add_argument("--trace9", default=None,
                     help="write the section-9 Chrome trace to this JSON file")
+    ap.add_argument("--json10", default=None,
+                    help="write tiered-KV metrics to this JSON file")
     args = ap.parse_args()
     run_bench(fast=not args.full)
     bench_paged(json_path=args.json)
@@ -1465,6 +1627,7 @@ def main() -> None:
     bench_faults(json_path=args.json7)
     bench_lint(json_path=args.json8)
     bench_telemetry(json_path=args.json9, trace_path=args.trace9)
+    bench_tiered(json_path=args.json10)
 
 
 if __name__ == "__main__":

@@ -112,6 +112,29 @@ def traced_decode():
                          traced=True)
 
 
+def tiered_decode():
+    """A memory-tiered paged decode program: ``mm(... tiered(8))`` on the
+    cache data attribute plus the device↔host ``upir.kv_transfer`` spill /
+    page-in pair — what ``EngineConfig(tiered_kv=True, host_pages=8)``
+    builds, fingerprinted so tiered and untiered engines never share a
+    plan."""
+    from repro.core.plans import build_program
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                         page_geometry=(15, 4, 4), prefix_sharing=True,
+                         tiering=8)
+
+
+def disagg_decode():
+    """A disaggregated prefill/decode program: ``mm(... disaggregated)``
+    on the cache data attribute plus the prefill→decode
+    ``upir.kv_transfer`` hand-off — what
+    ``EngineConfig(disaggregated=True)`` builds, fingerprinted so
+    disaggregated and colocated engines never share a plan."""
+    from repro.core.plans import build_program
+    return build_program(_cfg(), _shape("engine_b2", "decode", 14, 2),
+                         page_geometry=(15, 4, 4), disaggregated=True)
+
+
 def train_step():
     """A training program: taskloop microbatching, the grads allreduce,
     state/grads data attributes."""
@@ -128,6 +151,8 @@ PROGRAM_BUILDERS: Dict[str, Callable] = {
     "sched-decode": sched_decode,
     "ft-decode": ft_decode,
     "traced-decode": traced_decode,
+    "tiered-decode": tiered_decode,
+    "disagg-decode": disagg_decode,
     "train-step": train_step,
 }
 

@@ -23,6 +23,15 @@ as an error:
   engine's instrumentation points must be declared in the program that
   fingerprints it apart — tracing without the annotation (or the annotation
   without the op) would let traced and untraced engines share a plan.
+* **SC009 / SC010** ``mm(tiered)``/``mm(disaggregated)`` ⇔ ``kv_transfer``
+  ops: cross-pool page movement (tiered spill/page-in, disaggregated
+  prefill→decode hand-off) must travel with the pool-topology annotation
+  that fingerprints the plan apart — one without the other would let a
+  tiered/disaggregated engine share a plan with a single-pool one.
+* **SC011** in a tiered program, the host→device ``kv_transfer`` (the
+  page-in) must precede the first kernel that reads the paged datum — a
+  hit on a host-resident page must be resident again before the chunk
+  cursor (and therefore the kernel) reaches it.
 """
 from __future__ import annotations
 
@@ -127,6 +136,48 @@ def check_contracts(prog: ir.Program) -> List[Diagnostic]:
                 f"'{sym}' declares mm(traced) but the program carries no "
                 f"trace_emit op — the instrumentation points the "
                 f"annotation fingerprints do not exist"))
+
+    # ---- SC009 / SC010: mm(tiered)/mm(disaggregated) <=> kv_transfer ops
+    tier_syms = [n.symbol for _, n in attrs
+                 if ir.ext_get(n.extensions, "tiered") is not None
+                 or ir.ext_get(n.extensions, "disaggregated")]
+    transfers = [(p, n) for p, n in memops if n.kind == "kv_transfer"]
+    for path, n in transfers:
+        if not any(_covers(n.symbol, s) for s in tier_syms):
+            out.append(emit(
+                "SC009", path,
+                f"kv_transfer of '{n.symbol}' in a program whose cache "
+                f"declares neither mm(tiered) nor mm(disaggregated) — the "
+                f"cross-pool movement would run without fingerprinting the "
+                f"plan apart"))
+    for sym in tier_syms:
+        if not any(_covers(n.symbol, sym) for _, n in transfers):
+            path = next(p for p, n in attrs if n.symbol == sym)
+            out.append(emit(
+                "SC010", path,
+                f"'{sym}' declares a tiered/disaggregated pool topology "
+                f"but the program carries no kv_transfer op — the page "
+                f"movement the annotation fingerprints never happens"))
+
+    # ---- SC011: tiered page-in precedes the first kernel read
+    tiered_syms = [n.symbol for _, n in attrs
+                   if ir.ext_get(n.extensions, "tiered") is not None]
+    if tiered_syms:
+        pagein_idx: Optional[int] = next(
+            (i for i, (_, n) in enumerate(nodes)
+             if isinstance(n, ir.MemOp) and n.kind == "kv_transfer"
+             and ir.ext_get(n.extensions, "src_pool") == "host"), None)
+        for i, (path, n) in enumerate(nodes):
+            if not isinstance(n, ir.KernelOp):
+                continue
+            touches = [a for a in n.args
+                       if any(_covers(a, s) for s in tiered_syms)]
+            if touches and (pagein_idx is None or pagein_idx > i):
+                out.append(emit(
+                    "SC011", path,
+                    f"kernel @{n.fn} reads tiered datum '{touches[0]}' but "
+                    f"no host→device kv_transfer (page-in) precedes it — a "
+                    f"hit on a spilled page would read a non-resident page"))
 
     # ---- SC005: caps(spec_verify) <=> spec_verify kernel <=> draft input
     spec_attr = next((p for p, n in attrs

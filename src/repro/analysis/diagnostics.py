@@ -66,6 +66,9 @@ DIAGNOSTIC_CODES: Dict[str, Tuple[str, str]] = {
                      "snapshot of the same buffer"),
     "LT009": (WARNING, "dangling-snapshot: a snapshot whose buffer has no "
                        "restore target anywhere in the program"),
+    "LT010": (ERROR, "page-in-without-spill: a host→device kv_transfer of a "
+                     "buffer no prior kv_transfer ever spilled to the host "
+                     "tier"),
     # ---- SPMD races & sync discipline
     "RC001": (ERROR, "spmd-shared-write-race: two ops touch the same "
                      "shared datum, at least one writes, with no ordering "
@@ -97,6 +100,15 @@ DIAGNOSTIC_CODES: Dict[str, Tuple[str, str]] = {
                      "declare mm(traced)"),
     "SC008": (ERROR, "traced-annotation-without-trace-emit: mm(traced) "
                      "declared but the program carries no trace_emit op"),
+    "SC009": (ERROR, "kv-transfer-without-tier-annotation: a kv_transfer "
+                     "cross-pool movement op in a program whose cache "
+                     "declares neither mm(tiered) nor mm(disaggregated)"),
+    "SC010": (ERROR, "tier-annotation-without-kv-transfer: mm(tiered) or "
+                     "mm(disaggregated) declared but the program carries "
+                     "no kv_transfer op"),
+    "SC011": (ERROR, "page-in-after-first-read: a tiered program's "
+                     "host→device kv_transfer (page-in) does not precede "
+                     "the first kernel that reads the paged datum"),
 }
 
 

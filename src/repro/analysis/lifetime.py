@@ -17,6 +17,13 @@ pass interprets their program-order sequence abstractly, per symbol:
 * ``restore`` requires a prior ``snapshot`` (LT008); a snapshot whose
   buffer is never restored anywhere is a dangling snapshot (LT009,
   warning — backup-only programs are legal but worth flagging).
+* ``kv_transfer`` (cross-pool page movement) counts as a *use* of its
+  buffer, so transferring a dead or not-yet-allocated page pool is LT001 /
+  LT007 like any other op. Additionally the pass tracks a **host-resident**
+  shadow state per symbol: a transfer with ``dst_pool(host)`` (the tiered
+  spill) marks pages host-resident, and a transfer with ``src_pool(host)``
+  (the page-in) requires that prior spill — paging in from a host tier the
+  program never spilled to is LT010.
 * A buffer still live at program exit is a leak (LT005).
 
 **Managed vs ambient buffers.** Only symbols that appear in at least one
@@ -48,6 +55,7 @@ def check_lifetime(prog: ir.Program) -> List[Diagnostic]:
     shared: set = set()
     snapshots: Dict[str, str] = {}       # symbol -> op_path of snapshot
     restored: set = set()
+    host_resident: set = set()           # symbols spilled to the host tier
 
     def use(path: str, sym: str, what: str) -> None:
         if sym not in managed:
@@ -82,7 +90,8 @@ def check_lifetime(prog: ir.Program) -> List[Diagnostic]:
                                 f"never allocates"))
             state[sym] = _DEAD
         else:
-            use(path, sym, f"memory_{n.kind}")
+            use(path, sym, n.kind if n.kind in ("trace_emit", "kv_transfer")
+                else f"memory_{n.kind}")
             if n.kind == "share":
                 shared.add(sym)
             elif n.kind == "cow":
@@ -98,6 +107,18 @@ def check_lifetime(prog: ir.Program) -> List[Diagnostic]:
                                     f"restore of '{sym}' with no prior "
                                     f"snapshot"))
                 restored.add(sym)
+            elif n.kind == "kv_transfer":
+                # host-residency shadow state: spill (dst=host) before
+                # page-in (src=host) — the device pool itself stays live
+                # throughout; the transfer is movement, not a lifetime edge
+                if ir.ext_get(n.extensions, "dst_pool") == "host":
+                    host_resident.add(sym)
+                if ir.ext_get(n.extensions, "src_pool") == "host" \
+                        and sym not in host_resident:
+                    out.append(emit("LT010", path,
+                                    f"kv_transfer pages '{sym}' in from the "
+                                    f"host tier but no prior kv_transfer "
+                                    f"ever spilled it to host"))
 
     for sym, st in sorted(state.items()):
         if st == _LIVE:

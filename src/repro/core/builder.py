@@ -149,6 +149,23 @@ class PlanBuilder:
                                    extensions=ir.ext(**extensions)))
         return self
 
+    def kv_transfer(self, symbol: str, *, src_pool: str, dst_pool: str,
+                    allocator: str = "default_mem_alloc",
+                    **extensions: Any) -> "PlanBuilder":
+        """Cross-pool page movement of ``symbol``'s KV pages from
+        ``src_pool`` to ``dst_pool`` — pure data movement, never recompute.
+        Rendered as ``upir.kv_transfer src_pool(...) dst_pool(...)``, so
+        the pool topology (tiered device↔host spill/page-in, disaggregated
+        prefill→decode hand-off) fingerprints the plan apart. Pairs with
+        the ``mm(tiered(...))`` / ``mm(disaggregated)`` annotations
+        (serving contracts SC009/SC010)."""
+        self._mems.append(ir.MemOp(kind="kv_transfer", symbol=symbol,
+                                   allocator=allocator,
+                                   extensions=ir.ext(src_pool=str(src_pool),
+                                                     dst_pool=str(dst_pool),
+                                                     **extensions)))
+        return self
+
     # ---------------------------------------------------------------------- loops
 
     def loop(self, induction: str, upper: Any, *, lower: Any = 0, step: Any = 1,

@@ -128,13 +128,19 @@ class MemOp:
     crash-restart resume (``Engine.snapshot()``). ``trace_emit`` marks the
     host-side request-lifecycle instrumentation points of a
     telemetry-enabled engine (``runtime.telemetry``) — the printer renders
-    it as ``upir.trace_emit`` rather than ``upir.memory_trace_emit``. All
+    it as ``upir.trace_emit`` rather than ``upir.memory_trace_emit``.
+    ``kv_transfer`` is the cross-pool page movement op (also rendered under
+    its own name, ``upir.kv_transfer``): its ``src_pool``/``dst_pool``
+    extensions name the tiers the pages move between — device↔host for the
+    tiered-KV spill/page-in path, prefill→decode for the disaggregated
+    hand-off. All
     render into the canonical program text, so an engine that manages
-    memory differently (e.g. prefix sharing, fault tolerance, or tracing
-    on vs off) fingerprints — and plan-caches — differently.
+    memory differently (e.g. prefix sharing, fault tolerance, tracing
+    on vs off, or a tiered/disaggregated pool topology) fingerprints — and
+    plan-caches — differently.
     """
 
-    kind: str      # "alloc" | "dealloc" | "share" | "cow" | "snapshot" | "restore" | "trace_emit"
+    kind: str      # "alloc" | "dealloc" | "share" | "cow" | "snapshot" | "restore" | "trace_emit" | "kv_transfer"
     symbol: str
     allocator: str = "default_mem_alloc"
     extensions: Extensions = ()

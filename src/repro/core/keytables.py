@@ -58,6 +58,13 @@ MM_KEY_TABLE: Tuple[ExtKey, ...] = (
     ExtKey("traced",
            "request-lifecycle instrumentation points (upir.trace_emit) are "
            "part of the program — a telemetry-enabled engine"),
+    ExtKey("tiered",
+           "cold prefix pages spill to a ref-counted host pool of this many "
+           "pages and page back in (upir.kv_transfer) on a later hit",
+           valued=True),
+    ExtKey("disaggregated",
+           "prefill and decode run as separate workers over separate pools; "
+           "finished prefill KV hands off via upir.kv_transfer"),
 )
 
 # ------------------------------------------------------------- caps() keys
@@ -131,9 +138,14 @@ ENGINE_DATA_KEYS = frozenset({
     "cyclic_lowered_as_block",   # normalize: recorded degeneration
 })
 
-# MemOp extensions: allocator geometry riding on alloc/share ops.
+# MemOp extensions: allocator geometry riding on alloc/share ops, plus the
+# src/dst pool names a kv_transfer moves pages between (device|host for
+# tiered spill/page-in, prefill|decode for the disaggregated hand-off).
+# src_pool/dst_pool ARE rendered (the printer prints them on the
+# kv_transfer op itself), so transfer direction participates in the
+# fingerprint even though the keys live outside the mm() table.
 MEMOP_KEYS = frozenset({"page_size", "num_pages", "pages_per_slot",
-                        "shared_prefix"})
+                        "shared_prefix", "src_pool", "dst_pool"})
 
 # SyncOp extensions: overlap/fusion/compression schedule annotations.
 SYNC_KEYS = frozenset({"overlap_candidate", "compression", "schedule",

@@ -92,6 +92,16 @@ class LoweredPlan:
     # annotation and a trace_emit op, and the engine records host-side
     # request-lifecycle telemetry (runtime.telemetry)
     traced: bool = False
+    # Host-pool page capacity when the paged cache is memory-tiered: the
+    # program carries mm(tiered(N)) and device↔host kv_transfer MemOps, and
+    # the engine spills cold refcount-1 prefix pages to a host pool instead
+    # of dropping them. None for single-tier programs.
+    tiering: Optional[int] = None
+    # True when the pool topology is disaggregated prefill/decode: the
+    # program carries mm(disaggregated) and prefill→decode kv_transfer
+    # MemOps, and the engine prefills into a separate pool, handing KV off
+    # at prefill completion
+    disaggregated: bool = False
     # ModelFamily capability flags carried by the decode cache's data attr
     # (models.api.FamilySpec -> core.plans -> printer caps(...) rendering)
     capabilities: Tuple[str, ...] = ()
@@ -206,6 +216,8 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
     scheduling = None
     fault_tolerant = False
     traced = False
+    tiering = None
+    disaggregated = False
     for attr in ir.find_all(prog, ir.DataAttr):
         if attr.symbol == "cache":
             capabilities = tuple(k for k in CAP_EXT_KEYS
@@ -213,6 +225,10 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
             fault_tolerant = bool(
                 ir.ext_get(attr.extensions, "fault_tolerant", False))
             traced = bool(ir.ext_get(attr.extensions, "traced", False))
+            t = ir.ext_get(attr.extensions, "tiered")
+            tiering = int(t) if t is not None else None
+            disaggregated = bool(
+                ir.ext_get(attr.extensions, "disaggregated", False))
             k = ir.ext_get(attr.extensions, "spec_verify")
             if k is not None:
                 spec_decode = (str(ir.ext_get(attr.extensions, "draft", "")),
@@ -264,7 +280,8 @@ def plan_from_program(prog: ir.Program) -> LoweredPlan:
         grad_reduce=grad_reduce, zero=zero, compression=compression,
         collectives=syncs, page_geometry=page_geometry,
         prefix_sharing=prefix_sharing, fault_tolerant=fault_tolerant,
-        traced=traced, capabilities=capabilities, spec_decode=spec_decode,
+        traced=traced, tiering=tiering, disaggregated=disaggregated,
+        capabilities=capabilities, spec_decode=spec_decode,
         scheduling=scheduling)
 
 

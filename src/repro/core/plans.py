@@ -178,6 +178,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                   scheduling: Optional[Dict[str, Any]] = None,
                   fault_tolerant: bool = False,
                   traced: bool = False,
+                  tiering: Optional[int] = None,
+                  disaggregated: bool = False,
                   verify: bool = False
                   ) -> ir.Program:
     """Express the train/serve step of (cfg, shape) as a UPIR program.
@@ -229,6 +231,21 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     capability, so a telemetry-enabled engine fingerprints (and
     plan-caches) apart from an identical engine with telemetry off.
 
+    ``tiering=N`` (paged decode only) marks the pool as memory-tiered: the
+    cache's data attribute gains ``mm(tiered(N))`` — N is the host-pool
+    page capacity — and the program carries the device↔host
+    ``upir.kv_transfer`` ops (spill of cold refcount-1 prefix pages to the
+    host tier, page-in on a later hit). Spill/page-in is pure data
+    movement, never recompute, so a tiered engine's streams stay bitwise
+    identical — but its plan fingerprints apart.
+
+    ``disaggregated=True`` (paged decode only) marks the pool topology as
+    disaggregated prefill/decode: the cache's data attribute gains
+    ``mm(disaggregated)`` and the program carries the prefill→decode
+    ``upir.kv_transfer`` hand-off ops — finished prefill KV moves across
+    pools instead of being produced in place, which fingerprints the plan
+    apart from a unified-pool engine of the same geometry.
+
     ``verify=True`` runs the static verifier (``repro.analysis``) on the
     built program and raises :class:`~repro.analysis.VerificationError` if
     any error-severity diagnostic fires — a one-time plan-build cost with
@@ -241,6 +258,8 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
     paged = page_geometry is not None and shape.kind == "decode"
     ft = bool(fault_tolerant) and shape.kind == "decode"
     tr = bool(traced) and shape.kind == "decode"
+    tier = int(tiering) if (tiering and paged) else 0
+    disagg = bool(disaggregated) and paged
     spec = spec_decode if (spec_decode is not None
                            and shape.kind == "decode") else None
     sched: Dict[str, Any] = {}
@@ -326,6 +345,10 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                 mm["fault_tolerant"] = True
             if tr:
                 mm["traced"] = True
+            if tier:
+                mm["tiered"] = tier
+            if disagg:
+                mm["disaggregated"] = True
             b.data("cache", mapping="tofrom", access="read-write",
                    allocator="paged_kv_alloc", **mm, **caps)
             if sched:
@@ -354,6 +377,28 @@ def build_program(cfg: ArchConfig, shape: ShapeCfg, *, multi_pod: bool = False,
                         shared_prefix=True)
                 b.cow("cache/k_pages", allocator="paged_kv_alloc")
                 b.cow("cache/v_pages", allocator="paged_kv_alloc")
+            if tier:
+                # tiered KV: at refcount-1 reclaim a cold prefix page spills
+                # device→host instead of being dropped; a later hit pages it
+                # back host→device before the chunk cursor reaches it. Both
+                # directions are explicit cross-pool movement ops — pure
+                # movement, never recompute
+                b.kv_transfer("cache/k_pages", allocator="paged_kv_alloc",
+                              src_pool="device", dst_pool="host")
+                b.kv_transfer("cache/v_pages", allocator="paged_kv_alloc",
+                              src_pool="device", dst_pool="host")
+                b.kv_transfer("cache/k_pages", allocator="paged_kv_alloc",
+                              src_pool="host", dst_pool="device")
+                b.kv_transfer("cache/v_pages", allocator="paged_kv_alloc",
+                              src_pool="host", dst_pool="device")
+            if disagg:
+                # disaggregated prefill/decode: finished prefill KV hands
+                # off prefill-pool → decode-pool, one explicit movement op
+                # per pool half
+                b.kv_transfer("cache/k_pages", allocator="paged_kv_alloc",
+                              src_pool="prefill", dst_pool="decode")
+                b.kv_transfer("cache/v_pages", allocator="paged_kv_alloc",
+                              src_pool="prefill", dst_pool="decode")
             if ft:
                 # fault tolerance: the pool (and page tables, carried by the
                 # engine alongside) can round-trip through host buffers for

@@ -174,12 +174,19 @@ class _Printer:
                 f"data({self._refs([node.symbol])})")
         elif isinstance(node, ir.MemOp):
             mm = _mm_fields(node.extensions)
-            # trace_emit is an instrumentation point, not a memory-state
-            # transition — it renders under its own op name
+            # trace_emit (instrumentation point) and kv_transfer (cross-pool
+            # page movement) are not memory-state transitions — they render
+            # under their own op names
             op = ("upir.trace_emit" if node.kind == "trace_emit"
+                  else "upir.kv_transfer" if node.kind == "kv_transfer"
                   else f"upir.memory_{node.kind}")
+            pools = ""
+            if node.kind == "kv_transfer":
+                src = ir.ext_get(node.extensions, "src_pool", "?")
+                dst = ir.ext_get(node.extensions, "dst_pool", "?")
+                pools = f"src_pool({src}) dst_pool({dst}) "
             self.lines.append(
-                f"{pad}{op} allocator({node.allocator}) "
+                f"{pad}{op} allocator({node.allocator}) " + pools
                 + (mm + " " if mm else "")
                 + f"data({self._refs([node.symbol])})")
         elif isinstance(node, ir.KernelOp):

@@ -45,6 +45,9 @@ def _modes(cfg, spec) -> Dict[str, Dict[str, Any]]:
         modes["chunked"] = {"page_geometry": _GEOM,
                            "extra_ext": {"prefill_chunk": _PAGE}}
         modes["prefix"] = {"page_geometry": _GEOM, "prefix_sharing": True}
+        modes["tiered"] = {"page_geometry": _GEOM, "prefix_sharing": True,
+                           "tiering": 8}
+        modes["disagg"] = {"page_geometry": _GEOM, "disaggregated": True}
         modes["ft"] = {"page_geometry": _GEOM, "fault_tolerant": True}
     else:
         modes["ft"] = {"fault_tolerant": True}

@@ -129,6 +129,7 @@ from .scheduling import (FIFO, SchedulerState, SchedulingPolicy,
                          victim as policy_victim, wants_preemption)
 from .speculative import SpecConfig, SpeculativeDecoder
 from .telemetry import Telemetry
+from .tiered import HostPagePool
 
 # ----------------------------------------------------------------- requests
 
@@ -313,6 +314,24 @@ class EngineConfig:
       caching with ref-counted page sharing and copy-on-write (adds
       ``mm(shared_prefix)`` + ``share``/``cow`` MemOps to the program).
       Bitwise-invisible to token streams.
+    * ``tiered_kv`` / ``host_pages`` *[plan key]* — two-tier KV: under pool
+      pressure, cold prefix-cache pages spill to a ref-counted host-memory
+      page pool (``runtime.tiered.HostPagePool``) instead of being dropped,
+      and a later prefix hit pages them back device←host before the chunk
+      cursor reaches them. Pure movement, never recompute — streams stay
+      bitwise identical to the untiered engine, but a spilled-then-hit
+      prefix re-prefills zero tokens. Requires ``prefix_cache``.
+      ``host_pages=0`` sizes the host tier to ``num_pages``. Adds
+      ``mm(tiered(host_pages))`` + spill/page-in ``upir.kv_transfer``
+      MemOps to the program, so tiered engines fingerprint apart.
+    * ``disaggregated`` *[plan key]* — disaggregated prefill/decode:
+      admission splits into a prefill worker (own page pool + allocator)
+      and the decode worker in one process; prefilled KV hands off
+      prefill→decode as an explicit ``upir.kv_transfer`` MemOp on a cache
+      annotated ``mm(disaggregated)``. Streams stay bitwise identical to
+      the aggregated engine. Paged only; incompatible with
+      ``prefix_cache``/``tiered_kv``/``spec_decode`` (the prefill pool
+      holds no shared or draft state).
     * ``spec_decode`` *[plan key]* — draft/verify speculative mode
       (:class:`~repro.runtime.speculative.SpecConfig`); the verify program
       fingerprints the draft/target pairing, and every cache layout carries
@@ -377,6 +396,10 @@ class EngineConfig:
     decode_kernel: str = "xla"         # xla (gather) | pallas (paged-attention kernel)
     interpret: bool = True             # Pallas interpreter mode (CPU containers)
     prefix_cache: bool = False         # paged only: share prompt-prefix pages
+    # ---- tiered KV + disaggregated prefill/decode (runtime.tiered)
+    tiered_kv: bool = False            # spill cold prefix pages to host tier
+    host_pages: int = 0                # host-tier capacity; 0 = num_pages
+    disaggregated: bool = False        # split prefill/decode pools + kv_transfer
     # ---- speculative decoding (draft/verify mode; runtime.speculative)
     spec_decode: Optional[SpecConfig] = None
     # ---- declarative admission scheduling (runtime.scheduling)
@@ -509,10 +532,21 @@ class PrefixIndex:
     plan's canonical fingerprint — to the physical page holding that chunk's
     K/V. Causality makes this sound: the K/V content of page ``j`` is a
     deterministic function of every token up to the end of page ``j``, which
-    is exactly what the chain digests. A page whose chunk is shorter than
-    ``page_size`` (the partially-filled tail of a prompt whose bucket is not
-    page-aligned) digests fewer bytes and so can only be hit by a prompt
-    ending at the same position with the same tokens.
+    is exactly what the chain digests.
+
+    **Cross-bucket hashing** (``keys_for(..., real_len=...)``): chunks made
+    entirely of real prompt tokens digest their full padded bytes, but the
+    *boundary* chunk — the one containing the prompt's last real token, when
+    the prompt is not page-aligned — digests only its real bytes. Two
+    prompts therefore share the boundary key iff they have the same real
+    tokens AND the same real length (different lengths digest different
+    byte counts), regardless of which bucket padded them — so a short
+    prompt's pages seed a longer prompt in a bigger bucket. All-padding
+    chunks past the boundary continue the chain over their padded zero
+    bytes: padding-page K/V at layers > 0 is *prefix-dependent* (attention
+    mixes real-token state into deeper layers), so those pages stay
+    chain-keyed to the exact real prefix — and keeping them in the chain
+    preserves the zero-compute full hit for repeated identical prompts.
 
     The index holds one allocator reference per entry (taken by the engine at
     registration), so cached pages survive their originating request;
@@ -521,6 +555,12 @@ class PrefixIndex:
     carry the prefill's last-position logits, letting a full-prompt hit skip
     the forward pass entirely and still sample its first token bitwise
     exactly.
+
+    **Tiered entries**: on a tiered engine, reclaim *spills* the victim to
+    the host tier instead of dropping it — the entry becomes
+    ``{"host": hid, "logits": ...}`` (payload in ``HostPagePool``) and a
+    later hit pages it back to a device entry. An entry is on exactly one
+    tier at all times; logits (tiny, device-resident) ride along untouched.
     """
 
     def __init__(self, page_size: int, salt: str):
@@ -533,23 +573,38 @@ class PrefixIndex:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def keys_for(self, tokens: np.ndarray) -> List[bytes]:
-        """Chain keys, one per page the padded prompt covers."""
+    def keys_for(self, tokens: np.ndarray,
+                 real_len: Optional[int] = None) -> List[bytes]:
+        """Chain keys, one per page the padded prompt covers.
+
+        ``real_len`` (the unpadded prompt length) makes hashing
+        bucket-independent: the chunk containing position ``real_len``
+        digests only its real bytes, so equal prompts padded into
+        different buckets produce equal chain prefixes (see class doc).
+        """
         toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        if real_len is None:
+            real_len = len(toks)
         digest = hashlib.sha256(self._salt).digest()
         out: List[bytes] = []
         for start in range(0, len(toks), self.page_size):
             chunk = toks[start:start + self.page_size]
+            if start < real_len < start + len(chunk):
+                chunk = chunk[:real_len - start]   # boundary: real bytes only
             digest = hashlib.sha256(digest + chunk.tobytes()).digest()
             out.append(digest)
         return out
 
     def lookup(self, keys: Sequence[bytes]) -> List[int]:
-        """Pages of the longest cached chain prefix (possibly empty)."""
+        """Pages of the longest *device-resident* cached chain prefix
+        (possibly empty). Host-resident entries end the chain — the tiered
+        engine pages them in before calling this, so a remaining host entry
+        means its page-in failed (device pool full) and the chain truncates
+        there, falling back to re-prefill."""
         pages: List[int] = []
         for k in keys:
             e = self._entries.get(k)
-            if e is None:
+            if e is None or "page" not in e:
                 break
             self._entries.move_to_end(k)
             pages.append(e["page"])
@@ -588,13 +643,57 @@ class PrefixIndex:
             e["logits"] = logits
 
     def pop_reclaimable(self, allocator: PagedKVAllocator) -> Optional[int]:
-        """Drop the LRU entry whose page nobody else holds; returns the page
-        (caller frees it) or None when every cached page is still mapped."""
+        """Drop the LRU device entry whose page nobody else holds; returns
+        the page (caller frees it) or None when every cached device page is
+        still mapped. Host-resident entries hold no device page and are
+        never reclaim victims."""
         victim = next((k for k, e in self._entries.items()
-                       if allocator.refcount(e["page"]) == 1), None)
+                       if "page" in e and allocator.refcount(e["page"]) == 1),
+                      None)
         if victim is None:
             return None
         return self._entries.pop(victim)["page"]
+
+    # ------------------------------------------------- tiered (host) entries
+
+    def pop_spillable(self, allocator: PagedKVAllocator
+                      ) -> Optional[Tuple[bytes, Dict[str, Any]]]:
+        """Pop the LRU device entry whose page nobody else maps — the spill
+        victim. Returns ``(key, entry)`` so the caller can move the page
+        bytes to the host tier and re-insert via :meth:`insert_host`, or
+        None when nothing is spillable."""
+        victim = next((k for k, e in self._entries.items()
+                       if "page" in e and allocator.refcount(e["page"]) == 1),
+                      None)
+        if victim is None:
+            return None
+        return victim, self._entries.pop(victim)
+
+    def insert_host(self, key: bytes, hid: int, logits=None) -> None:
+        """Insert a spilled entry as host-resident (payload lives in the
+        HostPagePool under ``hid``; logits stay device-resident)."""
+        e: Dict[str, Any] = {"host": hid}
+        if logits is not None:
+            e["logits"] = logits
+        self._entries[key] = e
+
+    def host_entry(self, key: bytes) -> Optional[int]:
+        """Host page id if this key's entry is host-resident, else None."""
+        e = self._entries.get(key)
+        return None if e is None or "host" not in e else e["host"]
+
+    def commit_page_in(self, key: bytes, page: int) -> None:
+        """Flip a host-resident entry back to a device entry (the page-in
+        upload succeeded; the index now holds the one allocator ref)."""
+        e = self._entries[key]
+        del e["host"]
+        e["page"] = page
+        self._entries.move_to_end(key)
+
+    def host_ids(self) -> List[int]:
+        """All host page ids currently referenced by the index (for
+        invariant checks: each must be live in the HostPagePool)."""
+        return [e["host"] for e in self._entries.values() if "host" in e]
 
 
 # -------------------------------------------------------------------- stats
@@ -663,6 +762,15 @@ class EngineStats:
     cow_copies: Optional[int] = None
     prefix_cached_pages: Optional[int] = None
     shared_pages: Optional[int] = None
+    # ---- tiered-KV section (EngineConfig.tiered_kv)
+    host_pages: Optional[int] = None         # host-tier capacity
+    host_pages_in_use: Optional[int] = None  # live host pages right now
+    spilled: Optional[int] = None            # device -> host page spills
+    paged_in: Optional[int] = None           # host -> device page uploads
+    # ---- disaggregated section (EngineConfig.disaggregated)
+    prefill_pool_pages: Optional[int] = None  # prefill worker pool capacity
+    kv_transfers: Optional[int] = None        # prefill -> decode hand-offs
+    kv_transfer_pages: Optional[int] = None   # pages moved across pools
     # ---- speculative section
     spec_steps: Optional[int] = None
     lookahead_k: Optional[int] = None
@@ -743,6 +851,30 @@ class Engine:
             raise ValueError("prefix_cache requires kv_layout='paged': "
                              "prefix sharing is page aliasing, and the dense "
                              "layout has no pages to alias")
+        # tiered KV + disaggregated prefill/decode (runtime.tiered)
+        self.tiered = bool(ecfg.tiered_kv)
+        self.disagg = bool(ecfg.disaggregated)
+        if ecfg.host_pages < 0:
+            raise ValueError(f"host_pages must be >= 0 (0 = num_pages), "
+                             f"got {ecfg.host_pages}")
+        if self.tiered and not self.prefix_cache:
+            raise ValueError("tiered_kv requires prefix_cache=True: the host "
+                             "tier holds spilled prefix-cache pages, and "
+                             "without the index there is nothing to spill")
+        if self.disagg:
+            if not self.paged:
+                raise ValueError("disaggregated requires kv_layout='paged': "
+                                 "the prefill->decode hand-off is a "
+                                 "page-granular kv_transfer")
+            if self.prefix_cache or self.tiered:
+                raise ValueError("disaggregated is incompatible with "
+                                 "prefix_cache/tiered_kv: the prefill pool "
+                                 "is private per admission and holds no "
+                                 "shared pages to cache or spill")
+            if ecfg.spec_decode is not None:
+                raise ValueError("disaggregated is incompatible with "
+                                 "spec_decode: the draft cache is not split "
+                                 "across prefill/decode pools")
         self.policy = ecfg.scheduling
         if not isinstance(self.policy, SchedulingPolicy):
             raise ValueError(f"scheduling must be a SchedulingPolicy, "
@@ -832,6 +964,9 @@ class Engine:
             if self.paged else 0
         page_geom = (self.num_pages, ecfg.page_size, self.pages_per_slot) \
             if self.paged else None
+        # host-tier capacity: 0 sizes it like the device pool
+        self.host_pages = (ecfg.host_pages or self.num_pages) \
+            if self.tiered else 0
 
         # the decode plan: UPIR program -> pass pipeline -> LoweredPlan,
         # cached by canonical fingerprint (warm engines skip re-lowering);
@@ -850,11 +985,18 @@ class Engine:
                                         scheduling=self.policy.ext(),
                                         fault_tolerant=self.ft,
                                         traced=self.telemetry is not None,
+                                        tiering=self.host_pages
+                                        if self.tiered else None,
+                                        disaggregated=self.disagg,
                                         verify=ecfg.verify_ir
                                         or ecfg.debug_checks)
         # the program's traced annotation and the engine's telemetry config
         # must agree (the static contract SC007/SC008 checks the same pairing)
         assert self.plan.traced == (self.telemetry is not None)
+        # likewise the pool topology: mm(tiered)/mm(disaggregated) and the
+        # kv_transfer machinery must travel together (SC009/SC010)
+        assert (self.plan.tiering is not None) == self.tiered
+        assert self.plan.disaggregated == self.disagg
 
         self.params = params if params is not None \
             else api.init_params(cfg, key if key is not None else jax.random.key(0))
@@ -881,6 +1023,12 @@ class Engine:
                 self._chunk_prefill = self.plan_cache.get_or_build(
                     fkey + ("chunk_prefill", ecfg.prefill_chunk),
                     self._build_chunk_prefill)
+            if self.tiered:
+                self._page_upload = self.plan_cache.get_or_build(
+                    fkey + ("page_upload",), self._build_page_upload)
+            if self.disagg:
+                self._kv_transfer = self.plan_cache.get_or_build(
+                    fkey + ("kv_transfer",), self._build_kv_transfer)
         else:
             self._decode = self.plan_cache.get_or_build(
                 fkey + ("decode",), self._build_decode)
@@ -907,6 +1055,24 @@ class Engine:
                     fkey + ("page_copy",), self._build_page_copy)
                 self._hit_sample = self.plan_cache.get_or_build(
                     fkey + ("hit_sample",), self._build_hit_sample)
+            # tiered KV: the host tier behind the device pool
+            self.host_pool = HostPagePool(self.host_pages) \
+                if self.tiered else None
+            if self.disagg:
+                # prefill worker pool: sized so every concurrent admission's
+                # largest-bucket prefill fits by construction (slots bounds
+                # the number of in-flight prefills)
+                self.prefill_pages = ecfg.slots * self._page_count(
+                    max(ecfg.prompt_buckets))
+                self.prefill_pool = api.init_paged_cache(
+                    cfg, self.prefill_pages, ecfg.page_size)
+                self.prefill_allocator = PagedKVAllocator(self.prefill_pages)
+                # same column count as page_table_np, so chunked prefill's
+                # power-of-two gather widths slice both tables identically
+                self.prefill_table_np = np.zeros(
+                    (ecfg.slots, self.pages_per_slot), np.int32)
+                self._prefill_slot_pages: List[List[int]] = \
+                    [[] for _ in range(ecfg.slots)]
         else:
             self.cache = api.init_cache(cfg, ecfg.slots,
                                         ecfg.max_seq + self._slack)
@@ -1070,6 +1236,27 @@ class Engine:
             return {"k_pages": cache_copy_pages(pool["k_pages"], src, dst),
                     "v_pages": cache_copy_pages(pool["v_pages"], src, dst)}
         return jax.jit(cp, donate_argnums=(0,))
+
+    def _build_page_upload(self):
+        """Tiered page-in: upload one host-resident page's K/V bytes
+        (each ``[L, PS, KV, hd]``) into a device page slot. A pure memcpy —
+        the page-in half of the ``upir.kv_transfer src_pool(host)`` op."""
+        def up(pool, k_page, v_page, page):
+            return {"k_pages": pool["k_pages"].at[:, page].set(k_page),
+                    "v_pages": pool["v_pages"].at[:, page].set(v_page)}
+        return jax.jit(up, donate_argnums=(0,))
+
+    def _build_kv_transfer(self):
+        """Disaggregated hand-off: copy prefilled pages src (prefill pool)
+        -> dst (decode pool), all layers. The runtime half of the
+        ``upir.kv_transfer src_pool(prefill) dst_pool(decode)`` op. Only the
+        decode pool is donated — the prefill pool buffer is reused."""
+        def xfer(dpool, ppool, src, dst):
+            return {"k_pages": dpool["k_pages"].at[:, dst]
+                    .set(ppool["k_pages"][:, src]),
+                    "v_pages": dpool["v_pages"].at[:, dst]
+                    .set(ppool["v_pages"][:, src])}
+        return jax.jit(xfer, donate_argnums=(0,))
 
     def _build_hit_sample(self):
         """First token of a full-prompt prefix hit: sample from the *cached*
@@ -1311,6 +1498,11 @@ class Engine:
             # a recycled slot must not inherit its previous occupant's
             # sticky finite-guard bit
             self.poisoned = self.poisoned.at[i].set(False)
+        # the decode jit counts tokens[i, 0] for every row, so while this
+        # slot sat empty or mid-chunked-prefill the batch deposited phantom
+        # counts into it; zero here — not only at admission — so penalized
+        # replay streams stay bitwise the sequential ones
+        self.counts = self.counts.at[i].set(0)
         self.prefills += 1
         req.state = "active"
         req._first_tok = nxt0
@@ -1368,7 +1560,7 @@ class Engine:
         the cache the admission itself will consult."""
         if req._chain_keys is None:
             req._chain_keys = self.prefix_index.keys_for(
-                self._padded_prompt(req))
+                self._padded_prompt(req), real_len=len(req.prompt))
         return self.prefix_index.peek(req._chain_keys) > 0
 
     def _admit_into_free_slots(self) -> None:
@@ -1492,15 +1684,38 @@ class Engine:
                     # hits land on chunk boundaries (the probe rounds down),
                     # so the tick resumes exactly at the first unshared chunk
                     req._chunk_cursor = hit_tokens // self.ecfg.prefill_chunk
+                    if self.disagg:
+                        # the prefill worker owns its own pages while the
+                        # chunks run; hand-off to the decode pool happens on
+                        # the final chunk (_kv_handoff)
+                        ppages = self.prefill_allocator.alloc(len(pages))
+                        assert ppages is not None, \
+                            "prefill pool is sized to fit every admission"
+                        self._prefill_slot_pages[i] = ppages
+                        self.prefill_table_np[i, :] = 0
+                        self.prefill_table_np[i, :len(ppages)] = ppages
                     self._prefilling[i] = req
                 elif hit_tokens:
                     nxt0 = self._run_suffix_prefill(req, i, hit_tokens)
                     self._activate(req, i, nxt0)
                 else:
                     nxt0, logits, one = self._run_prefill(req, i)
-                    self.pool = self._page_insert(
-                        self.pool, one["k"], one["v"],
-                        jnp.asarray(pages, jnp.int32))
+                    if self.disagg:
+                        # prefill worker: write K/V into the prefill pool,
+                        # then hand the pages to the decode pool as an
+                        # explicit kv_transfer
+                        ppages = self.prefill_allocator.alloc(len(pages))
+                        assert ppages is not None, \
+                            "prefill pool is sized to fit every admission"
+                        self.prefill_pool = self._page_insert(
+                            self.prefill_pool, one["k"], one["v"],
+                            jnp.asarray(ppages, jnp.int32))
+                        self._prefill_slot_pages[i] = ppages
+                        self._kv_handoff(req, i)
+                    else:
+                        self.pool = self._page_insert(
+                            self.pool, one["k"], one["v"],
+                            jnp.asarray(pages, jnp.int32))
                     self._register_prefix(req, i, logits)
                     self._activate(req, i, nxt0)
             except Exception as e:   # noqa: BLE001 — FT quarantine
@@ -1521,10 +1736,17 @@ class Engine:
         cached logits is trimmed by one page so the suffix forward can
         produce the first token; chunked-prefill engines round partial hits
         down to a chunk boundary (the tick's traced chunk length is fixed).
+
+        On a tiered engine, host-resident chain entries are paged back to
+        device pages *here* — before admission takes its references and
+        before any prefill chunk could read them (the SC011 ordering).
         """
         if not self.prefix_cache:
             return None, [], None
-        keys = self.prefix_index.keys_for(self._padded_prompt(req))
+        keys = self.prefix_index.keys_for(self._padded_prompt(req),
+                                          real_len=len(req.prompt))
+        if self.tiered:
+            self._page_in_chain(req, keys)
         pages = self.prefix_index.lookup(keys)
         tail_logits = None
         if len(pages) == len(keys):
@@ -1536,6 +1758,35 @@ class Engine:
             per_chunk = chunk // self.ecfg.page_size
             pages = pages[:(len(pages) // per_chunk) * per_chunk]
         return keys, pages, tail_logits
+
+    def _page_in_chain(self, req: Request, keys: List[bytes]) -> None:
+        """Tiered page-in: upload every host-resident entry on ``req``'s
+        cached chain back into freshly allocated device pages. A pure
+        host→device memcpy of the spilled bytes — the page-in half of the
+        ``upir.kv_transfer src_pool(host)`` op — so a spilled-then-hit
+        prefix re-prefills zero tokens. Allocation here never reclaims
+        (reclaiming could spill not-yet-referenced pages of this very
+        chain); a dry pool truncates the chain at the host entry and the
+        tail falls back to re-prefill."""
+        for k in keys[:self.prefix_index.peek(keys)]:
+            hid = self.prefix_index.host_entry(k)
+            if hid is None:
+                continue       # already device-resident
+            dev = self.allocator.alloc(1)
+            if dev is None:
+                break          # device pool full: chain ends here
+            k_np, v_np = self.host_pool.load(hid)
+            self.pool = self._page_upload(self.pool, jnp.asarray(k_np),
+                                          jnp.asarray(v_np),
+                                          jnp.int32(dev[0]))
+            # the index keeps the single allocator ref, exactly as at
+            # registration; the host copy dies with its last reference
+            self.prefix_index.commit_page_in(k, dev[0])
+            self.host_pool.free([hid])
+            self.paged_in += 1
+            if self.telemetry is not None:
+                self.telemetry.event("paged_in", rid=req.rid, page=dev[0],
+                                     host_in_use=self.host_pool.in_use)
 
     def _register_prefix(self, req: Request, i: int, last_logits) -> None:
         """Publish ``req``'s freshly prefilled prompt pages into the index
@@ -1578,16 +1829,66 @@ class Engine:
     def _reclaim_pages(self, n: int) -> int:
         """Recycle up to ``n`` cached pages nobody maps (refcount 1 — held
         only by the index), LRU-first. Returns the count actually freed;
-        pages still shared with live slots are never touched."""
+        pages still shared with live slots are never touched.
+
+        Untiered engines *drop* the victim (a later hit re-prefills it).
+        Tiered engines *spill* it: the page bytes move device→host into the
+        ``HostPagePool`` and the index entry flips to host-resident, so a
+        later hit pages it back in instead of recomputing — the spill half
+        of the ``upir.kv_transfer dst_pool(host)`` op. A full host tier
+        falls back to dropping, exactly the untiered behavior."""
         freed = 0
         while freed < n:
-            page = self.prefix_index.pop_reclaimable(self.allocator)
-            if page is None:
-                break
+            if self.tiered:
+                popped = self.prefix_index.pop_spillable(self.allocator)
+                if popped is None:
+                    break
+                key, entry = popped
+                page = entry["page"]
+                hid = self.host_pool.alloc(1)
+                if hid is not None:
+                    # exact device->host copy of the page bytes: spill is
+                    # movement, never recompute
+                    k_np = np.asarray(self.pool["k_pages"][:, page])
+                    v_np = np.asarray(self.pool["v_pages"][:, page])
+                    self.host_pool.store(hid[0], k_np, v_np)
+                    self.prefix_index.insert_host(key, hid[0],
+                                                  entry.get("logits"))
+                    self.spilled += 1
+                    if self.telemetry is not None:
+                        self.telemetry.event(
+                            "spilled", page=page,
+                            host_in_use=self.host_pool.in_use)
+                else:
+                    self.prefix_reclaimed += 1   # host tier full: drop
+            else:
+                page = self.prefix_index.pop_reclaimable(self.allocator)
+                if page is None:
+                    break
+                self.prefix_reclaimed += 1
             self.allocator.free([page])
             freed += 1
-            self.prefix_reclaimed += 1
         return freed
+
+    def _kv_handoff(self, req: Request, i: int) -> None:
+        """Disaggregated prefill→decode hand-off: copy slot ``i``'s
+        prefilled pages from the prefill pool into the decode pool's pages
+        (an exact page-granular device copy — the runtime half of the
+        ``upir.kv_transfer src_pool(prefill) dst_pool(decode)`` op), then
+        release the prefill worker's pages."""
+        ppages = self._prefill_slot_pages[i]
+        pages = self._slot_pages[i][:len(ppages)]
+        self.pool = self._kv_transfer(
+            self.pool, self.prefill_pool,
+            jnp.asarray(ppages, jnp.int32), jnp.asarray(pages, jnp.int32))
+        self.prefill_allocator.free(ppages)
+        self._prefill_slot_pages[i] = []
+        self.prefill_table_np[i, :] = 0
+        self.kv_transfers += 1
+        self.kv_transfer_pages += len(ppages)
+        if self.telemetry is not None:
+            self.telemetry.event("kv_transfer", rid=req.rid, slot=i,
+                                 pages=len(ppages))
 
     def _prefill_tick(self) -> None:
         """Advance chunked prefill: every prefilling slot moves one chunk per
@@ -1611,8 +1912,15 @@ class Engine:
                 continue
             off = req._chunk_cursor * chunk
             toks = self._padded_prompt(req)[off:off + chunk]
-            ids = self._slot_pages[i][off // self.ecfg.page_size:
-                                      (off + chunk) // self.ecfg.page_size]
+            # disaggregated: chunks run in the prefill worker's own pool
+            # against its own page table; the decode pool is untouched
+            # until the final chunk's hand-off
+            slot_pages = self._prefill_slot_pages[i] if self.disagg \
+                else self._slot_pages[i]
+            table = self.prefill_table_np if self.disagg \
+                else self.page_table_np
+            ids = slot_pages[off // self.ecfg.page_size:
+                             (off + chunk) // self.ecfg.page_size]
             s = req.sampling or GREEDY
             # chunk-sized context gather: only the pages holding previous
             # chunks' K/V are gathered (bucketed to powers of two to bound
@@ -1620,14 +1928,19 @@ class Engine:
             # cost on every chunk, even at offset 0. Dropped entries were
             # masked (kpos < offset) anyway, so streams are unchanged.
             width = self._gather_bucket(off // self.ecfg.page_size)
-            row = self.page_table_np[i][:width]
+            row = table[i][:width]
             t_c = time.perf_counter() if self.telemetry is not None else None
-            nxt, logits, self.pool = self._chunk_prefill(
-                self.params, self.pool, jnp.asarray(row),
+            pool_in = self.prefill_pool if self.disagg else self.pool
+            nxt, logits, pool_out = self._chunk_prefill(
+                self.params, pool_in, jnp.asarray(row),
                 jnp.asarray(toks)[None, :], jnp.int32(off),
                 jnp.asarray(ids, jnp.int32), jnp.asarray(req._key),
                 jnp.float32(s.temperature), jnp.int32(s.top_k),
                 jnp.float32(s.top_p))
+            if self.disagg:
+                self.prefill_pool = pool_out
+            else:
+                self.pool = pool_out
             if self.telemetry is not None:
                 # host dispatch time of the chunk (no added sync)
                 self.telemetry.event("prefill_chunk", rid=req.rid, slot=i,
@@ -1638,6 +1951,8 @@ class Engine:
             self.prefill_chunks += 1
             if off + chunk >= req.bucket:
                 del self._prefilling[i]
+                if self.disagg:
+                    self._kv_handoff(req, i)
                 self._register_prefix(req, i, logits)
                 self._activate(req, i, nxt)
 
@@ -1977,6 +2292,12 @@ class Engine:
             self.allocator.free(self._slot_pages[i])
             self._slot_pages[i] = []
             self.page_table_np[i, :] = 0
+        if self.disagg and self._prefill_slot_pages[i]:
+            # a fault mid-chunked-prefill also unwinds the prefill worker's
+            # pages (the hand-off never happened)
+            self.prefill_allocator.free(self._prefill_slot_pages[i])
+            self._prefill_slot_pages[i] = []
+            self.prefill_table_np[i, :] = 0
         self._prefilling.pop(i, None)
         if self.slots_req[i] is req:
             self.slots_req[i] = None
@@ -2148,6 +2469,41 @@ class Engine:
             if row and self.slots_req[i] is None \
                     and i not in self._prefilling:
                 raise RuntimeError(f"empty slot {i} still holds pages {row}")
+        if self.tiered:
+            self.host_pool.check_invariants()
+            # every host-resident index entry points at a live host page
+            # with a stored payload, and no host page is referenced twice —
+            # a page is live on exactly one tier
+            hids = self.prefix_index.host_ids()
+            if len(set(hids)) != len(hids):
+                raise RuntimeError(f"host page referenced by multiple "
+                                   f"prefix entries: {hids}")
+            for hid in hids:
+                if self.host_pool.refcount(hid) < 1:
+                    raise RuntimeError(f"prefix entry maps dead host "
+                                       f"page {hid}")
+                if not self.host_pool.has_payload(hid):
+                    raise RuntimeError(f"host page {hid} is live but holds "
+                                       f"no spilled payload")
+            if self.host_pool.in_use != len(hids):
+                raise RuntimeError(
+                    f"host pool holds {self.host_pool.in_use} live pages "
+                    f"but the index references {len(hids)}")
+        if self.disagg:
+            self.prefill_allocator.check_invariants()
+            for i in range(self.ecfg.slots):
+                prow = self._prefill_slot_pages[i]
+                table = self.prefill_table_np[i]
+                if list(table[:len(prow)]) != prow:
+                    raise RuntimeError(f"slot {i} prefill table "
+                                       f"{table[:len(prow)].tolist()} != "
+                                       f"prefill pages {prow}")
+                if np.any(table[len(prow):]):
+                    raise RuntimeError(f"slot {i} prefill table maps "
+                                       f"entries past its {len(prow)} pages")
+                if prow and i not in self._prefilling:
+                    raise RuntimeError(f"slot {i} holds prefill pages "
+                                       f"{prow} outside a chunked prefill")
 
     def step(self) -> int:
         """One engine iteration: refill free slots (and, in chunked mode,
@@ -2276,6 +2632,9 @@ class Engine:
                 if self.paged:
                     self.telemetry.gauge("pages_in_use",
                                          self.allocator.in_use)
+                if self.tiered:
+                    self.telemetry.gauge("host_pages_in_use",
+                                         self.host_pool.in_use)
                 if self._step_emitted:
                     # one histogram sample per decode iteration; the
                     # per-token interval divides the wall time by the
@@ -2442,11 +2801,28 @@ class Engine:
             (list(self.slots_req), list(self.queue),
              dict(self._prefilling)))
         prefix_entries = None
+        tiered_entries = None
         if self.prefix_cache:
-            prefix_entries = [
-                (k, e["page"],
-                 None if e.get("logits") is None else host(e["logits"]))
-                for k, e in self.prefix_index._entries.items()]
+            if self.tiered:
+                # tiered index entries live on one of two tiers; capture
+                # kind + payload per entry (host entries carry their spilled
+                # bytes) in index (= LRU) order
+                tiered_entries = []
+                for k, e in self.prefix_index._entries.items():
+                    lg = None if e.get("logits") is None \
+                        else host(e["logits"])
+                    if "page" in e:
+                        tiered_entries.append((k, "device", e["page"], lg))
+                    else:
+                        k_np, v_np = self.host_pool.load(e["host"])
+                        tiered_entries.append(
+                            (k, "host",
+                             (e["host"], k_np.copy(), v_np.copy()), lg))
+            else:
+                prefix_entries = [
+                    (k, e["page"],
+                     None if e.get("logits") is None else host(e["logits"]))
+                    for k, e in self.prefix_index._entries.items()]
         snap = EngineSnapshot(
             fingerprint=self.plan.fingerprint,
             tick=self._tick,
@@ -2478,7 +2854,20 @@ class Engine:
             prefix_entries=prefix_entries,
             enc_memory=host(self.enc_memory)
             if self.spec.needs_encoder_memory else None,
-            slot_used=list(self._slot_used))
+            slot_used=list(self._slot_used),
+            host_free=list(self.host_pool._free) if self.tiered else None,
+            host_ref=dict(self.host_pool._ref) if self.tiered else None,
+            tiered_entries=tiered_entries,
+            prefill_kv=jax.tree_util.tree_map(host, self.prefill_pool)
+            if self.disagg else None,
+            prefill_alloc_free=list(self.prefill_allocator._free)
+            if self.disagg else None,
+            prefill_alloc_ref=dict(self.prefill_allocator._ref)
+            if self.disagg else None,
+            prefill_slot_pages=[list(r) for r in self._prefill_slot_pages]
+            if self.disagg else None,
+            prefill_table=self.prefill_table_np.copy()
+            if self.disagg else None)
         self.trace.append({"event": "snapshot", "tick": self._tick,
                            "fingerprint": self.plan.fingerprint})
         return snap
@@ -2514,11 +2903,38 @@ class Engine:
                 self.prefix_index = PrefixIndex(
                     self.ecfg.page_size,
                     salt=f"{self.cfg.name}/{self.plan.fingerprint}")
-                for k, page, logits in snap.prefix_entries or []:
-                    self.prefix_index.register(k, page)
-                    if logits is not None:
-                        self.prefix_index.attach_logits(
-                            k, jnp.asarray(logits))
+                if self.tiered:
+                    # host pool first (exact free-list order for replay
+                    # determinism), then both entry kinds in LRU order
+                    self.host_pool = HostPagePool(self.host_pages)
+                    self.host_pool._free = list(snap.host_free)
+                    self.host_pool._ref = dict(snap.host_ref)
+                    for k, kind, payload, logits in snap.tiered_entries or []:
+                        if kind == "device":
+                            self.prefix_index.register(k, payload)
+                        else:
+                            hid, k_np, v_np = payload
+                            self.host_pool.store(hid, k_np.copy(),
+                                                 v_np.copy())
+                            self.prefix_index.insert_host(k, hid)
+                        if logits is not None:
+                            self.prefix_index.attach_logits(
+                                k, jnp.asarray(logits))
+                else:
+                    for k, page, logits in snap.prefix_entries or []:
+                        self.prefix_index.register(k, page)
+                        if logits is not None:
+                            self.prefix_index.attach_logits(
+                                k, jnp.asarray(logits))
+            if self.disagg:
+                self.prefill_pool = jax.tree_util.tree_map(
+                    jnp.asarray, snap.prefill_kv)
+                self.prefill_allocator = PagedKVAllocator(self.prefill_pages)
+                self.prefill_allocator._free = list(snap.prefill_alloc_free)
+                self.prefill_allocator._ref = dict(snap.prefill_alloc_ref)
+                self.prefill_table_np = snap.prefill_table.copy()
+                self._prefill_slot_pages = [list(r)
+                                            for r in snap.prefill_slot_pages]
         else:
             self.cache = jax.tree_util.tree_map(jnp.asarray, snap.kv)
         if self.spec.needs_encoder_memory and snap.enc_memory is not None:
@@ -2589,6 +3005,10 @@ class Engine:
         self.prefix_hit_tokens = 0
         self.prefix_reclaimed = 0
         self.cow_copies = 0
+        self.spilled = 0
+        self.paged_in = 0
+        self.kv_transfers = 0
+        self.kv_transfer_pages = 0
         self.rejected_queue_full = 0
         self.shed_deadline = 0
         self.faults_injected = 0
@@ -2671,6 +3091,15 @@ class Engine:
             out.cow_copies = self.cow_copies
             out.prefix_cached_pages = len(self.prefix_index)
             out.shared_pages = self.allocator.shared_pages
+        if self.tiered:
+            out.host_pages = self.host_pages
+            out.host_pages_in_use = self.host_pool.in_use
+            out.spilled = self.spilled
+            out.paged_in = self.paged_in
+        if self.disagg:
+            out.prefill_pool_pages = self.prefill_pages
+            out.kv_transfers = self.kv_transfers
+            out.kv_transfer_pages = self.kv_transfer_pages
         if self.spec_cfg is not None:
             out.spec_steps = self.spec_steps
             out.lookahead_k = self.spec_cfg.lookahead_k

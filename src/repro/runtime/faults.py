@@ -231,3 +231,21 @@ class EngineSnapshot:
     prefix_entries: Optional[List[Tuple[bytes, int, Optional[np.ndarray]]]]
     enc_memory: Optional[np.ndarray] = None
     slot_used: Optional[List[bool]] = None
+    # ---- tiered KV (EngineConfig.tiered_kv): the host tier rides along.
+    # tiered engines capture the prefix index as ``tiered_entries`` (ordered
+    # (key, kind, payload, logits) rows, kind "device" -> payload is the
+    # device page id, kind "host" -> payload is (host_id, k_np, v_np)) and
+    # set ``prefix_entries`` to None; host_free preserves the host pool's
+    # exact free-list order so restore is replay-deterministic.
+    host_free: Optional[List[int]] = None
+    host_ref: Optional[Dict[int, int]] = None
+    tiered_entries: Optional[List[Tuple[bytes, str, Any,
+                                        Optional[np.ndarray]]]] = None
+    # ---- disaggregated prefill/decode (EngineConfig.disaggregated): the
+    # prefill worker's pool + allocator + page-table mirror, so chunked
+    # prefills mid-hand-off resume bitwise.
+    prefill_kv: Any = None
+    prefill_alloc_free: Optional[List[int]] = None
+    prefill_alloc_ref: Optional[Dict[int, int]] = None
+    prefill_slot_pages: Optional[List[List[int]]] = None
+    prefill_table: Optional[np.ndarray] = None

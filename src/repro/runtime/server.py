@@ -34,6 +34,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                  scheduling: Optional[Dict[str, Any]] = None,
                  fault_tolerant: bool = False,
                  traced: bool = False,
+                 tiering: Optional[int] = None,
+                 disaggregated: bool = False,
                  verify: bool = False
                  ) -> LoweredPlan:
     """(config, shape, backend, mesh[, page geometry, spec pairing]) ->
@@ -56,7 +58,13 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
     fault-tolerant (``mm(fault_tolerant)`` + snapshot/restore MemOps), so
     FT-enabled engines fingerprint apart too. ``traced=True`` marks the
     program as instrumented (``mm(traced)`` + a ``upir.trace_emit`` op),
-    so telemetry-enabled engines fingerprint apart as well. ``verify=True``
+    so telemetry-enabled engines fingerprint apart as well.
+    ``tiering=N`` marks the paged pool as memory-tiered with an N-page host
+    pool (``mm(tiered(N))`` + device↔host ``upir.kv_transfer`` ops) and
+    ``disaggregated=True`` marks the prefill/decode pool split
+    (``mm(disaggregated)`` + prefill→decode ``upir.kv_transfer`` ops) —
+    both fingerprint, so tiered/disaggregated engines never share a plan
+    with single-pool ones. ``verify=True``
     runs the
     static verifier on the built program before lowering (one-time
     plan-build cost; raises ``repro.analysis.VerificationError`` on any
@@ -71,6 +79,8 @@ def serving_plan(cfg: ArchConfig, shape: ShapeCfg, *, backend: str = "jit",
                          scheduling=scheduling,
                          fault_tolerant=fault_tolerant,
                          traced=traced,
+                         tiering=tiering,
+                         disaggregated=disaggregated,
                          verify=verify)
     return cache.lowered_plan(prog, backend=backend, mesh_shape=mesh_shape,
                               trace=trace)

@@ -8,8 +8,9 @@ missing per-request observability as three host-side pieces behind one
 * **Lifecycle events** — every request produces an ordered event trace
   (``submitted -> admitted -> prefill_chunk*N -> first_token -> finished``,
   plus ``evicted / recycled / preempted / quarantined / retried / cow /
-  prefix_hit / shed / failed`` from the paging, scheduling, fault, and
-  speculative layers), stamped with monotonic host timestamps
+  prefix_hit / shed / failed / spilled / paged_in / kv_transfer`` from the
+  paging, scheduling, fault, speculative, and tiered-KV layers), stamped
+  with monotonic host timestamps
   (``time.perf_counter``) into a bounded ring buffer — steady-state memory is
   O(``max_events``), and overflow is counted, never raised.
 * **Metric registry** — fixed-bucket latency histograms (TTFT, inter-token
@@ -78,6 +79,9 @@ EVENT_NAMES: Tuple[str, ...] = (
     "prefix_hit",     # engine._admit_paged: prompt prefix pages aliased
     "shed",           # engine._shed_deadlines: dropped before admission
     "draft_prefill",  # speculative.prefill_slot: draft cache built
+    "spilled",        # engine._reclaim_pages: cold prefix page -> host tier
+    "paged_in",       # engine._prefix_probe: host page uploaded on a hit
+    "kv_transfer",    # engine._admit_paged/_prefill_tick: prefill->decode
 )
 
 
@@ -275,14 +279,16 @@ class Telemetry:
         (a request's prefill and decode phases appear as complete ``X``
         spans on the slot that served it), ``tid`` slots is the admission
         queue (one ``queued`` span per submission->admission interval),
-        slots+1 the allocator (evict/CoW/prefix-hit instants), slots+2 the
-        scheduler (preempt/shed/quarantine/retry instants). Timestamps are
+        slots+1 the allocator (evict/CoW/prefix-hit/spill/page-in/transfer
+        instants), slots+2 the scheduler (preempt/shed/quarantine/retry
+        instants), and — for tiered engines only — slots+3 a "host pool"
+        counter track stamping host-tier occupancy. Timestamps are
         microseconds relative to the first event; events are sorted per
         track, so ``ts`` is monotone within every ``tid`` by construction
         (schema-checked by the BENCH_9 gate).
         """
         S = self.slots
-        q_tid, alloc_tid, sched_tid = S, S + 1, S + 2
+        q_tid, alloc_tid, sched_tid, host_tid = S, S + 1, S + 2, S + 3
         t0 = self._t0 if self._t0 is not None else 0.0
 
         def us(ts: float) -> float:
@@ -292,6 +298,10 @@ class Telemetry:
         track_names[q_tid] = "queue"
         track_names[alloc_tid] = "allocator"
         track_names[sched_tid] = "scheduler"
+        # the host-pool counter track exists only for tiered engines —
+        # spill/page-in events carry the post-op host_in_use occupancy
+        if any(e.name in ("spilled", "paged_in") for e in self.events):
+            track_names[host_tid] = "host pool"
         out: List[Dict[str, Any]] = [
             {"name": "process_name", "ph": "M", "pid": 1,
              "args": {"name": "repro-engine"}}]
@@ -304,6 +314,8 @@ class Telemetry:
             "recycled": sched_tid, "preempted": sched_tid, "shed": sched_tid,
             "quarantined": sched_tid, "retried": sched_tid,
             "rejected": sched_tid, "draft_prefill": sched_tid,
+            "spilled": alloc_tid, "paged_in": alloc_tid,
+            "kv_transfer": alloc_tid,
         }
         spans: List[Dict[str, Any]] = []
         instants: List[Dict[str, Any]] = []
@@ -357,6 +369,15 @@ class Telemetry:
                     "name": n, "ph": "i", "s": "t", "pid": 1,
                     "tid": instant_track[n], "ts": us(e.ts),
                     "args": {"rid": e.rid, **dict(e.data)}})
+            # host-pool occupancy counter track ("C" phase): every spill
+            # and page-in stamps the post-op host_in_use value
+            if n in ("spilled", "paged_in"):
+                occ = dict(e.data).get("host_in_use")
+                if occ is not None:
+                    instants.append({
+                        "name": "host_pages", "ph": "C", "pid": 1,
+                        "tid": host_tid, "ts": us(e.ts),
+                        "args": {"in_use": int(occ)}})
             # evicted / retried requests re-enter the queue at the front
             if n == "evicted":
                 q_open[e.rid] = e.ts

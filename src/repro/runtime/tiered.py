@@ -1,0 +1,149 @@
+"""Tiered KV: a ref-counted host-memory page pool behind the device pool.
+
+``HostPagePool`` is the host tier of the two-tier KV cache. The device
+tier is the paged pool managed by ``PagedKVAllocator`` (``engine.py``);
+this pool holds *spilled* prefix-cache pages — cold pages the device-side
+reclaim would otherwise drop — as exact numpy copies of the device page
+bytes, keyed by host page ids. Paging a spilled page back in is a pure
+memcpy (host→device upload of the stored bytes), so a tiered engine's
+token streams are bitwise identical to an untiered one: spill/page-in is
+movement, never recompute.
+
+The id/refcount discipline deliberately mirrors ``PagedKVAllocator`` so
+``check_invariants`` composes: ids are 1-based (0 is reserved to mirror
+the device NULL_PAGE convention, though the host tier never materializes
+it), the free list is LIFO off the low end, and every live id holds a
+positive refcount. On top of the allocator bookkeeping, the host tier
+stores the actual page payloads: ``store``/``load`` move the per-page
+``[L, PS, KV, hd]`` K and V arrays, and the invariant "payload exists for
+exactly the live ids" is what makes *page never live on both tiers*
+checkable — the engine asserts a prefix-cache entry is either a device
+page id or a host id with a payload, never both.
+
+In UPIR program text the spill and page-in are first-class
+``upir.kv_transfer`` MemOps (``dst_pool(host)`` / ``src_pool(host)``)
+on a cache annotated ``mm(tiered(host_pages))``; the verifier's LT010 /
+SC009-SC011 contracts pin the op/annotation pairing and the
+page-in-before-first-read ordering this runtime layer implements.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class HostPagePool:
+    """Ref-counted host-memory page pool (the spill tier).
+
+    Same discipline as ``PagedKVAllocator``: ``alloc`` is all-or-nothing,
+    ``share`` bumps refcounts of live pages, ``free`` decrements and
+    reclaims at zero — plus payload storage (``store``/``load``) for the
+    spilled K/V bytes, dropped when the last reference dies.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = num_pages
+        # LIFO free list, low ids first (pop from the end); id 0 reserved
+        self._free: List[int] = list(range(num_pages, 0, -1))
+        self._ref: Dict[int, int] = {}
+        self._data: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    # ------------------------------------------------------------ alloc
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """Pop ``n`` free host pages, or None if the tier is full
+        (all-or-nothing, like the device allocator)."""
+        if n < 0:
+            raise ValueError(f"cannot alloc {n} pages")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
+        return pages
+
+    def share(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._ref:
+                raise ValueError(f"share of non-live host page {p}")
+            self._ref[p] += 1
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._ref:
+                raise ValueError(f"free of non-live host page {p} "
+                                 f"(double-free?)")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._data.pop(p, None)
+                self._free.append(p)
+
+    # ---------------------------------------------------------- payload
+
+    def store(self, page: int, k: np.ndarray, v: np.ndarray) -> None:
+        """Attach the spilled page bytes (each ``[L, PS, KV, hd]``) to a
+        live host page id. The arrays are kept as-is — callers hand over
+        freshly device→host-copied buffers, so no defensive copy here."""
+        if page not in self._ref:
+            raise ValueError(f"store into non-live host page {page}")
+        self._data[page] = (k, v)
+
+    def load(self, page: int) -> Tuple[np.ndarray, np.ndarray]:
+        """The (k, v) payload of a live host page (page-in source)."""
+        if page not in self._ref:
+            raise ValueError(f"load of non-live host page {page}")
+        if page not in self._data:
+            raise ValueError(f"host page {page} is live but has no stored "
+                             f"payload")
+        return self._data[page]
+
+    def has_payload(self, page: int) -> bool:
+        return page in self._data
+
+    # ------------------------------------------------------- inspection
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._ref)
+
+    def check_invariants(self) -> None:
+        """Allocator bookkeeping + payload discipline. Raises on the
+        first violation (same contract as PagedKVAllocator)."""
+        free = self._free
+        if len(set(free)) != len(free):
+            raise AssertionError(f"host free list has duplicates: {free}")
+        live = set(self._ref)
+        for p in list(live) + free:
+            if not (1 <= p <= self.num_pages):
+                raise AssertionError(f"host page id {p} out of range "
+                                     f"1..{self.num_pages}")
+        overlap = live & set(free)
+        if overlap:
+            raise AssertionError(f"host pages both free and live: "
+                                 f"{sorted(overlap)}")
+        for p, r in self._ref.items():
+            if r < 1:
+                raise AssertionError(f"live host page {p} has refcount {r}")
+        if len(free) + len(live) != self.num_pages:
+            raise AssertionError(
+                f"host pages lost: {len(free)} free + {len(live)} live "
+                f"!= {self.num_pages}")
+        # payload exists for exactly the live, stored pages; a live page
+        # with no payload is legal only transiently inside the engine's
+        # spill (alloc -> store is one critical section there), so the
+        # pool-level invariant is: no payload for a dead page
+        dangling = set(self._data) - live
+        if dangling:
+            raise AssertionError(f"host payload for non-live pages: "
+                                 f"{sorted(dangling)}")

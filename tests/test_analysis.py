@@ -55,6 +55,8 @@ MODES = {
     "ft-dense": dict(fault_tolerant=True),
     "spec": dict(spec_decode=("draft", 4)),
     "sched": dict(scheduling={"policy": "priority", "preempt": True}),
+    "tiered": dict(page_geometry=GEOM, prefix_sharing=True, tiering=8),
+    "disagg": dict(page_geometry=GEOM, disaggregated=True),
 }
 
 
@@ -337,6 +339,46 @@ def test_sc008_traced_annotation_without_trace_emit():
     b.symbol("cache", (8,), "f32")
     b.data("cache", traced=True)
     assert "SC008" in codes(analyze(b.build()))
+
+
+def test_sc009_kv_transfer_without_tier_annotation():
+    b = _b()
+    b.symbol("cache", (8,), "f32")
+    b.data("cache")
+    b.kv_transfer("cache", src_pool="device", dst_pool="host")
+    assert "SC009" in codes(analyze(b.build()))
+
+
+def test_sc010_tier_annotation_without_kv_transfer():
+    b = _b()
+    b.symbol("cache", (8,), "f32")
+    b.data("cache", tiered=8)
+    assert "SC010" in codes(analyze(b.build()))
+    b2 = _b()
+    b2.symbol("cache", (8,), "f32")
+    b2.data("cache", disaggregated=True)
+    assert "SC010" in codes(analyze(b2.build()))
+
+
+def test_sc011_tiered_page_in_after_first_read():
+    # spill only, no page-in: the kernel reads the tiered datum with no
+    # host→device transfer anywhere before it
+    b = _b()
+    b.symbol("cache", (8,), "f32")
+    b.data("cache", tiered=8)
+    b.kv_transfer("cache", src_pool="device", dst_pool="host")
+    b.kernel("decode_step", ("cache",))
+    assert "SC011" in codes(analyze(b.build()))
+
+
+def test_lt010_page_in_without_spill():
+    b = _b()
+    b.symbol("pool", (8,), "f32")
+    b.data("pool", tiered=4)
+    b.alloc("pool")
+    b.kv_transfer("pool", src_pool="host", dst_pool="device")
+    b.dealloc("pool")
+    assert "LT010" in codes(analyze(b.build()))
 
 
 def test_every_error_code_is_demonstrated_above():

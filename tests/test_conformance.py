@@ -1,0 +1,197 @@
+"""Replay-conformance matrix: every engine mode × sampling × recovery path.
+
+The serving stack's core promise is that *every* engine mode streams
+bitwise identically to the sequential one-request-at-a-time baseline —
+through pool-pressure eviction replay, through snapshot/restore, and
+through fault quarantine + replay. This matrix pins that promise cell by
+cell: {dense, paged, chunked, prefix, spec, tiered, disagg} ×
+{greedy, sampled+penalties} × {eviction replay, snapshot/restore,
+quarantine recovery}, each compared token-for-token against one shared
+``serve_sequential`` reference per sampling leg.
+
+Cells a mode cannot express are skipped with the reason in the id: dense
+has no page pool to pressure, speculative engines refuse snapshot (the
+draft cache is not captured) and reject penalties at submit validation.
+Everything else must agree exactly — a mode that only matches the baseline
+on the happy path is not conformant.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.lower import PlanCache
+from repro.models import api
+from repro.runtime.engine import (Engine, EngineConfig, RequestSpec,
+                                  serve_sequential)
+from repro.runtime.faults import FaultPlan, FaultSpec
+from repro.runtime.sampling import SamplingParams
+from repro.runtime.speculative import SpecConfig
+
+CFG = smoke_config("tinyllama-1.1b")
+DRAFT_CFG = dataclasses.replace(CFG, name=CFG.name + "-draft")
+BUCKET = 8
+TOKENS = 10
+MAX_SEQ = 24
+CACHE = PlanCache()     # shared: equal-config engines reuse every artifact
+LIVE = ("queued", "prefilling", "active")
+
+PAGED = dict(kv_layout="paged", page_size=4, num_pages=16)
+
+# mode -> EngineConfig kwargs ("spec" adds SpecConfig + draft params in mk)
+MODES = {
+    "dense": dict(),
+    "paged": dict(PAGED),
+    "chunked": dict(PAGED, prefill_chunk=4),
+    "prefix": dict(PAGED, prefix_cache=True),
+    "spec": dict(),
+    "tiered": dict(PAGED, prefix_cache=True, tiered_kv=True, host_pages=8),
+    "disagg": dict(PAGED, disaggregated=True),
+}
+
+# sampled leg: the full replay surface — temperature + top-k + top-p +
+# both penalties (spec drops the penalties: submit validation rejects the
+# combination, by design)
+SAMPLED = SamplingParams(temperature=0.9, top_k=20, top_p=0.9, seed=11,
+                         presence_penalty=0.3, frequency_penalty=0.1)
+SAMPLED_SPEC = SamplingParams(temperature=0.9, top_k=20, top_p=0.9, seed=11)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return api.init_params(CFG, jax.random.key(0))
+
+
+def mk(params, mode, **kw):
+    base = dict(MODES[mode])
+    base.update(kw)
+    draft = None
+    if mode == "spec":
+        base["spec_decode"] = SpecConfig(draft_config=DRAFT_CFG,
+                                         lookahead_k=3)
+        draft = params
+    return Engine(CFG, EngineConfig(slots=2, prompt_buckets=(BUCKET,),
+                                    max_seq=MAX_SEQ, **base),
+                  params=params, plan_cache=CACHE, draft_params=draft)
+
+
+def specs_for(mode, leg):
+    """Four requests, two sharing a prompt (so prefix/tiered modes
+    exercise hits and spills, and dense modes just serve four)."""
+    sp = None if leg == "greedy" else (
+        SAMPLED_SPEC if mode == "spec" else SAMPLED)
+    rng = np.random.default_rng(42)
+    shared = rng.integers(0, CFG.vocab, size=BUCKET).tolist()
+    others = [rng.integers(0, CFG.vocab, size=BUCKET).tolist()
+              for _ in range(2)]
+    return [RequestSpec(prompt=p, max_new_tokens=TOKENS, sampling=sp)
+            for p in (shared, shared, *others)]
+
+
+_REF = {}   # (leg, spec?) -> rid -> tokens; the baseline is mode-blind
+
+
+def reference(params, mode, leg):
+    """The sequential baseline for this cell's workload — rid = i + 1,
+    exactly what a fresh engine assigns the same submission order. Memoized
+    per sampling leg: the baseline has no modes, so every cell in a leg
+    shares one reference run."""
+    key = (leg, mode == "spec")
+    if key not in _REF:
+        seq = serve_sequential(CFG, params, specs_for(mode, leg),
+                               max_seq=MAX_SEQ, prompt_buckets=(BUCKET,))
+        _REF[key] = seq["tokens"]
+    return _REF[key]
+
+
+def drain(engine, handles, budget=400):
+    steps = 0
+    while any(h.state in LIVE for h in handles):
+        assert steps < budget, "engine failed to drain (hang)"
+        engine.step()
+        steps += 1
+    return steps
+
+
+def assert_conformant(engine, handles, ref):
+    for i, h in enumerate(handles):
+        assert h.state == "done", (h.rid, h.state)
+        assert engine.finalize_request(h) == ref[i + 1], h.rid
+    engine.check_invariants()
+
+
+MODE_IDS = list(MODES)
+LEGS = ("greedy", "sampled")
+
+
+# ------------------------------------------------------- eviction replay
+
+
+@pytest.mark.parametrize("leg", LEGS)
+@pytest.mark.parametrize("mode", MODE_IDS)
+def test_eviction_replay_matches_sequential(params, mode, leg):
+    """A pool too small for the workload: decode pressure must evict (or
+    reclaim/spill) and the evicted streams must replay bitwise."""
+    if mode == "dense":
+        pytest.skip("dense KV has no page pool to pressure")
+    if mode == "spec":
+        pytest.skip("speculative pool-pressure degradation is pinned in "
+                    "test_speculative; it changes stepping, not streams")
+    eng = mk(params, mode, num_pages=8, debug_checks=True)
+    hs = [eng.submit(s) for s in specs_for(mode, leg)]
+    drain(eng, hs)
+    st = eng.stats()
+    pressure = sum(st.get(k, 0)
+                   for k in ("evictions", "prefix_reclaimed", "spilled"))
+    assert pressure >= 1, "tight pool never pressured: cell is vacuous"
+    assert_conformant(eng, hs, reference(params, mode, leg))
+
+
+# ------------------------------------------------------ snapshot / restore
+
+
+@pytest.mark.parametrize("leg", LEGS)
+@pytest.mark.parametrize("mode", MODE_IDS)
+def test_snapshot_restore_matches_sequential(params, mode, leg):
+    """Crash mid-flight after a few steps: a twin engine restored from the
+    snapshot must finish every stream exactly as the baseline would."""
+    if mode == "spec":
+        pytest.skip("snapshot refuses speculative engines by contract")
+    a = mk(params, mode)
+    ha = [a.submit(s) for s in specs_for(mode, leg)]
+    for _ in range(3):
+        a.step()
+    snap = a.snapshot()
+    b = mk(params, mode)
+    b.restore(snap)
+    hb = [r for r in list(b.slots_req) + list(b.queue)
+          + list(b._prefilling.values()) if r is not None]
+    assert hb, "snapshot captured no live requests"
+    drain(b, hb)
+    ref = reference(params, mode, leg)
+    for h in hb:
+        assert h.state == "done", (h.rid, h.state)
+        assert b.finalize_request(h) == ref[h.rid], h.rid
+    b.check_invariants()
+
+
+# ---------------------------------------------------- quarantine recovery
+
+
+@pytest.mark.parametrize("leg", LEGS)
+@pytest.mark.parametrize("mode", MODE_IDS)
+def test_quarantine_recovery_matches_sequential(params, mode, leg):
+    """An injected decode-boundary exception: the hit slot is quarantined,
+    the request replays, and the recovered stream is bitwise the
+    baseline's. Speculative engines raise at their own decode boundary —
+    the verify step — so the fault site follows the mode."""
+    site = "verify" if mode == "spec" else "decode"
+    plan = FaultPlan(faults=(FaultSpec(kind="exception", step=2,
+                                       site=site),))
+    eng = mk(params, mode, fault_plan=plan, debug_checks=True)
+    hs = [eng.submit(s) for s in specs_for(mode, leg)]
+    drain(eng, hs)
+    assert eng.stats()["quarantines"] >= 1
+    assert_conformant(eng, hs, reference(params, mode, leg))

@@ -158,6 +158,37 @@ def test_prefix_index_chain_keys():
     assert idx.keys_for(other)[2] != keys[2]
 
 
+def test_prefix_index_cross_bucket_chain_keys():
+    """``real_len`` makes hashing bucket-independent: the boundary chunk
+    digests only its real bytes, so equal prompts padded into different
+    buckets share their chain prefix, while a real trailing ``0`` token
+    can never collide with padding (different byte counts)."""
+    idx = PrefixIndex(4, salt="s")
+    prompt = np.arange(1, 7, dtype=np.int32)       # 6 real tokens
+    small = np.zeros(8, np.int32)
+    small[:6] = prompt
+    big = np.zeros(16, np.int32)
+    big[:6] = prompt
+    ks = idx.keys_for(small, real_len=6)
+    kb = idx.keys_for(big, real_len=6)
+    # same real prompt, different buckets: the small bucket's whole chain
+    # is a prefix of the big bucket's — a short prompt's registered pages
+    # seed the same prompt admitted into a bigger bucket
+    assert kb[:len(ks)] == ks
+    # all-padding pages past the boundary stay chained to the real prefix:
+    # flipping one real token changes every key, padding pages included
+    other = big.copy()
+    other[1] = 99
+    ko = idx.keys_for(other, real_len=6)
+    assert all(a != b for a, b in zip(ko, kb))
+    # a *real* trailing 0 digests one more token than padding does — the
+    # padded bytes are identical, the real lengths are not (regression:
+    # the padded-bytes digest collided these)
+    assert idx.keys_for(big, real_len=7)[1] != kb[1]
+    # no real_len (or a page-aligned one) reproduces the padded digest
+    assert idx.keys_for(big) == idx.keys_for(big, real_len=16)
+
+
 # ---------------------------------------------- stream equality (the gate)
 
 

@@ -1,0 +1,252 @@
+"""Two-tier KV allocator discipline: HostPagePool + spill/page-in properties.
+
+Unit tests pin the ``HostPagePool`` contract (1-based ids, all-or-nothing
+alloc, refcount lifecycle, payload-for-live-pages-only, loud misuse), and
+property tests churn random operation sequences through the pool — and
+through the full two-tier spill/page-in protocol the engine runs between
+``PagedKVAllocator``, ``PrefixIndex`` and the host tier — checking after
+every step that both allocators' invariants hold, that an index entry is
+live on exactly one tier, and that a spill → page-in round trip returns
+the exact page bytes (movement, never recompute).
+
+Property tests use the ``_hyp`` shim: real hypothesis when installed, a
+seeded deterministic fallback on the bare tier-1 container.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.runtime.engine import PagedKVAllocator, PrefixIndex
+from repro.runtime.tiered import HostPagePool
+
+
+def _payload(rng, shape=(2, 4, 2, 3)):
+    k = rng.standard_normal(shape).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    return k, v
+
+
+# ----------------------------------------------------------------- unit
+
+
+def test_ctor_rejects_empty_pool():
+    with pytest.raises(ValueError):
+        HostPagePool(0)
+
+
+def test_ids_are_one_based_and_low_first():
+    pool = HostPagePool(4)
+    assert pool.alloc(2) == [1, 2]       # id 0 reserved, LIFO off the low end
+    assert pool.available == 2
+    assert pool.in_use == 2
+
+
+def test_alloc_is_all_or_nothing():
+    pool = HostPagePool(3)
+    assert pool.alloc(2) == [1, 2]
+    assert pool.alloc(2) is None         # only 1 free: nothing handed out
+    assert pool.available == 1
+    assert pool.alloc(1) == [3]
+    pool.check_invariants()
+
+
+def test_refcount_lifecycle_and_payload_drop():
+    pool = HostPagePool(2)
+    rng = np.random.default_rng(0)
+    (p,) = pool.alloc(1)
+    k, v = _payload(rng)
+    pool.store(p, k, v)
+    pool.share([p])
+    assert pool.refcount(p) == 2
+    pool.free([p])                       # one ref left: payload survives
+    assert pool.has_payload(p)
+    pool.free([p])                       # last ref: recycled, payload dropped
+    assert pool.refcount(p) == 0
+    assert not pool.has_payload(p)
+    assert pool.available == 2
+    # the recycled id is reusable and starts clean
+    (q,) = pool.alloc(1)
+    assert not pool.has_payload(q)
+    pool.check_invariants()
+
+
+def test_store_load_round_trip_is_exact():
+    pool = HostPagePool(1)
+    rng = np.random.default_rng(1)
+    (p,) = pool.alloc(1)
+    k, v = _payload(rng)
+    pool.store(p, k.copy(), v.copy())
+    k2, v2 = pool.load(p)
+    np.testing.assert_array_equal(k, k2)
+    np.testing.assert_array_equal(v, v2)
+
+
+def test_misuse_is_loud():
+    pool = HostPagePool(2)
+    rng = np.random.default_rng(2)
+    with pytest.raises(ValueError):
+        pool.free([1])                   # never allocated
+    with pytest.raises(ValueError):
+        pool.share([1])
+    with pytest.raises(ValueError):
+        pool.store(1, *_payload(rng))
+    with pytest.raises(ValueError):
+        pool.load(1)
+    (p,) = pool.alloc(1)
+    with pytest.raises(ValueError):
+        pool.load(p)                     # live but no payload stored yet
+    pool.free([p])
+    with pytest.raises(ValueError):
+        pool.free([p])                   # double free
+    pool.check_invariants()
+
+
+def test_invariant_checker_catches_corruption():
+    pool = HostPagePool(2)
+    pool.alloc(1)
+    pool._free.append(1)                 # page 1 both free and live
+    with pytest.raises(AssertionError):
+        pool.check_invariants()
+
+
+# ------------------------------------------------------------- properties
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.lists(st.integers(min_value=0, max_value=3),
+                min_size=1, max_size=60))
+def test_random_churn_preserves_pool_invariants(num_pages, ops):
+    """Random alloc/share/free/store churn: the pool's bookkeeping
+    invariants hold after every operation, and a payload only ever exists
+    for a live page."""
+    pool = HostPagePool(num_pages)
+    rng = np.random.default_rng(num_pages)
+    live = []                            # our model: one entry per reference
+    for op in ops:
+        if op == 0:                      # alloc
+            got = pool.alloc(1)
+            if got is None:
+                assert pool.available == 0
+            else:
+                live.append(got[0])
+        elif op == 1 and live:           # share a random live page
+            p = live[rng.integers(len(live))]
+            pool.share([p])
+            live.append(p)
+        elif op == 2 and live:           # drop one reference
+            p = live.pop(rng.integers(len(live)))
+            pool.free([p])
+        elif op == 3 and live:           # (re)store a payload
+            p = live[rng.integers(len(live))]
+            pool.store(p, *_payload(rng))
+        pool.check_invariants()
+        assert pool.in_use == len(set(live))
+        assert pool.available + pool.in_use == num_pages
+        for p in set(live):
+            assert pool.refcount(p) == live.count(p)
+    # model teardown: releasing every reference empties the pool
+    for p in live:
+        pool.free([p])
+    assert pool.in_use == 0 and pool.available == num_pages
+    pool.check_invariants()
+
+
+@st.composite
+def _tier_script(draw):
+    """A random two-tier session: pool sizes plus a spill/page-in/register
+    op sequence."""
+    dev_pages = draw(st.integers(min_value=2, max_value=6))
+    host_pages = draw(st.integers(min_value=1, max_value=4))
+    ops = draw(st.lists(st.integers(min_value=0, max_value=2),
+                        min_size=1, max_size=40))
+    return dev_pages, host_pages, ops
+
+
+@settings(max_examples=25, deadline=None)
+@given(_tier_script())
+def test_spill_page_in_protocol_keeps_entries_on_one_tier(script):
+    """Drive the engine's spill/page-in protocol over random schedules:
+    register device entries, spill cold ones to the host tier, page hot
+    ones back in. After every step each index entry is resident on exactly
+    one tier, both allocators validate, the host pool holds exactly the
+    host-resident entries, and a round-tripped page's bytes are the ones
+    that were spilled."""
+    dev_pages, host_pages, ops = script
+    alloc = PagedKVAllocator(dev_pages)
+    host = HostPagePool(host_pages)
+    index = PrefixIndex(page_size=4, salt="test")
+    rng = np.random.default_rng(dev_pages * 8 + host_pages)
+    dev_bytes = {}                       # device page -> its (k, v) bytes
+    spilled_bytes = {}                   # chain key -> bytes at spill time
+    n_keys = 0
+
+    def check():
+        alloc.check_invariants()
+        host.check_invariants()
+        hids = index.host_ids()
+        assert len(hids) == len(set(hids)), "host page aliased by two keys"
+        assert host.in_use == len(hids)
+        for hid in hids:
+            assert host.refcount(hid) == 1 and host.has_payload(hid)
+        for e in index._entries.values():
+            assert ("page" in e) != ("host" in e), \
+                "entry on both tiers (or neither)"
+
+    for op in ops:
+        if op == 0:                      # register a fresh device entry
+            got = alloc.alloc(1)
+            if got is not None:
+                key = b"key-%d" % n_keys
+                n_keys += 1
+                index.register(key, got[0])
+                dev_bytes[got[0]] = _payload(rng)
+        elif op == 1:                    # spill the LRU refcount-1 entry
+            popped = index.pop_spillable(alloc)
+            if popped is not None:
+                key, entry = popped
+                hid = host.alloc(1)
+                if hid is None:          # host tier full: drop (untiered
+                    alloc.free([entry["page"]])       # fallback)
+                    dev_bytes.pop(entry["page"], None)
+                else:
+                    k, v = dev_bytes.pop(entry["page"])
+                    host.store(hid[0], k, v)
+                    index.insert_host(key, hid[0])
+                    spilled_bytes[key] = (k, v)
+                    alloc.free([entry["page"]])
+        elif op == 2:                    # page a host entry back in
+            hids = index.host_ids()
+            if hids:
+                key = next(k for k, e in index._entries.items()
+                           if e.get("host") == hids[0])
+                got = alloc.alloc(1)
+                if got is not None:
+                    k, v = host.load(hids[0])
+                    k0, v0 = spilled_bytes.pop(key)
+                    np.testing.assert_array_equal(k, k0)
+                    np.testing.assert_array_equal(v, v0)
+                    index.commit_page_in(key, got[0])
+                    host.free([hids[0]])
+                    dev_bytes[got[0]] = (k, v)
+        check()
+
+    # drain: page-ins for everything still on the host tier must round-trip
+    for hid in list(index.host_ids()):
+        key = next(k for k, e in index._entries.items()
+                   if e.get("host") == hid)
+        k, v = host.load(hid)
+        k0, v0 = spilled_bytes.pop(key)
+        np.testing.assert_array_equal(k, k0)
+        np.testing.assert_array_equal(v, v0)
+        got = alloc.alloc(1)
+        if got is None:                  # device full: free a cached page
+            page = index.pop_reclaimable(alloc)
+            assert page is not None, "every device page pinned by the index?"
+            alloc.free([page])
+            dev_bytes.pop(page, None)
+            got = alloc.alloc(1)
+        index.commit_page_in(key, got[0])
+        host.free([hid])
+    assert host.in_use == 0 and not index.host_ids()
+    check()
